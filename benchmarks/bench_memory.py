@@ -1,0 +1,61 @@
+"""Fig. 1b — training-memory overhead vs memory size N.
+
+Measures the BPTT residual footprint over a T=100-step unroll via XLA's
+compiled memory analysis (temp bytes), comparing SAM's sparse-rollback
+unroll (O(T·K·W), flat in N) against the NTM's naive scan (O(T·N·W))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.core import dense as dense_lib
+from repro.core import sam as sam_lib
+from repro.core.bptt import sam_unroll_sparse_bptt
+from repro.core.types import ControllerConfig, MemoryConfig
+
+CTL = ControllerConfig(input_size=10, hidden_size=100, output_size=8)
+
+
+def _temp_bytes(loss_fn, params):
+    lowered = jax.jit(jax.grad(loss_fn)).lower(params)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    return int(getattr(ma, "temp_size_in_bytes", 0))
+
+
+def run(sizes=(256, 1024, 4096, 16384, 65536), T=100, B=1):
+    out = {}
+    for n in sizes:
+        cfg = sam_lib.SAMConfig(
+            MemoryConfig(num_slots=n, word_size=32, num_heads=4, k=4), CTL)
+        key = jax.random.PRNGKey(0)
+        params = sam_lib.init_params(key, cfg)
+        state = sam_lib.init_state(B, cfg)
+        xs = jnp.zeros((T, B, 10))
+        b = _temp_bytes(
+            lambda p: (sam_unroll_sparse_bptt(p, cfg, state, xs)[1] ** 2)
+            .sum(), params)
+        out[("sam", n)] = b
+        row(f"fig1b_sam_N{n}", 0.0, f"temp_bytes={b}")
+    for n in sizes:
+        if n > 16384:
+            continue                       # NTM 64k/T=100 compiles > minutes
+        cfg = dense_lib.DenseConfig(
+            MemoryConfig(num_slots=n, word_size=32, num_heads=4, k=4), CTL,
+            model="ntm")
+        key = jax.random.PRNGKey(0)
+        params = dense_lib.init_params(key, cfg)
+        state = dense_lib.init_state(B, cfg)
+        xs = jnp.zeros((T, B, 10))
+        b = _temp_bytes(
+            lambda p: (dense_lib.dense_unroll(p, cfg, state, xs)[1] ** 2)
+            .sum(), params)
+        out[("ntm", n)] = b
+        ratio = b / max(out[("sam", n)], 1)
+        row(f"fig1b_ntm_N{n}", 0.0, f"temp_bytes={b};ratio_vs_sam={ratio:.0f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Fig. 7 — DNC vs SDNC speed and memory vs N (the quadratic link matrix is
+the dense DNC's bottleneck; the SDNC's sparse N_t/P_t stay O(N·K_L))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import dnc as dnc_lib
+from repro.core.types import ControllerConfig, MemoryConfig
+
+CTL = ControllerConfig(input_size=10, hidden_size=64, output_size=8)
+
+
+def _fwd_bwd(sparse, n, T=10, B=2):
+    cfg = dnc_lib.DNCConfig(
+        MemoryConfig(num_slots=n, word_size=32, num_heads=2, k=4), CTL,
+        sparse=sparse)
+    key = jax.random.PRNGKey(0)
+    params = dnc_lib.init_params(key, cfg)
+    state = dnc_lib.init_state(B, cfg)
+    xs = jax.random.normal(key, (T, B, 10))
+
+    @jax.jit
+    def fwd_bwd(p):
+        return jax.grad(
+            lambda p: (dnc_lib.dnc_unroll(p, cfg, state, xs)[1] ** 2).sum())(p)
+
+    def temp_bytes():
+        c = jax.jit(jax.grad(
+            lambda p: (dnc_lib.dnc_unroll(p, cfg, state, xs)[1] ** 2).sum()
+        )).lower(params).compile()
+        return int(getattr(c.memory_analysis(), "temp_size_in_bytes", 0))
+
+    return (lambda: fwd_bwd(params)), temp_bytes
+
+
+def run(sizes=(256, 512, 1024, 2048)):
+    results = {}
+    for n in sizes:
+        f, tb = _fwd_bwd(True, n)
+        us_s = timed(f)
+        b_s = tb()
+        row(f"fig7_sdnc_N{n}", us_s, f"temp_bytes={b_s}")
+        results[("sdnc", n)] = (us_s, b_s)
+    for n in sizes:
+        if n > 1024:
+            continue                  # dense link matrix O(N²): cap CPU time
+        f, tb = _fwd_bwd(False, n)
+        us_d = timed(f)
+        b_d = tb()
+        us_s, b_s = results[("sdnc", n)]
+        row(f"fig7_dnc_N{n}", us_d,
+            f"temp_bytes={b_d};speedup={us_d / us_s:.1f}x;"
+            f"mem_ratio={b_d / max(b_s, 1):.1f}x")
+        results[("dnc", n)] = (us_d, b_d)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Fig. 1a — wall-clock of one forward+backward pass vs memory size N.
+
+SAM (sparse reads/writes + sparse-rollback BPTT) vs DAM and NTM (dense).
+On CPU the absolute numbers differ from the paper's Torch7 desktop, but the
+scaling story is the figure's claim: SAM per-step cost is ~flat in N, dense
+models grow linearly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import dense as dense_lib
+from repro.core import sam as sam_lib
+from repro.core.bptt import sam_unroll_sparse_bptt
+from repro.core.types import ControllerConfig, MemoryConfig
+
+CTL = ControllerConfig(input_size=10, hidden_size=100, output_size=8)
+
+
+def _sam_fwd_bwd(n, T=10, B=8):
+    cfg = sam_lib.SAMConfig(
+        MemoryConfig(num_slots=n, word_size=32, num_heads=4, k=4), CTL)
+    key = jax.random.PRNGKey(0)
+    params = sam_lib.init_params(key, cfg)
+    state = sam_lib.init_state(B, cfg)
+    xs = jax.random.normal(key, (T, B, 10))
+
+    @jax.jit
+    def fwd_bwd(p):
+        return jax.grad(
+            lambda p: (sam_unroll_sparse_bptt(p, cfg, state, xs)[1] ** 2)
+            .sum())(p)
+
+    return lambda: fwd_bwd(params)
+
+
+def _dense_fwd_bwd(model, n, T=10, B=8):
+    cfg = dense_lib.DenseConfig(
+        MemoryConfig(num_slots=n, word_size=32, num_heads=4, k=4), CTL,
+        model=model)
+    key = jax.random.PRNGKey(0)
+    params = dense_lib.init_params(key, cfg)
+    state = dense_lib.init_state(B, cfg)
+    xs = jax.random.normal(key, (T, B, 10))
+
+    @jax.jit
+    def fwd_bwd(p):
+        return jax.grad(
+            lambda p: (dense_lib.dense_unroll(p, cfg, state, xs)[1] ** 2)
+            .sum())(p)
+
+    return lambda: fwd_bwd(params)
+
+
+def run(sizes=(256, 1024, 4096, 16384)):
+    base = {}
+    for n in sizes:
+        us = timed(_sam_fwd_bwd(n))
+        base[("sam", n)] = us
+        row(f"fig1a_sam_N{n}", us, "fwd+bwd")
+    for model in ("dam", "ntm"):
+        for n in sizes:
+            if n > 4096 and model == "ntm":
+                # NTM at 16k slots exceeds sensible CPU bench time; the
+                # trend is established by the smaller sizes.
+                continue
+            us = timed(_dense_fwd_bwd(model, n))
+            base[(model, n)] = us
+            row(f"fig1a_{model}_N{n}", us,
+                f"speedup_vs_sam={us / base[('sam', n)]:.1f}x")
+    return base
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Shared benchmark utilities. Every bench prints ``name,us_per_call,derived``
+CSV rows (derived = the figure-specific quantity, e.g. speedup or bytes)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived="") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line)
+    return line

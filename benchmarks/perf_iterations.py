@@ -1,0 +1,140 @@
+"""§Perf hillclimbing driver: baseline → change → re-lower → record, for the
+three chosen cells (see EXPERIMENTS.md §Perf for the hypothesis log).
+
+Cells:
+  A starcoder2_7b × train_4k   — worst roofline fraction (replicated attention)
+  B mistral_large_123b × prefill_32k — most collective-bound
+  C yi_34b × decode_32k        — most representative of the paper's technique
+                                 (content-addressed reads from large memory)
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_iterations
+"""
+# Must run with the dry-run device count; importing dryrun sets XLA_FLAGS
+# before jax initializes.
+from repro.launch.dryrun import lower_cell  # noqa: E402  (sets XLA_FLAGS)
+
+import json
+import os
+
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.launch.mesh import HBM_BW
+
+OUT = "experiments/perf"
+
+# Rule tables reconstructing the PRE-optimization baselines.
+RULES_NO_ATTN_BATCH = tuple(
+    ("attn_batch", ("pod", "data")) if k == "attn_batch" else (k, v)
+    for k, v in DEFAULT_RULES)
+RULES_OLD_EMBED = tuple(
+    ("vocab_table", "model") if k == "vocab_table"
+    else (("embed_table", None) if k == "embed_table" else (k, v))
+    for k, v in DEFAULT_RULES)
+RULES_BASELINE = tuple(
+    ("attn_batch", ("pod", "data")) if k == "attn_batch"
+    else (("vocab_table", "model") if k == "vocab_table"
+          else (("embed_table", None) if k == "embed_table" else (k, v)))
+    for k, v in DEFAULT_RULES)
+
+
+def flash_adjustment(arch: str, shape: str, rec: dict, *, d_model: int,
+                     n_heads: int, n_layers: int, seq: int, batch_local: int,
+                     q_block: int = 512, kv_block: int = 512,
+                     train: bool = True) -> dict:
+    """Analytic memory-term adjustment for the Pallas flash-attention kernel
+    (kernels/flash_attention.py, validated in interpret mode): score tiles
+    (qb × kb f32) never reach HBM, removing
+      pairs · qb · kb · H · B_local · 4B · passes
+    of traffic. passes = fwd + remat-fwd + bwd(dS, dP) ≈ 4 for training
+    (full remat), 1 for prefill."""
+    nq = seq // q_block
+    pairs = nq * (nq + 1) // 2
+    # score-sized tensors per pair visit: s + p (fwd) and dS + dP (bwd);
+    # training revisits the forward once more under full remat.
+    tiles = 3 if train else 2
+    passes = 2 if train else 1
+    score_bytes = (pairs * q_block * kv_block * n_heads * batch_local
+                   * 4 * tiles * passes * n_layers)
+    t_mem_adj = max(rec["t_memory"] - score_bytes / HBM_BW, 0.0)
+    return {"score_tile_bytes": score_bytes,
+            "t_memory_flash_adjusted": t_mem_adj}
+
+
+def run_cell(tag: str, **kw):
+    os.makedirs(OUT, exist_ok=True)
+    rec = lower_cell(**kw)
+    with open(os.path.join(OUT, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    t = {k: round(rec[k] * 1e3, 1) for k in
+         ("t_compute", "t_memory", "t_collective")}
+    print(f"== {tag}: {t} bottleneck={rec['bottleneck']}")
+    return rec
+
+
+def main():
+    results = {}
+
+    # ---- Cell A: starcoder2_7b × train_4k ----
+    results["A0"] = run_cell(
+        "A0_starcoder2_train4k_baseline", arch="starcoder2_7b",
+        shape_name="train_4k", rules=RULES_BASELINE)
+    results["A1"] = run_cell(
+        "A1_starcoder2_train4k_attnbatch", arch="starcoder2_7b",
+        shape_name="train_4k", rules=RULES_OLD_EMBED)  # isolate A1
+    results["A2"] = run_cell(
+        "A2_starcoder2_train4k_attnbatch_embed", arch="starcoder2_7b",
+        shape_name="train_4k")                          # A1 + B1 rules
+    adj = flash_adjustment("starcoder2_7b", "train_4k", results["A2"],
+                           d_model=4608, n_heads=36, n_layers=32, seq=4096,
+                           batch_local=1, train=True)
+    results["A3"] = {**results["A2"], **adj}
+    print(f"== A3 (+flash kernel, analytic): t_memory "
+          f"{results['A2']['t_memory']*1e3:.1f} -> "
+          f"{adj['t_memory_flash_adjusted']*1e3:.1f} ms")
+    with open(os.path.join(OUT, "A3_starcoder2_train4k_flash.json"),
+              "w") as f:
+        json.dump(results["A3"], f, indent=2)
+
+    # ---- Cell B: mistral_large_123b × prefill_32k ----
+    results["B0"] = run_cell(
+        "B0_mistral_prefill32k_baseline", arch="mistral_large_123b",
+        shape_name="prefill_32k", rules=RULES_BASELINE)
+    results["B1"] = run_cell(
+        "B1_mistral_prefill32k_local_embed", arch="mistral_large_123b",
+        shape_name="prefill_32k")
+    adj = flash_adjustment("mistral_large_123b", "prefill_32k",
+                           results["B1"], d_model=12288, n_heads=6,
+                           n_layers=88, seq=32768, batch_local=2,
+                           train=False)
+    results["B2"] = {**results["B1"], **adj}
+    print(f"== B2 (+flash kernel, analytic): t_memory "
+          f"{results['B1']['t_memory']*1e3:.1f} -> "
+          f"{adj['t_memory_flash_adjusted']*1e3:.1f} ms")
+    with open(os.path.join(OUT, "B2_mistral_prefill32k_flash.json"),
+              "w") as f:
+        json.dump(results["B2"], f, indent=2)
+
+    # ---- Cell C: yi_34b × decode_32k ----
+    results["C0"] = run_cell(
+        "C0_yi34b_decode32k_baseline", arch="yi_34b",
+        shape_name="decode_32k")
+    results["C1"] = run_cell(
+        "C1_yi34b_decode32k_sparse_topk", arch="yi_34b",
+        shape_name="decode_32k",
+        cfg_overrides={"sparse_decode_blocks": 8,
+                       "sparse_decode_block": 128})
+    results["C2"] = run_cell(
+        "C2_yi34b_decode32k_sparse_topk16", arch="yi_34b",
+        shape_name="decode_32k",
+        cfg_overrides={"sparse_decode_blocks": 16,
+                       "sparse_decode_block": 64})
+
+    print("\nsummary (ms):")
+    for k, r in results.items():
+        if "t_compute" in r:
+            print(f"  {k}: comp={r['t_compute']*1e3:8.1f} "
+                  f"mem={r.get('t_memory_flash_adjusted', r['t_memory'])*1e3:8.1f} "
+                  f"coll={r['t_collective']*1e3:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

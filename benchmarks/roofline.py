@@ -1,0 +1,119 @@
+"""Roofline report (deliverable g): read the dry-run records and emit the
+per-(arch × shape × mesh) three-term roofline table with MODEL_FLOPS
+utilization ratios. Markdown to stdout; also returns the rows."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import get_shape
+
+PARAMS_CACHE = {}
+
+
+def count_params(arch: str) -> tuple[int, int]:
+    """(total, active) parameter counts from the abstract param tree."""
+    if arch in PARAMS_CACHE:
+        return PARAMS_CACHE[arch]
+    import jax
+    from repro.models import lm
+    cfg = get_config(arch)
+    abs_p = lm.abstract_params(cfg)
+    total = sum(int(__import__("numpy").prod(x.shape))
+                for x in jax.tree.leaves(abs_p))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        per_expert = 3 * cfg.d_model * m.d_expert
+        n_moe_layers = cfg.num_layers - m.num_dense_layers
+        routed_total = n_moe_layers * m.num_experts * per_expert
+        routed_active = n_moe_layers * m.top_k * per_expert
+        active = total - routed_total + routed_active
+    PARAMS_CACHE[arch] = (total, active)
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str, accum: int = 1) -> float:
+    """MODEL_FLOPS = 6·N_active·D for train, 2·N_active·D for inference
+    (per whole step, all devices)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    _, active = count_params(arch)
+    # exclude embedding table from the 6ND rule-of-thumb active count
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    body = max(active - emb, 1)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * body * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * body * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * body * tokens
+
+
+def load_records(dirname="experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def table(dirname="experiments/dryrun", multi_pod=False):
+    rows = []
+    for r in load_records(dirname):
+        if r.get("multi_pod") != multi_pod or "error" in r:
+            continue
+        if "skipped" in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skipped": r["skipped"]})
+            continue
+        chips = r["chips"]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_global = r["flops_per_device"] * chips
+        useful = mf / hlo_global if hlo_global else 0.0
+        dominant = max(("t_compute", "t_memory", "t_collective"),
+                       key=lambda k: r[k])
+        step_t = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        # roofline fraction: ideal compute time / modelled step time,
+        # with ideal = MODEL_FLOPS / (chips · peak)
+        ideal = mf / (chips * PEAK_FLOPS_BF16)
+        frac = ideal / step_t if step_t else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute": r["t_compute"], "t_memory": r["t_memory"],
+            "t_collective": r["t_collective"], "dominant": dominant[2:],
+            "model_flops": mf, "hlo_flops_global": hlo_global,
+            "useful_ratio": useful, "roofline_frac": frac,
+        })
+    return rows
+
+
+def render(rows):
+    out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "bottleneck | MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped: "
+                       f"{r['skipped'][:40]}… | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} | "
+            f"{r['t_memory']*1e3:.1f} | {r['t_collective']*1e3:.1f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} |")
+    return "\n".join(out)
+
+
+def run():
+    rows = table()
+    print(render(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark runner: ``python -m benchmarks.run [--full] [--only NAME]``.
+
+Default mode uses CPU-scale sizes so the whole suite finishes in minutes;
+--full uses the larger sweeps reported in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_babi, bench_curriculum, bench_generalization,
+                            bench_learning, bench_memory, bench_omniglot,
+                            bench_sdnc, bench_speed, roofline)
+
+    suite = {
+        "fig1a_speed": lambda: bench_speed.run(
+            sizes=(256, 1024, 4096, 16384) if args.full else (256, 1024, 4096)),
+        "fig1b_memory": lambda: bench_memory.run(
+            sizes=(256, 1024, 4096, 16384, 65536) if args.full
+            else (256, 1024, 4096), T=100 if args.full else 25),
+        "fig2_learning": lambda: bench_learning.run(
+            steps=600 if args.full else 120,
+            seeds=(0, 1, 2) if args.full else (0,)),
+        "fig3_curriculum": lambda: bench_curriculum.run(
+            steps=600 if args.full else 150),
+        "fig4_omniglot": lambda: bench_omniglot.run(
+            steps=400 if args.full else 80),
+        "table1_babi": lambda: bench_babi.run(
+            steps=600 if args.full else 120),
+        "fig7_sdnc": lambda: bench_sdnc.run(
+            sizes=(256, 512, 1024, 2048) if args.full else (256, 512)),
+        "fig8_generalization": lambda: bench_generalization.run(
+            steps=500 if args.full else 120),
+        "roofline": roofline.run,
+    }
+    failures = []
+    for name, fn in suite.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# {name} done in {time.time() - t0:.0f}s")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,72 @@
+"""Architecture registry: one module per assigned architecture plus the
+paper's own SAM configurations. ``get_config(name)`` returns the full
+published config; ``reduced(cfg)`` returns a smoke-test-sized config of the
+same family."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig, MemoryLayerConfig
+
+ARCH_IDS = (
+    "rwkv6_7b",
+    "starcoder2_7b",
+    "yi_34b",
+    "h2o_danube_3_4b",
+    "mistral_large_123b",
+    "musicgen_medium",
+    "deepseek_v2_236b",
+    "llama4_maverick_400b_a17b",
+    "paligemma_3b",
+    "hymba_1_5b",
+)
+
+
+def get_config(name: str) -> ModelConfig:
+    name = name.replace("-", "_").replace(".", "_")
+    if name.endswith("_sam"):
+        base = get_config(name[:-4])
+        return dataclasses.replace(base, memory=MemoryLayerConfig())
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test-sized config of the same family (per-arch overrides live in
+    each config module as REDUCED when the default isn't enough)."""
+    mod_name = cfg.name.replace("-", "_")
+    try:
+        mod = importlib.import_module(f"repro.configs.{mod_name}")
+        if hasattr(mod, "REDUCED"):
+            return mod.REDUCED
+    except ImportError:
+        pass
+    kw = dict(
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=256, vocab_size=512, q_block=64, kv_block=64, loss_chunk=64,
+        remat=False, pad_head_groups=None)
+    if cfg.window is not None:
+        kw["window"] = 32
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(2, cfg.moe.top_k), d_expert=64,
+            num_dense_layers=min(1, cfg.moe.num_dense_layers))
+    if cfg.mla is not None:
+        kw["mla"] = dataclasses.replace(
+            cfg.mla, kv_lora=32, q_lora=48, rope_head_dim=16,
+            nope_head_dim=32, v_head_dim=32)
+        kw["head_dim"] = 32
+    if cfg.rwkv is not None:
+        kw["rwkv"] = dataclasses.replace(cfg.rwkv, head_size=32,
+                                         decay_lora=16, mix_lora=8)
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, state_size=8, dt_rank=16)
+    if cfg.frontend == "vision":
+        kw["frontend_len"] = 16
+        kw["prefix_lm"] = 16
+    if cfg.memory is not None:
+        kw["memory"] = dataclasses.replace(
+            cfg.memory, num_slots=64, word_size=16, k=4, every_n_layers=1,
+            segment=32)
+    return dataclasses.replace(cfg, **kw)

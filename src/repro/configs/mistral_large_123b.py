@@ -1,0 +1,17 @@
+"""Mistral-Large-Instruct-2407 (123B) — deep dense GQA.
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+88L, d_model=12288, 96H, kv=8, d_ff=28672, vocab=32768."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral_large_123b",
+    num_layers=88,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=32768,
+    act="silu",
+    rope_theta=1e6,
+)

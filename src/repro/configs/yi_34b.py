@@ -1,0 +1,18 @@
+"""Yi-34B — llama-architecture dense GQA.
+[arXiv:2403.04652; hf:01-ai/Yi-34B]
+60L, d_model=7168, 56H, kv=8, d_ff=20480, vocab=64000."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi_34b",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    act="silu",
+    rope_theta=5e6,
+    pad_head_groups=8,    # 56H -> 64 padded q-heads (§Perf A2)
+)

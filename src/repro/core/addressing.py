@@ -1,0 +1,144 @@
+"""Content-based addressing: dense softmax reads (eq. 2) and sparse top-K
+reads (eq. 4), plus usage tracking / least-recently-accessed selection.
+
+The sparse path only backpropagates through K rows of memory per head — the
+defining property of SAM (§3.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SparseRead
+
+_NEG = -1e9
+
+
+def _safe_norm(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Gradient-safe L2 normalization (norm at 0 has a NaN gradient)."""
+    return x * jax.lax.rsqrt(jnp.sum(x * x, axis=-1, keepdims=True) + eps)
+
+
+def cosine_sim(q: jax.Array, m: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """q: (B, H, W), m: (B, N, W) -> (B, H, N)."""
+    return jnp.einsum("bhw,bnw->bhn", _safe_norm(q, eps), _safe_norm(m, eps))
+
+
+def dense_read_weights(q: jax.Array, m: jax.Array, beta: jax.Array) -> jax.Array:
+    """Eq. (2): softmax over similarity. beta: (B, H) key strength."""
+    sims = cosine_sim(q, m) * beta[..., None]
+    return jax.nn.softmax(sims, axis=-1)
+
+
+def dense_read(w: jax.Array, m: jax.Array) -> jax.Array:
+    """Eq. (1): r = sum_i w(i) M(i). w: (B, H, N) -> (B, H, W)."""
+    return jnp.einsum("bhn,bnw->bhw", w, m)
+
+
+def topk_from_sims(sims: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-K over the last axis. sims: (B, H, C) -> values/indices (B, H, K)."""
+    vals, idx = jax.lax.top_k(sims, k)
+    return vals, idx
+
+
+def sparse_read_exact(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
+                      sims_fn=cosine_sim) -> SparseRead:
+    """'Linear index' SAM read: exact K nearest by similarity, softmax over the
+    kept K entries only (§3.1 — remaining entries set to zero).
+
+    Gradients flow only through the K gathered rows (take_along_axis)."""
+    sims = sims_fn(jax.lax.stop_gradient(q), jax.lax.stop_gradient(m))
+    _, idx = topk_from_sims(sims, k)                        # (B, H, K), no grads
+    words = gather_rows(m, idx)                             # (B, H, K, W)
+    # Re-compute similarities for the selected rows only => sparse gradients.
+    sel = _rerank(q, words) * beta[..., None]
+    w = jax.nn.softmax(sel, axis=-1)
+    read = jnp.einsum("bhk,bhkw->bhw", w, words)
+    return SparseRead(indices=idx, weights=w, words=read)
+
+
+def sparse_read_candidates(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
+                           cand_idx: jax.Array) -> SparseRead:
+    """ANN-mode read: re-rank a fixed candidate set (B, H, C) from the LSH
+    index, dedup, keep top-K. FLOP cost O(C·W) instead of O(N·W)."""
+    cand_idx = _dedup(cand_idx)
+    cand = gather_rows(m, cand_idx)                         # (B, H, C, W)
+    sims = _rerank(jax.lax.stop_gradient(q), jax.lax.stop_gradient(cand))
+    sims = jnp.where(cand_idx < 0, _NEG, sims)
+    _, pos = topk_from_sims(sims, k)                        # positions in C
+    idx = jnp.take_along_axis(cand_idx, pos, axis=-1)       # (B, H, K)
+    idx = jnp.maximum(idx, 0)
+    words = gather_rows(m, idx)
+    sel = _rerank(q, words) * beta[..., None]
+    w = jax.nn.softmax(sel, axis=-1)
+    read = jnp.einsum("bhk,bhkw->bhw", w, words)
+    return SparseRead(indices=idx, weights=w, words=read)
+
+
+def gather_rows(m: jax.Array, idx: jax.Array) -> jax.Array:
+    """m: (B, N, W), idx: (B, ...) -> (B, ..., W)."""
+    B = m.shape[0]
+    flat = idx.reshape(B, -1)
+    rows = jnp.take_along_axis(m, flat[..., None], axis=1)
+    return rows.reshape(idx.shape + (m.shape[-1],))
+
+
+def scatter_add_rows(m: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array:
+    """m[b, idx[b, j]] += rows[b, j]. idx: (B, J), rows: (B, J, W)."""
+    B = m.shape[0]
+    b = jnp.arange(B)[:, None]
+    return m.at[b, idx].add(rows)
+
+
+def scatter_set_rows(m: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array:
+    B = m.shape[0]
+    b = jnp.arange(B)[:, None]
+    return m.at[b, idx].set(rows)
+
+
+def _rerank(q: jax.Array, words: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Cosine similarity against gathered rows. q: (B,H,W), words: (B,H,C,W)."""
+    return jnp.einsum("bhw,bhcw->bhc", _safe_norm(q, eps), _safe_norm(words, eps))
+
+
+def _dedup(idx: jax.Array) -> jax.Array:
+    """Mask duplicate candidate indices with -1 (sort + neighbour compare)."""
+    s = jnp.sort(idx, axis=-1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros_like(s[..., :1], dtype=bool), s[..., 1:] == s[..., :-1]], axis=-1)
+    # Map back: an index is a duplicate if it appears earlier in the array.
+    order = jnp.argsort(idx, axis=-1, stable=True)
+    inv = jnp.argsort(order, axis=-1)
+    dup = jnp.take_along_axis(dup_sorted, inv, axis=-1)
+    return jnp.where(dup, -1, idx)
+
+
+# --------------------------------------------------------------------------
+# Usage tracking (§3.2)
+# --------------------------------------------------------------------------
+
+def update_last_access(last_access: jax.Array, idx: jax.Array, w: jax.Array,
+                       step: jax.Array, delta: float) -> jax.Array:
+    """SAM usage U^(2): record `step` for slots accessed with weight > δ.
+
+    last_access: (B, N) int32; idx: (B, J); w: (B, J)."""
+    B = last_access.shape[0]
+    b = jnp.arange(B)[:, None]
+    upd = jnp.where(w > delta, step, last_access[b, idx])
+    return last_access.at[b, idx].max(upd)
+
+
+def least_recently_accessed(last_access: jax.Array, n: int) -> jax.Array:
+    """Return the n least-recently-accessed slot indices per batch (B, n).
+
+    Eq. (6): argmin of usage; ties broken arbitrarily (here: lowest index)."""
+    _, idx = jax.lax.top_k(-last_access, n)
+    return idx
+
+
+def dam_usage_update(usage: jax.Array, read_w: jax.Array, write_w: jax.Array,
+                     discount: float) -> jax.Array:
+    """DAM usage U^(1): time-discounted sum of read+write weights.
+
+    usage: (B, N); read_w/write_w: (B, H, N)."""
+    return discount * usage + read_w.sum(axis=1) + write_w.sum(axis=1)

@@ -1,0 +1,88 @@
+"""Fixed-shape LSH approximate-nearest-neighbour index (§3.5, TPU-adapted).
+
+The paper uses FLANN k-d trees / LSH on CPU. Pointer-based trees do not map
+to TPU; we keep the LSH variant with dense fixed-shape bucket tables:
+
+  buckets: (B, T, 2**bits, bucket_size) int32 — slot indices, -1 = empty
+  cursor:  (B, T, 2**bits) int32             — ring insert position
+
+Signatures come from fixed random hyperplanes (non-learned, no gradients —
+"there are no gradients with respect to the ANN as its function is fixed").
+Insertion/deletion/query are O(T · bucket_size) gathers/scatters, constant
+w.r.t. N. The index is carried through the scan as part of the state and
+kept in sync on every write, exactly as the paper passes the ANN through the
+network.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ANNState, MemoryConfig
+
+
+def lsh_planes(key, cfg: MemoryConfig) -> jax.Array:
+    """(T, bits, W) fixed random hyperplanes."""
+    return jax.random.normal(key, (cfg.lsh_tables, cfg.lsh_bits, cfg.word_size))
+
+
+def lsh_hash(planes: jax.Array, x: jax.Array) -> jax.Array:
+    """x: (..., W) -> bucket ids (..., T)."""
+    # sign bits -> integer bucket id per table.
+    proj = jnp.einsum("...w,tbw->...tb", x, planes)
+    bits = (proj > 0).astype(jnp.int32)
+    weights = 2 ** jnp.arange(planes.shape[1], dtype=jnp.int32)
+    return (bits * weights).sum(axis=-1)
+
+
+def ann_init(batch: int, cfg: MemoryConfig) -> ANNState:
+    nb = 2 ** cfg.lsh_bits
+    return ANNState(
+        buckets=jnp.full((batch, cfg.lsh_tables, nb, cfg.lsh_bucket_size), -1,
+                         dtype=jnp.int32),
+        cursor=jnp.zeros((batch, cfg.lsh_tables, nb), dtype=jnp.int32),
+    )
+
+
+def ann_build(planes: jax.Array, memory: jax.Array, cfg: MemoryConfig) -> ANNState:
+    """Bulk-build the index from a full memory (the paper rebuilds every N
+    insertions; we expose the same rebuild primitive)."""
+    B, N, _ = memory.shape
+    state = ann_init(B, cfg)
+
+    def insert_one(state: ANNState, i: jax.Array) -> tuple[ANNState, None]:
+        rows = memory[:, i]                                   # (B, W)
+        state = ann_insert(planes, state, jnp.full((B, 1), i, jnp.int32),
+                           rows[:, None], cfg)
+        return state, None
+
+    state, _ = jax.lax.scan(insert_one, state, jnp.arange(N, dtype=jnp.int32))
+    return state
+
+
+def ann_insert(planes: jax.Array, state: ANNState, idx: jax.Array,
+               rows: jax.Array, cfg: MemoryConfig) -> ANNState:
+    """Insert slots `idx` (B, J) with contents `rows` (B, J, W) into every
+    table (ring overwrite within the bucket)."""
+    B, J = idx.shape
+    T = cfg.lsh_tables
+    bucket_ids = lsh_hash(planes, rows)                       # (B, J, T)
+    b = jnp.arange(B)[:, None, None]                          # (B,1,1)
+    t = jnp.arange(T)[None, None, :]                          # (1,1,T)
+    cur = state.cursor[b, t, bucket_ids]                      # (B, J, T)
+    buckets = state.buckets.at[b, t, bucket_ids, cur].set(
+        jnp.broadcast_to(idx[:, :, None], (B, J, T)))
+    cursor = state.cursor.at[b, t, bucket_ids].set(
+        (cur + 1) % cfg.lsh_bucket_size)
+    return ANNState(buckets=buckets, cursor=cursor)
+
+
+def ann_query(planes: jax.Array, state: ANNState, q: jax.Array,
+              cfg: MemoryConfig) -> jax.Array:
+    """q: (B, H, W) -> candidate slot indices (B, H, T * bucket_size)."""
+    B, H, _ = q.shape
+    bucket_ids = lsh_hash(planes, q)                          # (B, H, T)
+    b = jnp.arange(B)[:, None, None]
+    t = jnp.arange(cfg.lsh_tables)[None, None, :]
+    cands = state.buckets[b, t, bucket_ids]                   # (B, H, T, S)
+    return cands.reshape(B, H, -1)

@@ -1,0 +1,162 @@
+"""Memory-efficient BPTT for SAM (paper §3.4, Suppl. Fig. 5).
+
+A naive `lax.scan` checkpoints the full memory `M_t` per step — O(T·N·W)
+residual space. Here we store only the *sparse modifications* per step
+(touched row indices + their overwritten contents, O(T·K·W)) plus the small
+controller state, and during the backward pass we **roll the memory back**
+step by step by reverting those modifications, rematerializing each step's
+differentiable computation from the reconstructed state.
+
+Because read/write *index selection* is non-differentiable (stop-gradient
+top-K / LRA argmin), the replayed step takes the recorded indices as fixed
+inputs — the backward pass never needs the usage table or the ANN index.
+
+At the end of the backward pass the memory has been rolled back to the start
+state, exactly as described in the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addressing as addr
+from repro.core.controller import linear, lstm_step
+from repro.core.sam import SAMConfig, apply_write, sam_step, _interface
+from repro.core.types import LSTMState, SAMState, SparseRead
+
+
+class _StepResiduals(NamedTuple):
+    x: jax.Array              # (B, D) input at step t
+    read_w_prev: jax.Array    # (B, H, K) previous read weights
+    read_words_prev: jax.Array  # (B, H, W)
+    ctrl_h_prev: jax.Array    # (B, Hd)
+    ctrl_c_prev: jax.Array    # (B, Hd)
+    read_idx: jax.Array       # (B, H, K) indices chosen at step t
+    write_idx: jax.Array      # (B, H*(K+1)) rows touched by the write
+    old_rows: jax.Array       # (B, H*(K+1), W) pre-write contents
+
+
+def replay_step(params, cfg: SAMConfig, mem_prev, read_w_prev, read_words_prev,
+                h_prev, c_prev, x, read_idx, write_idx):
+    """Differentiable recomputation of one SAM step given fixed indices.
+
+    Must match `sam_step` numerically (tested in tests/test_bptt.py)."""
+    B = x.shape[0]
+    H, K = cfg.memory.num_heads, cfg.memory.k
+    ctrl_in = jnp.concatenate([x, read_words_prev.reshape(B, -1)], axis=-1)
+    ctrl, h = lstm_step(params["lstm"], LSTMState(h=h_prev, c=c_prev), ctrl_in)
+    q, a, beta, alpha, gamma = _interface(params, cfg, h)
+
+    # Write weights (eq. 5) from the recorded touched rows.
+    w_read = alpha[..., None] * gamma[..., None] * read_w_prev      # (B,H,K)
+    w_lra = (alpha * (1.0 - gamma))[..., None]                      # (B,H,1)
+    ww = jnp.concatenate([w_read, w_lra], axis=-1).reshape(B, -1)
+    lra_idx = write_idx.reshape(B, H, K + 1)[..., -1]
+    memory = apply_write(mem_prev, write_idx, ww, a, lra_idx, cfg)
+
+    # Read at the recorded indices.
+    words = addr.gather_rows(memory, read_idx)                      # (B,H,K,W)
+    sel = addr._rerank(q, words) * beta[..., None]
+    rw = jax.nn.softmax(sel, axis=-1)
+    r = jnp.einsum("bhk,bhkw->bhw", rw, words)
+    y = linear(params["out"], jnp.concatenate([h, r.reshape(B, -1)], axis=-1))
+    return memory, rw, r, ctrl.h, ctrl.c, y
+
+
+def _zero_ct(x):
+    """Cotangent of zeros with the dtype JAX expects (float0 for ints)."""
+    if x is None:
+        return None
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.zeros_like(x)
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+@jax.tree_util.Partial
+def _noop(*a, **k):  # pragma: no cover
+    raise RuntimeError
+
+
+def make_sparse_unroll(cfg: SAMConfig):
+    """Build the custom-VJP unroll for a given (static) config."""
+
+    @jax.custom_vjp
+    def unroll(params, state0: SAMState, xs: jax.Array):
+        state, (ys, _) = _fwd_scan(params, state0, xs)
+        return state, ys
+
+    def _fwd_scan(params, state0, xs):
+        def body(s, x):
+            ns, y, deltas = sam_step(params, cfg, s, x, collect_deltas=True)
+            res = _StepResiduals(
+                x=x, read_w_prev=s.read.weights, read_words_prev=s.read.words,
+                ctrl_h_prev=s.ctrl.h, ctrl_c_prev=s.ctrl.c,
+                read_idx=ns.read.indices, write_idx=deltas.write_idx,
+                old_rows=deltas.old_rows)
+            return ns, (y, res)
+        return jax.lax.scan(body, state0, xs)
+
+    def fwd(params, state0, xs):
+        stateT, (ys, res) = _fwd_scan(params, state0, xs)
+        # One dense copy of M_T (paper: restore final state by copying M_T) —
+        # plus O(T·K·W) sparse residuals. NOT O(T·N·W).
+        return (stateT, ys), (params, state0, res, stateT.memory)
+
+    def bwd(residuals, ct):
+        params, state0, res, memory_T = residuals
+        ct_state, ct_ys = ct
+
+        g_params0 = jax.tree.map(jnp.zeros_like, params)
+        carry = (
+            memory_T,
+            ct_state.memory,
+            ct_state.read.weights, ct_state.read.words,
+            ct_state.ctrl.h, ct_state.ctrl.c,
+            g_params0,
+        )
+
+        def body(carry, step_in):
+            mem_t, g_mem, g_rw, g_rwords, g_h, g_c, g_params = carry
+            r, g_y = step_in
+            # Roll the memory back: restore the touched rows (§3.4).
+            mem_prev = addr.scatter_set_rows(mem_t, r.write_idx, r.old_rows)
+
+            def f(p, mem, rw_prev, rwords_prev, h_prev, c_prev, x):
+                return replay_step(p, cfg, mem, rw_prev, rwords_prev, h_prev,
+                                   c_prev, x, r.read_idx, r.write_idx)
+
+            _, vjp_fn = jax.vjp(f, params, mem_prev, r.read_w_prev,
+                                r.read_words_prev, r.ctrl_h_prev,
+                                r.ctrl_c_prev, r.x)
+            gp, gm, grw, grwords, gh, gc, gx = vjp_fn(
+                (g_mem, g_rw, g_rwords, g_h, g_c, g_y))
+            g_params = jax.tree.map(jnp.add, g_params, gp)
+            return (mem_prev, gm, grw, grwords, gh, gc, g_params), gx
+
+        (mem0, g_mem, g_rw, g_rwords, g_h, g_c, g_params), g_xs_rev = \
+            jax.lax.scan(body, carry, (res, ct_ys), reverse=True)
+
+        g_state0 = SAMState(
+            memory=g_mem,
+            last_access=_zero_ct(state0.last_access),
+            read=SparseRead(indices=_zero_ct(state0.read.indices),
+                            weights=g_rw, words=g_rwords),
+            ctrl=LSTMState(h=g_h, c=g_c),
+            step=_zero_ct(state0.step),
+            ann=jax.tree.map(_zero_ct, state0.ann),
+        )
+        return g_params, g_state0, g_xs_rev
+
+    unroll.defvjp(fwd, bwd)
+    return unroll
+
+
+def sam_unroll_sparse_bptt(params, cfg: SAMConfig, state0: SAMState,
+                           xs: jax.Array):
+    """Public entry point mirroring `sam.sam_unroll` but with O(T·K·W)
+    residuals instead of O(T·N·W)."""
+    return make_sparse_unroll(cfg)(params, state0, xs)

@@ -1,0 +1,37 @@
+"""LSTM controller (paper §3.3 — one-layer LSTM, 100 hidden units)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import LSTMState, glorot
+
+
+def lstm_init(key, input_size: int, hidden_size: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": glorot(k1, (input_size, 4 * hidden_size)),
+        "wh": glorot(k2, (hidden_size, 4 * hidden_size)),
+        "b": jnp.zeros((4 * hidden_size,)),
+    }
+
+
+def lstm_zero_state(batch: int, hidden_size: int, dtype=jnp.float32) -> LSTMState:
+    z = jnp.zeros((batch, hidden_size), dtype)
+    return LSTMState(h=z, c=z)
+
+
+def lstm_step(params, state: LSTMState, x: jax.Array) -> tuple[LSTMState, jax.Array]:
+    gates = x @ params["wx"] + state.h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * state.c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return LSTMState(h=h, c=c), h
+
+
+def linear_init(key, in_dim: int, out_dim: int):
+    return {"w": glorot(key, (in_dim, out_dim)), "b": jnp.zeros((out_dim,))}
+
+
+def linear(params, x):
+    return x @ params["w"] + params["b"]

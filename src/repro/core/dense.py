@@ -1,0 +1,155 @@
+"""Dense baselines: DAM (dense-approximation to SAM, §3.2) and the NTM.
+
+DAM uses the discounted-usage statistic U^(1) and the same write rule as SAM
+(eq. 5) but with *dense* read weights — it is the paper's control for "does
+sparsity hurt learning". The NTM is the original Graves et al. 2014 head
+with content + location (interpolate / shift / sharpen) addressing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addressing as addr
+from repro.core.controller import linear, linear_init, lstm_init, lstm_step, lstm_zero_state
+from repro.core.types import ControllerConfig, DenseState, MemoryConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseConfig:
+    memory: MemoryConfig
+    controller: ControllerConfig
+    model: str = "dam"            # "dam" | "ntm"
+    shift_range: int = 1          # NTM: allowed shifts [-s..s]
+
+
+def _iface_size(cfg: DenseConfig) -> int:
+    mem = cfg.memory
+    W = mem.word_size
+    if cfg.model == "dam":
+        # Per head: query W, beta 1, write word W, alpha 1, gamma 1.
+        return mem.num_heads * (2 * W + 3)
+    # NTM per head: query W, beta 1, gate 1, shifts (2s+1), sharpen 1,
+    # erase W, add W.
+    return mem.num_heads * (3 * W + 3 + (2 * cfg.shift_range + 1))
+
+
+def init_params(key, cfg: DenseConfig):
+    mem, ctl = cfg.memory, cfg.controller
+    H, W = mem.num_heads, mem.word_size
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "lstm": lstm_init(k1, ctl.input_size + H * W, ctl.hidden_size),
+        "iface": linear_init(k2, ctl.hidden_size, _iface_size(cfg)),
+        "out": linear_init(k3, ctl.hidden_size + H * W, ctl.output_size),
+    }
+
+
+def init_state(batch: int, cfg: DenseConfig) -> DenseState:
+    mem, ctl = cfg.memory, cfg.controller
+    H, W, N = mem.num_heads, mem.word_size, mem.num_slots
+    w0 = jnp.zeros((batch, H, N)).at[:, :, 0].set(1.0)
+    return DenseState(
+        memory=jnp.zeros((batch, N, W)) + 1e-6,
+        usage=jnp.broadcast_to(jnp.arange(N, dtype=jnp.float32)[None] * 1e-6,
+                               (batch, N)),
+        read_w=w0, read_words=jnp.zeros((batch, H, W)), write_w=w0,
+        ctrl=lstm_zero_state(batch, ctl.hidden_size),
+        step=jnp.zeros((), jnp.int32))
+
+
+def _dam_step(params, cfg: DenseConfig, s: DenseState, x: jax.Array):
+    mem = cfg.memory
+    H, W, N = mem.num_heads, mem.word_size, mem.num_slots
+    B = x.shape[0]
+    ctrl, h = lstm_step(params["lstm"], s.ctrl,
+                        jnp.concatenate([x, s.read_words.reshape(B, -1)], -1))
+    p = linear(params["iface"], h).reshape(B, H, 2 * W + 3)
+    q, a = p[..., :W], p[..., W:2 * W]
+    beta = jax.nn.softplus(p[..., 2 * W]) + 1.0
+    alpha = jax.nn.sigmoid(p[..., 2 * W + 1])
+    gamma = jax.nn.sigmoid(p[..., 2 * W + 2])
+
+    # Least-used indicator from discounted usage U^(1) (dense one-hot).
+    lra = jnp.argmin(s.usage, axis=-1)                       # (B,)
+    i_u = jax.nn.one_hot(lra, N)[:, None, :]                 # (B,1,N)
+    write_w = alpha[..., None] * (gamma[..., None] * s.read_w
+                                  + (1 - gamma[..., None]) * i_u)
+    # Erase the least-used slot, then dense outer-product add (eq. 3).
+    erase = 1.0 - i_u[:, 0, :, None]                         # (B,N,1)
+    memory = s.memory * erase + jnp.einsum("bhn,bhw->bnw", write_w, a)
+
+    read_w = addr.dense_read_weights(q, memory, beta)        # (B,H,N)
+    read_words = addr.dense_read(read_w, memory)
+    usage = addr.dam_usage_update(s.usage, read_w, write_w, mem.usage_discount)
+    y = linear(params["out"], jnp.concatenate([h, read_words.reshape(B, -1)], -1))
+    return DenseState(memory=memory, usage=usage, read_w=read_w,
+                      read_words=read_words, write_w=write_w, ctrl=ctrl,
+                      step=s.step + 1), y
+
+
+def _ntm_step(params, cfg: DenseConfig, s: DenseState, x: jax.Array):
+    mem = cfg.memory
+    H, W, N = mem.num_heads, mem.word_size, mem.num_slots
+    S = 2 * cfg.shift_range + 1
+    B = x.shape[0]
+    ctrl, h = lstm_step(params["lstm"], s.ctrl,
+                        jnp.concatenate([x, s.read_words.reshape(B, -1)], -1))
+    p = linear(params["iface"], h).reshape(B, H, 3 * W + 3 + S)
+    o = 0
+    q = p[..., o:o + W]; o += W
+    beta = jax.nn.softplus(p[..., o]) + 1.0; o += 1
+    gate = jax.nn.sigmoid(p[..., o]); o += 1
+    shift = jax.nn.softmax(p[..., o:o + S], axis=-1); o += S
+    sharpen = jax.nn.softplus(p[..., o]) + 1.0; o += 1
+    erase = jax.nn.sigmoid(p[..., o:o + W]); o += W
+    add = p[..., o:o + W]
+
+    wc = addr.dense_read_weights(q, s.memory, beta)          # content
+    wg = gate[..., None] * wc + (1 - gate[..., None]) * s.write_w
+    # Circular convolution with the shift kernel.
+    idx = (jnp.arange(N)[None, :] - (jnp.arange(S)[:, None] - cfg.shift_range)) % N
+    w_sh = jnp.einsum("bhs,bhsn->bhn", shift, wg[:, :, idx])
+    w = w_sh ** sharpen[..., None]
+    w = w / (w.sum(-1, keepdims=True) + 1e-8)
+
+    # Write: erase then add (eq. 3), all heads sequentially composed.
+    keep = jnp.prod(1.0 - jnp.einsum("bhn,bhw->bhnw", w, erase), axis=1)
+    memory = s.memory * keep + jnp.einsum("bhn,bhw->bnw", w, add)
+
+    read_w = addr.dense_read_weights(q, memory, beta)
+    read_words = addr.dense_read(read_w, memory)
+    y = linear(params["out"], jnp.concatenate([h, read_words.reshape(B, -1)], -1))
+    return DenseState(memory=memory, usage=s.usage, read_w=read_w,
+                      read_words=read_words, write_w=w, ctrl=ctrl,
+                      step=s.step + 1), y
+
+
+def dense_step(params, cfg: DenseConfig, s: DenseState, x: jax.Array):
+    if cfg.model == "dam":
+        return _dam_step(params, cfg, s, x)
+    return _ntm_step(params, cfg, s, x)
+
+
+def dense_unroll(params, cfg: DenseConfig, state: DenseState, xs: jax.Array):
+    def body(s, x):
+        return dense_step(params, cfg, s, x)
+    return jax.lax.scan(body, state, xs)
+
+
+# ----------------------------- LSTM baseline -----------------------------
+
+def lstm_baseline_init(key, cfg: ControllerConfig):
+    k1, k2 = jax.random.split(key)
+    return {"lstm": lstm_init(k1, cfg.input_size, cfg.hidden_size),
+            "out": linear_init(k2, cfg.hidden_size, cfg.output_size)}
+
+
+def lstm_baseline_unroll(params, cfg: ControllerConfig, batch: int,
+                         xs: jax.Array):
+    def body(s, x):
+        s, h = lstm_step(params["lstm"], s, x)
+        return s, linear(params["out"], h)
+    return jax.lax.scan(body, lstm_zero_state(batch, cfg.hidden_size), xs)

@@ -1,0 +1,353 @@
+"""DNC and Sparse DNC (paper Supplementary D).
+
+The DNC here is the canonical dense model (Graves et al. 2016): content
+addressing + dynamic allocation + an N×N temporal link matrix with
+forward/backward link reads.
+
+The SDNC replaces dense reads/writes with SAM's sparse scheme and replaces
+the link matrix with two row-sparse matrices N_t ≈ L_t and P_t ≈ L_tᵀ holding
+at most K_L entries per row (CSR in the paper; fixed-K_L ELL layout here —
+see DESIGN.md §2). Row merges combine duplicates with the O(K_L²) pairwise
+scheme the paper describes. As in the paper, gradients are not passed
+through the temporal linkage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addressing as addr
+from repro.core.controller import linear, linear_init, lstm_init, lstm_step, lstm_zero_state
+from repro.core.types import ControllerConfig, LSTMState, MemoryConfig, SparseRead
+
+
+@dataclasses.dataclass(frozen=True)
+class DNCConfig:
+    memory: MemoryConfig
+    controller: ControllerConfig
+    k_l: int = 8                 # sparse link entries per row (paper: 8)
+    sparse: bool = False         # False = DNC, True = SDNC
+
+
+class SparseMat(NamedTuple):
+    """Row-sparse (N, K_L) matrix: per-row column indices (-1 = empty) + values."""
+    cols: jax.Array   # (B, N, K_L) int32
+    vals: jax.Array   # (B, N, K_L) float
+
+
+class SparseVec(NamedTuple):
+    idx: jax.Array    # (B, K_L) int32, -1 = empty
+    val: jax.Array    # (B, K_L)
+
+
+class DNCState(NamedTuple):
+    memory: jax.Array
+    usage: jax.Array            # DNC freeness u_t / SDNC last-access (int32)
+    read_w: jax.Array           # dense (B,R,N) or unused in sparse mode
+    read: Optional[SparseRead]  # sparse mode
+    read_words: jax.Array       # (B,R,W)
+    write_w: jax.Array          # dense (B,N) | sparse packed (B,J)
+    write_idx: jax.Array        # sparse mode (B,J) int32
+    prec: jax.Array             # dense precedence (B,N)
+    prec_sp: Optional[SparseVec]
+    link: jax.Array             # dense (B,N,N) or () placeholder
+    n_mat: Optional[SparseMat]
+    p_mat: Optional[SparseMat]
+    ctrl: LSTMState
+    step: jax.Array
+
+
+# --------------------------------------------------------------------------
+# Sparse-matrix helpers (O(K_L²) merges, paper Suppl. D)
+# --------------------------------------------------------------------------
+
+def _merge_rows(cols_a, vals_a, cols_b, vals_b, k_l: int):
+    """Merge two (..., K) sparse rows, combining duplicate columns, keep the
+    top-K_L entries by value. O(K²) pairwise combine."""
+    cols = jnp.concatenate([cols_a, cols_b], axis=-1)
+    vals = jnp.concatenate([vals_a, vals_b], axis=-1)
+    valid = cols >= 0
+    vals = jnp.where(valid, vals, 0.0)
+    eq = (cols[..., :, None] == cols[..., None, :]) & valid[..., None, :] \
+        & valid[..., :, None]
+    combined = jnp.einsum("...jk,...k->...j", eq.astype(vals.dtype), vals)
+    first = jnp.argmax(eq, axis=-1) == jnp.arange(cols.shape[-1])
+    keep = valid & first
+    score = jnp.where(keep, combined, -jnp.inf)
+    top, pos = jax.lax.top_k(score, k_l)
+    out_cols = jnp.take_along_axis(cols, pos, axis=-1)
+    out_cols = jnp.where(jnp.isfinite(top), out_cols, -1)
+    out_vals = jnp.where(jnp.isfinite(top), top, 0.0)
+    return out_cols, out_vals
+
+
+def _sparse_vec_lookup(vec: SparseVec, query_idx: jax.Array) -> jax.Array:
+    """Return vec[query_idx] for a sparse vector. query_idx: (B, J)."""
+    eq = (query_idx[..., :, None] == vec.idx[..., None, :]) \
+        & (vec.idx[..., None, :] >= 0)
+    return jnp.einsum("bjk,bk->bj", eq.astype(vec.val.dtype), vec.val)
+
+
+# --------------------------------------------------------------------------
+# Dense DNC
+# --------------------------------------------------------------------------
+
+def _iface_sizes(cfg: DNCConfig):
+    W, R = cfg.memory.word_size, cfg.memory.num_heads
+    # read keys RW, read betas R, read modes 3R, write key W, write beta 1,
+    # erase W, write vec W, free gates R, alloc gate 1, write gate 1.
+    return R * W + R + 3 * R + W + 1 + W + W + R + 1 + 1
+
+
+def init_params(key, cfg: DNCConfig):
+    mem, ctl = cfg.memory, cfg.controller
+    R, W = mem.num_heads, mem.word_size
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "lstm": lstm_init(k1, ctl.input_size + R * W, ctl.hidden_size),
+        "iface": linear_init(k2, ctl.hidden_size, _iface_sizes(cfg)),
+        "out": linear_init(k3, ctl.hidden_size + R * W, ctl.output_size),
+    }
+
+
+def init_state(batch: int, cfg: DNCConfig) -> DNCState:
+    mem, ctl = cfg.memory, cfg.controller
+    R, W, N, KL = mem.num_heads, mem.word_size, mem.num_slots, cfg.k_l
+    J = R * mem.k + 1
+    common = dict(
+        memory=jnp.zeros((batch, N, W)),
+        read_words=jnp.zeros((batch, R, W)),
+        ctrl=lstm_zero_state(batch, ctl.hidden_size),
+        step=jnp.zeros((), jnp.int32))
+    if cfg.sparse:
+        return DNCState(
+            usage=jnp.broadcast_to(-jnp.arange(N, dtype=jnp.int32)[None],
+                                   (batch, N)),
+            read_w=jnp.zeros((batch,)),
+            read=SparseRead(indices=jnp.zeros((batch, R, mem.k), jnp.int32),
+                            weights=jnp.zeros((batch, R, mem.k)),
+                            words=jnp.zeros((batch, R, W))),
+            write_w=jnp.zeros((batch, J)),
+            write_idx=jnp.zeros((batch, J), jnp.int32),
+            prec=jnp.zeros((batch,)),
+            prec_sp=SparseVec(idx=jnp.full((batch, KL), -1, jnp.int32),
+                              val=jnp.zeros((batch, KL))),
+            link=jnp.zeros((batch,)),
+            n_mat=SparseMat(cols=jnp.full((batch, N, KL), -1, jnp.int32),
+                            vals=jnp.zeros((batch, N, KL))),
+            p_mat=SparseMat(cols=jnp.full((batch, N, KL), -1, jnp.int32),
+                            vals=jnp.zeros((batch, N, KL))),
+            **common)
+    return DNCState(
+        usage=jnp.zeros((batch, N)),
+        read_w=jnp.zeros((batch, R, N)).at[:, :, 0].set(1.0),
+        read=None,
+        write_w=jnp.zeros((batch, N)),
+        write_idx=jnp.zeros((batch,), jnp.int32),
+        prec=jnp.zeros((batch, N)),
+        prec_sp=None,
+        link=jnp.zeros((batch, N, N)),
+        n_mat=None, p_mat=None,
+        **common)
+
+
+def _parse_iface(cfg: DNCConfig, p: jax.Array):
+    mem = cfg.memory
+    R, W = mem.num_heads, mem.word_size
+    B = p.shape[0]
+    o = 0
+    rk = p[:, o:o + R * W].reshape(B, R, W); o += R * W
+    rb = jax.nn.softplus(p[:, o:o + R]) + 1.0; o += R
+    modes = jax.nn.softmax(p[:, o:o + 3 * R].reshape(B, R, 3), -1); o += 3 * R
+    wk = p[:, o:o + W].reshape(B, 1, W); o += W
+    wb = jax.nn.softplus(p[:, o]) + 1.0; o += 1
+    er = jax.nn.sigmoid(p[:, o:o + W]); o += W
+    wv = p[:, o:o + W]; o += W
+    free = jax.nn.sigmoid(p[:, o:o + R]); o += R
+    alloc_g = jax.nn.sigmoid(p[:, o]); o += 1
+    write_g = jax.nn.sigmoid(p[:, o])
+    return rk, rb, modes, wk, wb, er, wv, free, alloc_g, write_g
+
+
+def _dnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
+    mem = cfg.memory
+    R, W, N = mem.num_heads, mem.word_size, mem.num_slots
+    B = x.shape[0]
+    ctrl, h = lstm_step(params["lstm"], s.ctrl,
+                        jnp.concatenate([x, s.read_words.reshape(B, -1)], -1))
+    rk, rb, modes, wk, wb, er, wv, free, alloc_g, write_g = _parse_iface(
+        cfg, linear(params["iface"], h))
+
+    # Usage & allocation (Graves et al. 2016 eqs. 1-3, 7-9).
+    psi = jnp.prod(1.0 - free[..., None] * s.read_w, axis=1)       # retention
+    usage = (s.usage + s.write_w - s.usage * s.write_w) * psi
+    # Ascending sort via top_k of the negation (this jaxlib's sort grad is
+    # broken for batched gathers; top_k differentiates cleanly).
+    neg_sorted, free_list = jax.lax.top_k(-usage, N)
+    sorted_u = -neg_sorted
+    cprod = jnp.cumprod(jnp.concatenate([jnp.ones((B, 1)), sorted_u], -1)[:, :-1], -1)
+    alloc_sorted = (1.0 - sorted_u) * cprod
+    alloc = jnp.zeros_like(alloc_sorted).at[
+        jnp.arange(B)[:, None], free_list].set(alloc_sorted)
+
+    wc = addr.dense_read_weights(wk, s.memory, wb[:, None])[:, 0]  # (B,N)
+    write_w = write_g[:, None] * (alloc_g[:, None] * alloc
+                                  + (1 - alloc_g[:, None]) * wc)
+
+    memory = s.memory * (1.0 - write_w[..., None] * er[:, None, :]) \
+        + write_w[..., None] * wv[:, None, :]
+
+    # Temporal linkage (no gradients, as in the paper's SDNC; the dense DNC
+    # passes them but we match the paper's implementation choice).
+    ww = jax.lax.stop_gradient(write_w)
+    link = (1.0 - ww[:, :, None] - ww[:, None, :]) * s.link \
+        + ww[:, :, None] * s.prec[:, None, :]
+    link = link * (1.0 - jnp.eye(N)[None])
+    prec = (1.0 - ww.sum(-1, keepdims=True)) * s.prec + ww
+
+    fwd_w = jnp.einsum("bij,brj->bri", link, s.read_w)
+    bwd_w = jnp.einsum("bji,brj->bri", link, s.read_w)
+    cont_w = addr.dense_read_weights(rk, memory, rb)
+    read_w = (modes[..., 0:1] * bwd_w + modes[..., 1:2] * cont_w
+              + modes[..., 2:3] * fwd_w)
+    read_words = addr.dense_read(read_w, memory)
+    y = linear(params["out"], jnp.concatenate([h, read_words.reshape(B, -1)], -1))
+    return DNCState(memory=memory, usage=usage, read_w=read_w, read=None,
+                    read_words=read_words, write_w=write_w,
+                    write_idx=s.write_idx, prec=prec, prec_sp=None, link=link,
+                    n_mat=None, p_mat=None, ctrl=ctrl, step=s.step + 1), y
+
+
+# --------------------------------------------------------------------------
+# Sparse DNC
+# --------------------------------------------------------------------------
+
+def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
+    mem = cfg.memory
+    R, W, K, KL = mem.num_heads, mem.word_size, mem.k, cfg.k_l
+    B = x.shape[0]
+    ctrl, h = lstm_step(params["lstm"], s.ctrl,
+                        jnp.concatenate([x, s.read_words.reshape(B, -1)], -1))
+    rk, rb, modes, wk, wb, er, wv, free, alloc_g, write_g = _parse_iface(
+        cfg, linear(params["iface"], h))
+
+    # ---- sparse write, identical mechanism to SAM (Suppl. D.1) ----
+    lra = addr.least_recently_accessed(s.usage, 1)                  # (B,1)
+    prev_idx = s.read.indices.reshape(B, -1)                        # (B,R*K)
+    prev_w = s.read.weights.reshape(B, -1)
+    # Normalize previous read weights across heads for the interpolation.
+    prev_w = prev_w / (prev_w.sum(-1, keepdims=True) + 1e-8)
+    widx = jnp.concatenate([prev_idx, lra], axis=-1)                # (B,J)
+    ww = jnp.concatenate([
+        write_g[:, None] * alloc_g[:, None] * 0.0 + write_g[:, None]
+        * (1 - alloc_g[:, None]) * prev_w,
+        write_g[:, None] * alloc_g[:, None] * jnp.ones((B, 1))], axis=-1)
+
+    # Erase LRA then scatter-add write vector.
+    memory = addr.scatter_set_rows(s.memory, lra, jnp.zeros((B, 1, W)))
+    memory = addr.scatter_add_rows(memory, widx, ww[..., None] * wv[:, None, :])
+
+    # ---- sparse temporal linkage (Suppl. D eqs. 17-22), stop-gradient ----
+    ww_sg = jax.lax.stop_gradient(ww)
+    n_mat, p_mat, prec_sp = _update_linkage(s, widx, ww_sg, KL)
+
+    # ---- reads: content + sparse forward/backward link reads ----
+    cont = addr.sparse_read_exact(rk, memory, rb, K)
+    fwd_idx, fwd_w = _link_read(s.n_mat, s.read, K)
+    bwd_idx, bwd_w = _link_read(s.p_mat, s.read, K)
+
+    idx = jnp.concatenate([bwd_idx, cont.indices, fwd_idx], axis=-1)  # (B,R,3K)
+    wts = jnp.concatenate([modes[..., 0:1] * bwd_w,
+                           modes[..., 1:2] * cont.weights,
+                           modes[..., 2:3] * fwd_w], axis=-1)
+    top_w, pos = jax.lax.top_k(wts, K)
+    top_idx = jnp.take_along_axis(idx, pos, axis=-1)
+    top_w = top_w / (top_w.sum(-1, keepdims=True) + 1e-8)
+    words = addr.gather_rows(memory, top_idx)
+    read_words = jnp.einsum("brk,brkw->brw", top_w, words)
+    read = SparseRead(indices=top_idx, weights=top_w, words=read_words)
+
+    step = s.step + 1
+    usage = addr.update_last_access(s.usage, widx, ww, step, mem.delta)
+    usage = addr.update_last_access(usage, top_idx.reshape(B, -1),
+                                    top_w.reshape(B, -1), step, mem.delta)
+    y = linear(params["out"], jnp.concatenate([h, read_words.reshape(B, -1)], -1))
+    return DNCState(memory=memory, usage=usage, read_w=s.read_w, read=read,
+                    read_words=read_words, write_w=ww, write_idx=widx,
+                    prec=s.prec, prec_sp=prec_sp, link=s.link,
+                    n_mat=n_mat, p_mat=p_mat, ctrl=ctrl, step=step), y
+
+
+def _update_linkage(s: DNCState, widx, ww, k_l: int):
+    """Sparse precedence + N_t/P_t updates (eqs. 11, 19, 20)."""
+    B, J = widx.shape
+    prec = s.prec_sp
+    # N_t rows i∈widx: row_i <- (1-w_i)·row_i + w_i·p_{t-1}.
+    old_cols = jnp.take_along_axis(s.n_mat.cols, widx[..., None], axis=1)
+    old_vals = jnp.take_along_axis(s.n_mat.vals, widx[..., None], axis=1)
+    dec_vals = (1.0 - ww)[..., None] * old_vals
+    add_cols = jnp.broadcast_to(prec.idx[:, None, :], (B, J, k_l))
+    add_vals = ww[..., None] * prec.val[:, None, :]
+    m_cols, m_vals = _merge_rows(old_cols, dec_vals, add_cols, add_vals, k_l)
+    n_cols = s.n_mat.cols.at[jnp.arange(B)[:, None], widx].set(m_cols)
+    n_vals = s.n_mat.vals.at[jnp.arange(B)[:, None], widx].set(m_vals)
+
+    # P_t rows i∈supp(p_{t-1}): entries at cols j∈widx decay + new w_j·p_i.
+    p_rows = jnp.maximum(prec.idx, 0)                         # (B,KL)
+    old_cols_p = jnp.take_along_axis(s.p_mat.cols, p_rows[..., None], axis=1)
+    old_vals_p = jnp.take_along_axis(s.p_mat.vals, p_rows[..., None], axis=1)
+    # decay factor per existing entry: (1-w_col) if col written else 1.
+    eq = old_cols_p[..., :, None] == widx[:, None, None, :]   # (B,KL,KL,J)
+    wcol = jnp.einsum("bkcj,bj->bkc", eq.astype(ww.dtype), ww)
+    dec_vals_p = (1.0 - wcol) * old_vals_p
+    add_cols_p = jnp.broadcast_to(widx[:, None, :], (B, k_l, J))
+    add_vals_p = ww[:, None, :] * prec.val[..., None]
+    mp_cols, mp_vals = _merge_rows(old_cols_p, dec_vals_p, add_cols_p,
+                                   add_vals_p, k_l)
+    valid_row = (prec.idx >= 0)[..., None]
+    mp_cols = jnp.where(valid_row, mp_cols, old_cols_p)
+    mp_vals = jnp.where(valid_row, mp_vals, old_vals_p)
+    p_cols = s.p_mat.cols.at[jnp.arange(B)[:, None], p_rows].set(mp_cols)
+    p_vals = s.p_mat.vals.at[jnp.arange(B)[:, None], p_rows].set(mp_vals)
+
+    # Precedence: p_t = (1 - Σw) p_{t-1} + w_t (keep top-K_L).
+    dec = 1.0 - ww.sum(-1, keepdims=True)
+    new_idx, new_val = _merge_rows(prec.idx, dec * prec.val, widx, ww, k_l)
+    return (SparseMat(n_cols, n_vals), SparseMat(p_cols, p_vals),
+            SparseVec(new_idx, new_val))
+
+
+def _link_read(mat: SparseMat, read: SparseRead, k: int):
+    """f = N_t w^r restricted to sparse rows: gather rows at the previous read
+    indices, scale by weights, keep top-K entries (eq. 21/22)."""
+    B, R, K = read.indices.shape
+    kl = mat.cols.shape[-1]
+    rows_c = jnp.take_along_axis(
+        mat.cols, read.indices.reshape(B, -1)[..., None], axis=1)
+    rows_v = jnp.take_along_axis(
+        mat.vals, read.indices.reshape(B, -1)[..., None], axis=1)
+    rows_c = rows_c.reshape(B, R, K * kl)
+    rows_v = rows_v.reshape(B, R, K, kl) \
+        * read.weights[..., None]
+    rows_v = rows_v.reshape(B, R, K * kl)
+    score = jnp.where(rows_c >= 0, rows_v, -jnp.inf)
+    top_v, pos = jax.lax.top_k(score, k)
+    top_c = jnp.take_along_axis(rows_c, pos, axis=-1)
+    ok = jnp.isfinite(top_v)
+    return (jnp.where(ok, top_c, 0).astype(jnp.int32),
+            jnp.where(ok, top_v, 0.0))
+
+
+def dnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
+    if cfg.sparse:
+        return _sdnc_step(params, cfg, s, x)
+    return _dnc_step(params, cfg, s, x)
+
+
+def dnc_unroll(params, cfg: DNCConfig, state: DNCState, xs: jax.Array):
+    def body(s, x):
+        return dnc_step(params, cfg, s, x)
+    return jax.lax.scan(body, state, xs)

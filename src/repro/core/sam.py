@@ -1,0 +1,181 @@
+"""Sparse Access Memory (SAM) — the paper's core contribution (§3).
+
+A recurrent cell `(params, state, x_t) -> (state, y_t, deltas)` with:
+  * sparse content-based reads (top-K per head, exact or LSH-candidate),
+  * sparse writes to {previously-read ∪ least-recently-accessed} slots,
+  * usage tracking with the δ-threshold "steps since last access" statistic,
+  * fixed-shape LSH index carried as non-differentiable state.
+
+`deltas` records the sparse memory modifications so the unroll in
+`core/bptt.py` can roll the memory back during the backward pass (§3.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addressing as addr
+from repro.core import ann as ann_lib
+from repro.core.controller import linear, linear_init, lstm_init, lstm_step, lstm_zero_state
+from repro.core.types import (ANNState, ControllerConfig, MemoryConfig, SAMState,
+                              SparseRead, StepDeltas)
+
+
+@dataclasses.dataclass(frozen=True)
+class SAMConfig:
+    memory: MemoryConfig
+    controller: ControllerConfig
+
+    @property
+    def write_rows_per_head(self) -> int:
+        return self.memory.k + 1          # K previously-read + 1 LRA
+
+    @property
+    def total_write_rows(self) -> int:
+        return self.memory.num_heads * self.write_rows_per_head
+
+
+def init_params(key, cfg: SAMConfig):
+    mem, ctl = cfg.memory, cfg.controller
+    H, W = mem.num_heads, mem.word_size
+    keys = jax.random.split(key, 4)
+    ctrl_in = ctl.input_size + H * W
+    # Per head: query (W), beta (1), write word (W), alpha (1), gamma (1).
+    iface_out = H * (2 * W + 3)
+    params = {
+        "lstm": lstm_init(keys[0], ctrl_in, ctl.hidden_size),
+        "iface": linear_init(keys[1], ctl.hidden_size, iface_out),
+        "out": linear_init(keys[2], ctl.hidden_size + H * W, ctl.output_size),
+    }
+    if mem.ann == "lsh":
+        params["lsh_planes"] = jax.lax.stop_gradient(ann_lib.lsh_planes(keys[3], mem))
+    return params
+
+
+def init_state(batch: int, cfg: SAMConfig, params=None) -> SAMState:
+    mem, ctl = cfg.memory, cfg.controller
+    H, K, W, N = mem.num_heads, mem.k, mem.word_size, mem.num_slots
+    memory = jnp.zeros((batch, N, W))
+    # Stagger initial last-access so the LRA ordering is well defined.
+    last_access = jnp.broadcast_to(
+        -jnp.arange(N, dtype=jnp.int32)[None, :], (batch, N))
+    read = SparseRead(
+        indices=jnp.zeros((batch, H, K), jnp.int32),
+        weights=jnp.zeros((batch, H, K)),
+        words=jnp.zeros((batch, H, W)),
+    )
+    ann_state: Optional[ANNState] = None
+    if mem.ann == "lsh":
+        ann_state = ann_lib.ann_init(batch, mem)
+    return SAMState(memory=memory, last_access=last_access, read=read,
+                    ctrl=lstm_zero_state(batch, ctl.hidden_size),
+                    step=jnp.zeros((), jnp.int32), ann=ann_state)
+
+
+def _interface(params, cfg: SAMConfig, h: jax.Array):
+    """Split the controller projection p_t = (q, beta, a, alpha, gamma)."""
+    mem = cfg.memory
+    H, W = mem.num_heads, mem.word_size
+    p = linear(params["iface"], h).reshape(h.shape[0], H, 2 * W + 3)
+    q = p[..., :W]
+    a = p[..., W:2 * W]
+    beta = jax.nn.softplus(p[..., 2 * W]) + 1.0
+    alpha = jax.nn.sigmoid(p[..., 2 * W + 1])
+    gamma = jax.nn.sigmoid(p[..., 2 * W + 2])
+    return q, a, beta, alpha, gamma
+
+
+def write_plan(cfg: SAMConfig, prev_read: SparseRead, lra_idx: jax.Array,
+               alpha: jax.Array, gamma: jax.Array):
+    """Eq. (5): w^W = α (γ w^R_{t-1} + (1-γ) I^U), flattened to (B, H*(K+1))."""
+    B, H, K = prev_read.indices.shape
+    w_read = alpha[..., None] * gamma[..., None] * prev_read.weights   # (B,H,K)
+    w_lra = (alpha * (1.0 - gamma))[..., None]                          # (B,H,1)
+    idx = jnp.concatenate([prev_read.indices, lra_idx[..., None]], axis=-1)
+    w = jnp.concatenate([w_read, w_lra], axis=-1)                       # (B,H,K+1)
+    return idx.reshape(B, -1), w.reshape(B, -1), idx, w
+
+
+def apply_write(memory: jax.Array, write_idx_flat: jax.Array,
+                write_w: jax.Array, a: jax.Array, lra_idx: jax.Array,
+                cfg: SAMConfig):
+    """Erase the LRA rows (R_t = I^U 1^T) then scatter-add the outer product
+    A_t = w^W a^T restricted to the K+1 touched rows per head."""
+    B, H, _ = a.shape
+    Kp1 = cfg.write_rows_per_head
+    # Erase: zero LRA rows.
+    zeros = jnp.zeros((B, H, memory.shape[-1]), memory.dtype)
+    memory = addr.scatter_set_rows(memory, lra_idx, zeros)
+    # Add: per head, rows = w (B,H,K+1) ⊗ a (B,H,W).
+    w = write_w.reshape(B, H, Kp1)
+    add_rows = w[..., None] * a[:, :, None, :]                 # (B,H,K+1,W)
+    memory = addr.scatter_add_rows(memory, write_idx_flat,
+                                   add_rows.reshape(B, H * Kp1, -1))
+    return memory
+
+
+def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
+             *, collect_deltas: bool = False):
+    """One SAM time step. Returns (new_state, y_t[, deltas])."""
+    mem = cfg.memory
+    H, K = mem.num_heads, mem.k
+    B = x.shape[0]
+
+    ctrl_in = jnp.concatenate([x, state.read.words.reshape(B, -1)], axis=-1)
+    ctrl, h = lstm_step(params["lstm"], state.ctrl, ctrl_in)
+    q, a, beta, alpha, gamma = _interface(params, cfg, h)
+
+    # ---- write (uses the previous step's read locations, eq. 5) ----
+    lra_idx = addr.least_recently_accessed(state.last_access, H)   # (B, H)
+    widx_flat, ww_flat, widx, ww = write_plan(cfg, state.read, lra_idx,
+                                              alpha, gamma)
+    deltas = None
+    if collect_deltas:
+        deltas = StepDeltas(write_idx=widx_flat,
+                            old_rows=addr.gather_rows(state.memory, widx_flat))
+    memory = apply_write(state.memory, widx_flat, ww_flat, a, lra_idx, cfg)
+
+    # ---- read (content-based, sparse) ----
+    if mem.ann == "lsh":
+        planes = params["lsh_planes"]
+        cand = ann_lib.ann_query(planes, state.ann, q, mem)
+        # Always include the freshly written rows as candidates.
+        cand = jnp.concatenate(
+            [cand, jnp.broadcast_to(widx_flat[:, None, :],
+                                    (B, H, widx_flat.shape[-1]))], axis=-1)
+        read = addr.sparse_read_candidates(q, memory, beta, K, cand)
+        ann_state = ann_lib.ann_insert(
+            planes, state.ann, widx_flat,
+            jax.lax.stop_gradient(addr.gather_rows(memory, widx_flat)), mem)
+    else:
+        read = addr.sparse_read_exact(q, memory, beta, K)
+        ann_state = state.ann
+
+    # ---- usage (U^(2): step of last non-negligible access) ----
+    step = state.step + 1
+    la = addr.update_last_access(state.last_access, widx_flat, ww_flat, step,
+                                 mem.delta)
+    la = addr.update_last_access(la, read.indices.reshape(B, -1),
+                                 read.weights.reshape(B, -1), step, mem.delta)
+
+    y = linear(params["out"], jnp.concatenate([h, read.words.reshape(B, -1)],
+                                              axis=-1))
+    new_state = SAMState(memory=memory, last_access=la, read=read, ctrl=ctrl,
+                         step=step, ann=ann_state)
+    if collect_deltas:
+        return new_state, y, deltas
+    return new_state, y
+
+
+def sam_unroll(params, cfg: SAMConfig, state: SAMState, xs: jax.Array):
+    """Plain scan unroll (checkpoints the full state incl. memory — the naive
+    O(T·N·W) baseline). xs: (T, B, D)."""
+
+    def body(s, x):
+        s, y = sam_step(params, cfg, s, x)
+        return s, y
+
+    return jax.lax.scan(body, state, xs)

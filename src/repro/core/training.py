@@ -1,0 +1,133 @@
+"""Training harness for the paper's synthetic tasks (§4.2/§4.3): builds any
+of {SAM, SAM-ANN, DAM, NTM, DNC, SDNC, LSTM} behind one interface, trains
+with RMSProp (paper Suppl. C) on sigmoid cross-entropy over output bits."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dense as dense_lib
+from repro.core import dnc as dnc_lib
+from repro.core import sam as sam_lib
+from repro.core.bptt import sam_unroll_sparse_bptt
+from repro.core.types import ControllerConfig, MemoryConfig
+from repro.data.curriculum import Curriculum
+from repro.data.tasks import TASK_REGISTRY
+from repro.optim import optimizers as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    kind: str                     # sam | sam_ann | dam | ntm | dnc | sdnc | lstm
+    memory: MemoryConfig
+    controller: ControllerConfig
+    sparse_bptt: bool = True      # SAM: use the O(T·K·W) unroll
+
+
+def build_model(spec: ModelSpec):
+    """Returns (init_params(key), init_state(batch), unroll(params, state, xs))."""
+    kind = spec.kind
+    if kind in ("sam", "sam_ann"):
+        mem = dataclasses.replace(spec.memory,
+                                  ann="lsh" if kind == "sam_ann" else "exact")
+        cfg = sam_lib.SAMConfig(mem, spec.controller)
+        unroll = (sam_unroll_sparse_bptt if spec.sparse_bptt
+                  else sam_lib.sam_unroll)
+        return (lambda key: sam_lib.init_params(key, cfg),
+                lambda b: sam_lib.init_state(b, cfg),
+                lambda p, s, xs: unroll(p, cfg, s, xs)
+                if spec.sparse_bptt else sam_lib.sam_unroll(p, cfg, s, xs))
+    if kind in ("dam", "ntm"):
+        cfg = dense_lib.DenseConfig(spec.memory, spec.controller, model=kind)
+        return (lambda key: dense_lib.init_params(key, cfg),
+                lambda b: dense_lib.init_state(b, cfg),
+                lambda p, s, xs: dense_lib.dense_unroll(p, cfg, s, xs))
+    if kind in ("dnc", "sdnc"):
+        cfg = dnc_lib.DNCConfig(spec.memory, spec.controller,
+                                sparse=(kind == "sdnc"))
+        return (lambda key: dnc_lib.init_params(key, cfg),
+                lambda b: dnc_lib.init_state(b, cfg),
+                lambda p, s, xs: dnc_lib.dnc_unroll(p, cfg, s, xs))
+    if kind == "lstm":
+        return (lambda key: dense_lib.lstm_baseline_init(key, spec.controller),
+                lambda b: b,
+                lambda p, b, xs: dense_lib.lstm_baseline_unroll(
+                    p, spec.controller, b, xs))
+    raise ValueError(kind)
+
+
+def bits_loss(logits, targets, mask):
+    """Sigmoid CE per output bit, masked to the answer span.
+
+    logits/targets: (T, B, bits); mask: (T, B)."""
+    ce = jnp.maximum(logits, 0) - logits * targets \
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return (ce.sum(-1) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def bits_error(logits, targets, mask):
+    pred = (logits > 0).astype(jnp.float32)
+    err = (jnp.abs(pred - targets).sum(-1) * mask).sum()
+    return err / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_task_train_step(spec: ModelSpec, lr: float = 1e-4):
+    init_p, init_s, unroll = build_model(spec)
+
+    def step(params, opt_state, inputs, targets, mask):
+        # time-major
+        xs = jnp.moveaxis(inputs, 1, 0)
+        ts = jnp.moveaxis(targets, 1, 0)
+        ms = jnp.moveaxis(mask, 1, 0)
+
+        def loss_fn(p):
+            state = init_s(inputs.shape[0])
+            _, ys = unroll(p, state, xs)
+            return bits_loss(ys, ts, ms), bits_error(ys, ts, ms)
+
+        (l, err), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, _ = opt.clip_by_global_norm(grads, 10.0)
+        params, opt_state = opt.rmsprop_update(params, grads, opt_state,
+                                               lr=lr)
+        return params, opt_state, l, err
+
+    return init_p, init_s, step
+
+
+def train_task(spec: ModelSpec, task: str, *, steps: int = 200,
+               batch: int = 8, level: int = 4, max_level: int = 8,
+               bits: int = 8, lr: float = 1e-4, seed: int = 0,
+               curriculum: Curriculum = None, log_every: int = 25,
+               verbose: bool = False):
+    """Train one model on one task; returns the loss/error history."""
+    task_fn = TASK_REGISTRY[task]
+    init_p, init_s, step = make_task_train_step(spec, lr)
+    key = jax.random.PRNGKey(seed)
+    params = init_p(key)
+    opt_state = opt.rmsprop_init(params)
+    jstep = jax.jit(step, donate_argnums=(0, 1))
+    rng = np.random.default_rng(seed)
+
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        lvl = curriculum.sample_level(rng) if curriculum else level
+        inputs, targets, mask = task_fn(sub, batch, lvl, max_level, bits)
+        params, opt_state, l, err = jstep(params, opt_state, inputs,
+                                          targets, mask)
+        lf, ef = float(l), float(err)
+        history.append({"step": i, "loss": lf, "err": ef,
+                        "level": int(curriculum.level) if curriculum else lvl})
+        if curriculum:
+            curriculum.update(ef)
+        if verbose and i % log_every == 0:
+            print(f"  [{spec.kind}/{task}] step {i} loss={lf:.4f} "
+                  f"err={ef:.3f} ({time.time()-t0:.0f}s)")
+    return params, history

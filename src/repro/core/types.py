@@ -1,0 +1,106 @@
+"""Shared config/state types for the memory-augmented cores.
+
+All state is fixed-shape and jit/scan friendly. Sparse quantities use the
+fixed-K "ELL" layout: an int32 index tensor plus a float value tensor of the
+same leading shape (see DESIGN.md §2 — CSR does not map to TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryConfig:
+    """Configuration of the external memory (paper §3)."""
+
+    num_slots: int = 1024          # N
+    word_size: int = 32            # M (word size; `W` in code)
+    num_heads: int = 4             # access heads (paper Suppl. C: 4)
+    k: int = 4                     # K non-zero reads per head (paper: 4 or 8)
+    delta: float = 0.005           # usage threshold δ (paper §3.2)
+    # ANN backend: 'exact' (linear re-rank, still sparse-gradient) or 'lsh'.
+    ann: str = "exact"
+    lsh_tables: int = 4
+    lsh_bits: int = 8              # buckets per table = 2**bits
+    lsh_bucket_size: int = 32
+    # Dense-model (DAM/NTM/DNC) usage discount λ.
+    usage_discount: float = 0.99
+
+    @property
+    def candidates(self) -> int:
+        return self.lsh_tables * self.lsh_bucket_size
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    input_size: int = 8
+    hidden_size: int = 100         # paper Suppl. C: 100 hidden units
+    output_size: int = 8
+
+
+class LSTMState(NamedTuple):
+    h: jax.Array  # (B, H)
+    c: jax.Array  # (B, H)
+
+
+class ANNState(NamedTuple):
+    """Fixed-shape LSH index state (DESIGN.md §2).
+
+    buckets: (B, T, n_buckets, bucket_size) int32 slot-indices, -1 = empty.
+    cursor:  (B, T, n_buckets) int32 ring-insert position per bucket.
+    """
+
+    buckets: jax.Array
+    cursor: jax.Array
+
+
+class SparseRead(NamedTuple):
+    """Result of a sparse content-based read."""
+
+    indices: jax.Array   # (B, H, K) int32
+    weights: jax.Array   # (B, H, K) float
+    words: jax.Array     # (B, H, W) float — the read vectors r_t
+
+
+class SAMState(NamedTuple):
+    memory: jax.Array        # (B, N, W)
+    last_access: jax.Array   # (B, N) int32 — step of last non-negligible access
+    read: SparseRead         # previous step's read (for the write interpolation)
+    ctrl: LSTMState
+    step: jax.Array          # () int32
+    ann: Optional[ANNState]  # None in 'exact' mode
+
+
+class DenseState(NamedTuple):
+    """State for DAM / NTM (dense weightings)."""
+
+    memory: jax.Array        # (B, N, W)
+    usage: jax.Array         # (B, N) float — discounted usage (DAM) / unused (NTM)
+    read_w: jax.Array        # (B, H, N) previous read weights
+    read_words: jax.Array    # (B, H, W)
+    write_w: jax.Array       # (B, H, N) previous write weights (NTM location addressing)
+    ctrl: LSTMState
+    step: jax.Array
+
+
+class StepDeltas(NamedTuple):
+    """Sparse modifications recorded by one SAM step — everything needed to
+    roll the memory back during the backward pass (paper §3.4 / Suppl. Fig 5)."""
+
+    write_idx: jax.Array     # (B, Hw) int32 rows touched by the write
+    old_rows: jax.Array      # (B, Hw, W) their pre-write contents
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))
+
+
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)

@@ -1,0 +1,6 @@
+from repro.data.tasks import (copy_task, associative_recall_task,
+                              priority_sort_task, TASK_REGISTRY)
+from repro.data.curriculum import Curriculum
+from repro.data.omniglot import omniglot_episode
+from repro.data.babi import babi_lite_batch, BABI_VOCAB
+from repro.data.tokens import lm_token_batches

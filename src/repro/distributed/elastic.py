@@ -1,0 +1,30 @@
+"""Elastic scaling: re-shard a checkpointed state onto a different mesh.
+
+Checkpoints store plain host arrays (checkpoint/ckpt.py), so scaling a job
+up or down is: build the new mesh, derive new NamedShardings from the same
+logical-axis tree, and `device_put` each restored leaf with its new
+sharding. Batch sizes re-derive from the new data-parallel degree."""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import logical_spec, mesh_rules
+from jax.sharding import NamedSharding
+
+
+def reshard_tree(tree, axes_tree, new_mesh):
+    """Re-shard every leaf of `tree` per its logical axes on `new_mesh`."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    with mesh_rules(new_mesh):
+        def place(ax, leaf):
+            spec = logical_spec(ax, leaf.shape, new_mesh)
+            return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+        return jax.tree.map(place, axes_tree, tree, is_leaf=is_axes)
+
+
+def rescale_batch(global_batch: int, old_data_degree: int,
+                  new_data_degree: int) -> int:
+    """Keep per-device batch constant across a scale event."""
+    per_dev = max(1, global_batch // old_data_degree)
+    return per_dev * new_data_degree

@@ -1,0 +1,110 @@
+"""Fault tolerance + straggler mitigation for the training loop.
+
+Single-process container, so host failures are *simulated*: the contract and
+control flow are real (and tested), the failure injection is a hook.
+
+Components
+----------
+`ResilientLoop`   — wraps the step function with: periodic async checkpoints,
+                    automatic restore-on-restart, bounded retry on transient
+                    step failure (preemption / ICI timeout style errors),
+                    and a step-deadline straggler detector.
+`StragglerPolicy` — synchronous-SPMD straggler handling: a step exceeding
+                    `deadline_factor` × median step time is logged; after
+                    `max_slow_steps` consecutive slow steps the loop
+                    requests a *checkpoint-and-reshard* (drop to a smaller
+                    healthy mesh via distributed/elastic.py). On real
+                    hardware the reshard is a job-restart with a new device
+                    set; here it is exercised by tests with a mock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from repro.checkpoint import AsyncCheckpointer, restore_checkpoint
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    deadline_factor: float = 3.0
+    max_slow_steps: int = 5
+    window: int = 32
+
+    def __post_init__(self):
+        self._times: list = []
+        self._slow = 0
+
+    def observe(self, dt: float) -> str:
+        """Returns 'ok' | 'slow' | 'reshard'."""
+        self._times.append(dt)
+        self._times = self._times[-self.window:]
+        med = sorted(self._times)[len(self._times) // 2]
+        if len(self._times) >= 8 and dt > self.deadline_factor * med:
+            self._slow += 1
+            if self._slow >= self.max_slow_steps:
+                self._slow = 0
+                return "reshard"
+            return "slow"
+        self._slow = 0
+        return "ok"
+
+
+class TransientError(RuntimeError):
+    """Marker for retryable failures (preemption, collective timeout)."""
+
+
+@dataclasses.dataclass
+class ResilientLoop:
+    step_fn: Callable                   # (state, batch) -> (state, metrics)
+    ckpt_dir: str
+    ckpt_every: int = 100
+    max_retries: int = 3
+    straggler: StragglerPolicy = dataclasses.field(
+        default_factory=StragglerPolicy)
+    on_reshard: Optional[Callable] = None
+    failure_hook: Optional[Callable] = None      # test injection point
+
+    def __post_init__(self):
+        self._ckpt = AsyncCheckpointer(self.ckpt_dir)
+
+    def restore_or(self, state_template):
+        state, step = restore_checkpoint(self.ckpt_dir, state_template)
+        if state is None:
+            return state_template, 0
+        return state, step + 1
+
+    def run(self, state, batches, start_step: int, num_steps: int,
+            log_every: int = 50):
+        metrics_log = []
+        step = start_step
+        while step < num_steps:
+            batch = next(batches)
+            retries = 0
+            while True:
+                t0 = time.time()
+                try:
+                    if self.failure_hook is not None:
+                        self.failure_hook(step)
+                    state, metrics = self.step_fn(state, batch)
+                    break
+                except TransientError:
+                    retries += 1
+                    if retries > self.max_retries:
+                        # unrecoverable: persist state and re-raise
+                        self._ckpt.save(step, state)
+                        raise
+            dt = time.time() - t0
+            verdict = self.straggler.observe(dt)
+            if verdict == "reshard" and self.on_reshard is not None:
+                self._ckpt.save(step, state)
+                state = self.on_reshard(state)
+            if step % self.ckpt_every == 0 and step > start_step:
+                self._ckpt.save(step, state)
+            if step % log_every == 0:
+                metrics_log.append((step, metrics))
+            step += 1
+        self._ckpt.save(step - 1, state)
+        self._ckpt.wait()
+        return state, metrics_log

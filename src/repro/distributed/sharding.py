@@ -1,0 +1,149 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", "ff", "vocab", "experts", ...). A rule table maps logical names to
+physical mesh axes. Outside a mesh context every annotation is a no-op, so
+the same model code runs in single-device tests and in the 512-chip dry-run.
+
+The rule table is the primary perf-hillclimbing lever (EXPERIMENTS.md §Perf):
+swapping e.g. ``("embed", "data")`` for ``("embed", None)`` flips between
+FSDP and pure replication without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical → physical rules. First matching rule wins; the physical
+# entry may be a tuple (sharded over several mesh axes) or None (replicated).
+DEFAULT_RULES: tuple[tuple[str, object], ...] = (
+    ("batch", ("pod", "data")),       # data parallelism (pod axis if present)
+    ("seq", None),                     # sequence: replicated by default
+    ("kv_seq", "model"),               # decode KV cache length
+    ("embed", "data"),                 # FSDP: weight d_model dim over data
+    ("heads", "model"),                # tensor parallel attention heads
+    # batch-sharded attention core: tried for archs whose head count doesn't
+    # divide the model axis; REFUTED in §Perf A1 (GSPMD falls back to
+    # replicate-then-partition, collective term exploded 58×). Kept inert —
+    # head-group padding (ModelConfig.pad_head_groups) is the accepted fix.
+    ("attn_batch", ("pod", "data")),
+    ("kv_heads", "model"),
+    ("head_dim", None),
+    ("ff", "model"),                   # tensor parallel FFN hidden
+    ("vocab", "model"),                # sharded logits
+    ("vocab_table", None),             # embedding table: replicated vocab...
+    ("embed_table", "model"),          # ...width over model => local gather
+    ("experts", "model"),              # expert parallel
+    ("expert_cap", None),
+    ("layers", None),                  # scanned layer dim
+    ("kv_lora", None),
+    ("mem_slots", "model"),            # SAM memory slots: sharded over model
+    ("mem_word", None),
+    ("state", None),
+)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules = DEFAULT_RULES
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh: Optional[Mesh], rules: Sequence[tuple[str, object]] = None):
+    """Activate a mesh + rule table for logical sharding annotations."""
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    if rules is not None:
+        _CTX.rules = tuple(rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _resolve(logical: Optional[str], mesh: Mesh, dim_size: int):
+    """Map one logical axis to mesh axes, dropping axes that don't divide."""
+    if logical is None:
+        return None
+    phys = None
+    for name, p in _CTX.rules:
+        if name == logical:
+            phys = p
+            break
+    if phys is None:
+        return None
+    axes = (phys,) if isinstance(phys, str) else tuple(phys)
+    # Keep only axes present in the mesh; verify divisibility of the product.
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if dim_size % total != 0:
+        # Try progressively dropping trailing axes until it divides.
+        while axes:
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            if dim_size % total == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def logical_spec(logical_axes: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Optional[Mesh] = None) -> P:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return P()
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used: set = set()
+    entries = []
+    for ax, size in zip(logical_axes, shape):
+        r = _resolve(ax, mesh, size)
+        # A mesh axis may appear at most once in a PartitionSpec.
+        flat = (r,) if isinstance(r, str) else (r or ())
+        if any(a in used for a in flat):
+            r = None
+        else:
+            used.update(flat)
+        entries.append(r)
+    return P(*entries)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate an intermediate with logical axes; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = logical_spec(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, logical_axes: Sequence[Optional[str]],
+                   shape: Sequence[int]) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(logical_axes, shape, mesh))
+
+
+def spec_tree_from_logical(mesh: Mesh, logical_tree, shape_tree):
+    """Map a pytree of logical-axis tuples + shapes to NamedShardings."""
+    return jax.tree.map(
+        lambda axes, shp: named_sharding(mesh, axes, shp),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

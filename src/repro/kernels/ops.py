@@ -1,0 +1,47 @@
+"""Public jit'd wrappers for the Pallas kernels with oracle fallback.
+
+`use_pallas=False` (or unsupported shapes) routes to the pure-jnp reference —
+useful on CPU where interpret-mode Pallas is slow for large N. On TPU the
+Pallas path is the production one."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.lsh_hash import lsh_hash as lsh_hash_pallas
+from repro.kernels.scatter_rows import scatter_rows as scatter_rows_pallas
+from repro.kernels.topk_read import topk_read as topk_read_pallas
+from repro.kernels.usage_argmin import usage_argmin as usage_argmin_pallas
+
+
+def topk_read(q, mem, k: int, *, use_pallas: bool = False,
+              block_n: int = 512, interpret: bool = True):
+    if use_pallas and mem.shape[1] % block_n == 0:
+        return topk_read_pallas(q, mem, k=k, block_n=block_n,
+                                interpret=interpret)
+    return ref.topk_read_ref(q, mem, k)
+
+
+def scatter_rows(mem, idx, rows, mode: str = "add", *,
+                 use_pallas: bool = False, interpret: bool = True):
+    if use_pallas:
+        return scatter_rows_pallas(mem, idx, rows, mode=mode,
+                                   interpret=interpret)
+    return ref.scatter_rows_ref(mem, idx, rows, mode)
+
+
+def lsh_hash(x, planes, *, use_pallas: bool = False, interpret: bool = True):
+    if use_pallas:
+        shape = x.shape
+        out = lsh_hash_pallas(x.reshape(-1, shape[-1]), planes,
+                              interpret=interpret)
+        return out.reshape(shape[:-1] + (planes.shape[0],))
+    return ref.lsh_hash_ref(x, planes)
+
+
+def usage_argmin(last_access, *, use_pallas: bool = False,
+                 interpret: bool = True):
+    if use_pallas:
+        return usage_argmin_pallas(last_access, interpret=interpret)
+    return ref.usage_argmin_ref(last_access)

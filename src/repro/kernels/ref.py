@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_read_ref(q: jax.Array, mem: jax.Array, k: int):
+    """Content-based top-K addressing oracle.
+
+    q: (B, H, W), mem: (B, N, W) -> (vals (B,H,K), idx (B,H,K)) by cosine
+    similarity (descending)."""
+    qn = q * jax.lax.rsqrt(jnp.sum(q * q, -1, keepdims=True) + 1e-6)
+    mn = mem * jax.lax.rsqrt(jnp.sum(mem * mem, -1, keepdims=True) + 1e-6)
+    sims = jnp.einsum("bhw,bnw->bhn", qn, mn)
+    return jax.lax.top_k(sims, k)
+
+
+def scatter_rows_ref(mem: jax.Array, idx: jax.Array, rows: jax.Array,
+                     mode: str = "add"):
+    """mem: (B,N,W), idx: (B,J), rows: (B,J,W). Sequential semantics for
+    duplicate indices in 'set' mode (later j wins)."""
+    b = jnp.arange(mem.shape[0])[:, None]
+    if mode == "add":
+        return mem.at[b, idx].add(rows)
+    return mem.at[b, idx].set(rows)
+
+
+def lsh_hash_ref(x: jax.Array, planes: jax.Array):
+    """x: (..., W), planes: (T, bits, W) -> bucket ids (..., T) int32."""
+    proj = jnp.einsum("...w,tbw->...tb", x, planes)
+    bits = (proj > 0).astype(jnp.int32)
+    weights = 2 ** jnp.arange(planes.shape[1], dtype=jnp.int32)
+    return (bits * weights).sum(axis=-1)
+
+
+def usage_argmin_ref(last_access: jax.Array):
+    """last_access: (B, N) -> LRA index per batch (B,) int32 (lowest index
+    wins ties)."""
+    return jnp.argmin(last_access, axis=-1).astype(jnp.int32)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: sparse row scatter (SAM §3.2 write path).
+
+The SAM write touches H·(K+1) rows of a large (N, W) memory. A dense
+XLA scatter materializes index tensors in HBM; here each grid step uses
+scalar-prefetched row indices to map a (1, W) memory block directly, so the
+write is J · W bytes of traffic — O(1) in N, the paper's claim.
+
+Sequential grid semantics on TPU make duplicate indices well-defined:
+'add' accumulates, 'set' takes the last write.
+
+Uses ``input_output_aliasing`` so the memory buffer is updated in place —
+the functional-JAX analogue of the paper's in-place write + rollback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, mem_ref, rows_ref, out_ref, *, mode: str):
+    del idx_ref  # only used by the index maps
+    if mode == "add":
+        out_ref[...] = mem_ref[...] + rows_ref[...]
+    else:
+        out_ref[...] = rows_ref[...]
+
+
+def _combine_duplicates(idx: jax.Array, rows: jax.Array, dummy: int):
+    """Sum rows sharing an index into the first occurrence; redirect the
+    remaining duplicates to a dummy slot. O(J²) — J is H·(K+1) ≈ 20."""
+    eq = idx[:, :, None] == idx[:, None, :]                      # (B,J,J)
+    first = jnp.argmax(eq, axis=-1) == jnp.arange(idx.shape[-1])
+    combined = jnp.einsum("bjk,bkw->bjw", eq.astype(rows.dtype), rows)
+    rows = jnp.where(first[..., None], combined, 0.0)
+    idx = jnp.where(first, idx, dummy)
+    return idx, rows
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def scatter_rows(mem: jax.Array, idx: jax.Array, rows: jax.Array,
+                 *, mode: str = "add", interpret: bool = True):
+    """mem: (B, N, W), idx: (B, J) int32, rows: (B, J, W) -> updated memory.
+
+    'add' accumulates duplicate indices; 'set' takes the last write."""
+    B, N, W = mem.shape
+    _, J = idx.shape
+    if mode == "add":
+        # Read-modify-write of a freshly written block would see stale data
+        # under in/out aliasing, so make the touched row set unique first.
+        mem = jnp.pad(mem, ((0, 0), (0, 1), (0, 0)))
+        idx, rows = _combine_duplicates(idx, rows, dummy=N)
+        out = _scatter_unique(mem, idx, rows, mode=mode, interpret=interpret)
+        return out[:, :N]
+    return _scatter_unique(mem, idx, rows, mode=mode, interpret=interpret)
+
+
+def _scatter_unique(mem: jax.Array, idx: jax.Array, rows: jax.Array,
+                    *, mode: str, interpret: bool):
+    B, N, W = mem.shape
+    _, J = idx.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, J),
+        in_specs=[
+            pl.BlockSpec((1, 1, W), lambda b, j, idx_ref: (b, idx_ref[b, j], 0)),
+            pl.BlockSpec((1, 1, W), lambda b, j, idx_ref: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, W),
+                               lambda b, j, idx_ref: (b, idx_ref[b, j], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(mem.shape, mem.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(idx, mem, rows)

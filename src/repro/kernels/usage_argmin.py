@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: least-recently-accessed slot (SAM §3.2, eq. 6).
+
+Streams the (N,) last-access array through VMEM tiles keeping a running
+(min, argmin) in SMEM scratch across the sequential grid — the TPU-native
+replacement for the paper's circular-linked-list LRA ring (DESIGN.md §2).
+Ties break toward the lowest index, matching the reference."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u_ref, idx_ref, val_ref, *, block_n: int):
+    t = pl.program_id(1)
+    u = u_ref[0, :].astype(jnp.float32)
+    j = jnp.argmin(u)
+    v = u[j]
+    idx = (t * block_n + j).astype(jnp.int32)
+
+    @pl.when(t == 0)
+    def _():
+        idx_ref[0, 0] = idx
+        val_ref[0, 0] = v
+
+    @pl.when(t > 0)
+    def _():
+        better = v < val_ref[0, 0]
+        idx_ref[0, 0] = jnp.where(better, idx, idx_ref[0, 0])
+        val_ref[0, 0] = jnp.where(better, v, val_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def usage_argmin(last_access: jax.Array, *, block_n: int = 1024,
+                 interpret: bool = True):
+    """last_access: (B, N) -> (B,) int32 index of the minimum."""
+    B, N = last_access.shape
+    bn = min(block_n, N)
+    assert N % bn == 0, (N, bn)
+    idx, _ = pl.pallas_call(
+        functools.partial(_kernel, block_n=bn),
+        grid=(B, N // bn),
+        in_specs=[pl.BlockSpec((1, bn), lambda b, t: (b, t))],
+        out_specs=[pl.BlockSpec((1, 1), lambda b, t: (b, 0)),
+                   pl.BlockSpec((1, 1), lambda b, t: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((B, 1), jnp.float32)],
+        interpret=interpret,
+    )(last_access)
+    return idx[:, 0]

@@ -1,0 +1,269 @@
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on
+the production mesh and record memory/cost/collective analysis.
+
+MUST be the first two lines (jax locks the device count on first init):"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import (DEFAULT_RULES, logical_spec,
+                                        mesh_rules, named_sharding)
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.steps import make_serve_step, make_train_step, make_prefill_step
+from repro.models import lm
+from repro.optim import optimizers as opt
+
+_AXES_LEAF = lambda x: isinstance(x, tuple) and all(
+    isinstance(e, (str, type(None))) for e in x)
+
+# Per-(arch, shape) gradient-accumulation (memory-term tuning, §Perf).
+ACCUM = {
+    ("mistral_large_123b", "train_4k"): 16,
+    ("deepseek_v2_236b", "train_4k"): 8,
+    ("llama4_maverick_400b_a17b", "train_4k"): 8,
+    ("yi_34b", "train_4k"): 4,
+    ("rwkv6_7b", "train_4k"): 2,
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+                "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}|"
+                        r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str):
+    """Sum data moved per collective type from the per-device HLO module.
+
+    Cost model (per device, n = participants):
+      all-reduce 2B(n-1)/n · all-gather B(n-1)/n · reduce-scatter B(n-1) ·
+      all-to-all B(n-1)/n · collective-permute B."""
+    stats = {}
+    total_moved = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        b = _shape_bytes(dtype, dims)
+        g = _GROUPS_RE.search(line)
+        n = 2
+        if g:
+            if g.group(1):
+                n = len(g.group(1).split(","))
+            else:
+                n = int(g.group(3))
+        if kind == "all-reduce":
+            moved = 2.0 * b * (n - 1) / n
+        elif kind == "all-gather":
+            moved = b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            moved = b * (n - 1)
+        elif kind == "all-to-all":
+            moved = b * (n - 1) / n
+        else:
+            moved = float(b)
+        s = stats.setdefault(kind, {"count": 0, "bytes": 0.0, "moved": 0.0})
+        s["count"] += 1
+        s["bytes"] += b
+        s["moved"] += moved
+        total_moved += moved
+    return stats, total_moved
+
+
+def _shardings_for(mesh, axes_tree, abstract_tree):
+    return jax.tree.map(
+        lambda ax, sds: named_sharding(mesh, ax, sds.shape),
+        axes_tree, abstract_tree, is_leaf=_AXES_LEAF)
+
+
+def _memory_analysis_dict(compiled):
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               rules=None, accum=None, donate: bool = True,
+               cfg_overrides=None, verbose: bool = True):
+    """Lower + compile one dry-run cell; return the analysis record."""
+    cfg = get_config(arch)
+    shape = specs_lib.get_shape(shape_name)
+    if shape.kind != "train":
+        # Serving keeps no optimizer state: store weights in the compute
+        # dtype (halves weight all-gathers + HBM reads — §Perf C4/B3).
+        cfg = dataclasses.replace(cfg, param_dtype=cfg.compute_dtype)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    if shape.name == "long_500k" and not specs_lib.long_context_ok(cfg):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "skipped": "full-attention arch: 500k dense decode cache "
+                           "excluded by design (DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    if accum is None:
+        accum = ACCUM.get((arch, shape_name), 1)
+
+    t0 = time.time()
+    with mesh, mesh_rules(mesh, rules):
+        params_abs = lm.abstract_params(cfg)
+        params_axes = lm.param_axes(cfg)
+        p_shard = _shardings_for(mesh, params_axes, params_abs)
+
+        if shape.kind == "train":
+            batch_abs = specs_lib.batch_specs(cfg, shape)
+            b_axes = specs_lib.batch_logical_axes(batch_abs)
+            b_shard = _shardings_for(mesh, b_axes, batch_abs)
+            opt_abs = jax.eval_shape(opt.adamw_init, params_abs)
+            o_axes = opt.opt_state_axes(params_axes)
+            o_shard = _shardings_for(mesh, o_axes, opt_abs)
+            step = make_train_step(cfg, accum=accum)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            batch_abs = specs_lib.batch_specs(cfg, shape)
+            b_axes = specs_lib.batch_logical_axes(batch_abs)
+            b_shard = _shardings_for(mesh, b_axes, batch_abs)
+            step = make_prefill_step(cfg)
+            out_sh = named_sharding(mesh, ("batch", None, "vocab"),
+                                    (shape.global_batch, 1, cfg.vocab_size))
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            cache_abs, tok_abs = specs_lib.decode_specs(cfg, shape)
+            c_axes = lm.cache_axes(cfg)
+            c_shard = _shardings_for(mesh, c_axes, cache_abs)
+            t_axes = ("batch",) + (None,) * (len(tok_abs.shape) - 1)
+            t_shard = named_sharding(mesh, t_axes, tok_abs.shape)
+            step = make_serve_step(cfg)
+            out_sh = named_sharding(mesh, ("batch", None, "vocab"),
+                                    (shape.global_batch, 1, cfg.vocab_size))
+            jitted = jax.jit(step, in_shardings=(p_shard, c_shard, t_shard),
+                             out_shardings=(out_sh, c_shard),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_abs, cache_abs, tok_abs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = _memory_analysis_dict(compiled)
+    # XLA's cost_analysis counts while-loop bodies ONCE (verified in
+    # tests/test_hlo_cost.py); all heavy compute here lives in scans, so we
+    # use the loop-aware HLO walker for the roofline terms.
+    from repro.launch.hlo_cost import analyze
+    hlo_text = compiled.as_text()
+    walked = analyze(hlo_text)
+
+    flops_dev = walked.flops
+    bytes_dev = walked.bytes
+    coll_moved = walked.coll_moved
+    record = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "chips": int(chips), "accum": accum,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "xla_flops_per_device": float(cost.get("flops", 0.0)),
+        "xla_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "memory_analysis": mem,
+        "collectives": walked.coll,
+        "collective_moved_bytes": coll_moved,
+        # Roofline terms in seconds (per-device quantities / per-chip rates).
+        "t_compute": flops_dev / PEAK_FLOPS_BF16,
+        "t_memory": bytes_dev / HBM_BW,
+        "t_collective": coll_moved / ICI_BW,
+    }
+    record["bottleneck"] = max(
+        ("t_compute", "t_memory", "t_collective"), key=lambda k: record[k])
+    if verbose:
+        print(f"[{arch} × {shape_name} × "
+              f"{'2x16x16' if multi_pod else '16x16'}] "
+              f"compile={t_compile:.0f}s flops/dev={flops_dev:.3e} "
+              f"bytes/dev={bytes_dev:.3e} coll={coll_moved:.3e}B "
+              f"-> {record['bottleneck']}")
+        print("  memory_analysis:", mem)
+        print("  cost_analysis keys:", {k: round(float(v), 3)
+                                        for k, v in list(cost.items())[:8]})
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCH_IDS if args.all or not args.arch else (args.arch,)
+    shapes = [s.name for s in specs_lib.SHAPES] \
+        if args.all or not args.shape else [args.shape]
+    meshes = (False, True) if (args.both_meshes or args.all) \
+        else (args.multi_pod,)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append(tag)
+                    print(f"[{tag}] FAILED: {rec['error']}")
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=2)
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+    print("all requested dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,333 @@
+"""While-loop-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop *body once*,
+regardless of trip count (verified empirically: a scan of 10 matmuls
+reports the FLOPs of one). Every heavy computation in this framework lives
+inside scans (layers, microbatches, attention tiles, WKV steps), so the
+built-in numbers undercount by 1–3 orders of magnitude.
+
+This module re-derives FLOPs / HBM-traffic / collective-traffic by walking
+the optimized HLO text with loop multipliers:
+
+  * computations are parsed into symbol tables (op name → shape);
+  * ``while`` call sites multiply their body/condition cost by the trip
+    count recovered from the loop condition's comparison constant (the
+    canonical scan pattern);
+  * ``fusion``/``call``/``conditional`` recurse with multiplier 1
+    (conditional takes the max branch);
+  * FLOPs: 2 · |result| · |contracted dims| for every ``dot``/``convolution``;
+  * HBM bytes: Σ result sizes + parameter reads of non-fused computations
+    (fusion internals stay in registers) — a read+write traffic proxy;
+  * collectives: per-type data-moved model (see ``_coll_moved``) with
+    participants parsed from ``replica_groups``.
+
+Validated against unrolled-vs-scanned references in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+                "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
+                      r"([\w\-]+)\((.*)")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALL_ATTR = re.compile(r"(?:body|calls|to_apply)=%?([\w\.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{\{([0-9,]+)\}|"
+                     r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+_TRIP_CFG = re.compile(r"known_trip_count....n...(\d+)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "iota"}
+
+
+def _first_shape(type_str: str) -> Tuple[Optional[str], int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None, 0
+    dtype, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return dtype, n
+
+
+def _all_shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    coll_moved: float = 0.0
+
+
+def _coll_moved(kind: str, nbytes: float, n: int) -> float:
+    if kind == "all-reduce":
+        return 2.0 * nbytes * (n - 1) / max(n, 1)
+    if kind == "all-gather":
+        return nbytes * (n - 1) / max(n, 1)
+    if kind == "reduce-scatter":
+        return nbytes * (n - 1)
+    if kind == "all-to-all":
+        return nbytes * (n - 1) / max(n, 1)
+    return float(nbytes)      # collective-permute
+
+
+_FIRST_OPERAND = re.compile(r"^\s*%?([\w\.\-]+)")
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[OpInfo]] = {}
+        self.symbols: Dict[str, Dict[str, str]] = {}   # comp -> name -> type
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[tuple, CompCost] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and "{" in line and "->" in line:
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    self.symbols[cur] = {}
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _OP_LINE.match(line)
+            if m:
+                op = OpInfo(m.group(1), m.group(2), m.group(3), m.group(4))
+                self.comps[cur].append(op)
+                self.symbols[cur][op.name] = op.type_str
+
+    # ---------------- trip counts ----------------
+
+    def _trip_count(self, while_rest: str, cond_name: Optional[str]) -> int:
+        """Trip count from backend_config known_trip_count, falling back to
+        the max integer constant in the loop condition (scan pattern)."""
+        m = _TRIP_CFG.search(while_rest)
+        if m:
+            return int(m.group(1))
+        best = 1
+        for op in self.comps.get(cond_name or "", ()):
+            if op.opcode == "constant":
+                c = re.match(r"(\d+)\)", op.rest)
+                if c:
+                    best = max(best, int(c.group(1)))
+        return best
+
+    def _operand_bytes(self, comp: str, rest: str, index: int) -> int:
+        """Size of the index-th operand (resolved via the symbol table)."""
+        names = re.findall(r"%([\w\.\-]+)", rest.split(")", 1)[0])
+        if index < len(names):
+            t = self.symbols.get(comp, {}).get(names[index])
+            if t:
+                return _all_shape_bytes(t)
+        return 0
+
+    def _producer(self, comp: str, name: str) -> Optional[OpInfo]:
+        for op in self.comps.get(comp, ()):
+            if op.name == name:
+                return op
+        return None
+
+    def _fusion_bytes(self, comp: str, op: OpInfo) -> int:
+        """Fusion result traffic. A fusion implementing an in-place
+        dynamic-update-slice/scatter (root DUS, or a DUS anywhere in the
+        fused computation whose full-buffer result flows to the root — the
+        scan-carry cache-update pattern) only moves the update slice."""
+        callee = _CALL_ATTR.search(op.rest)
+        if callee:
+            cname = callee.group(1)
+            ops = self.comps.get(cname, ())
+            _, result_elems = _first_shape(op.type_str)
+            dus_updates = 0
+            passthrough = False
+            for f_op in ops:
+                if f_op.opcode == "dynamic-update-slice":
+                    # element-count compare: CPU float-normalization wraps
+                    # the DUS in bf16<->f32 converts, changing byte sizes
+                    if _first_shape(f_op.type_str)[1] == result_elems:
+                        passthrough = True
+                    dus_updates += self._operand_bytes(cname, f_op.rest, 1)
+                elif f_op.opcode == "scatter":
+                    if _first_shape(f_op.type_str)[1] == result_elems:
+                        passthrough = True
+                    dus_updates += self._operand_bytes(cname, f_op.rest, 2)
+            if passthrough:
+                return 2 * dus_updates
+        return _all_shape_bytes(op.type_str)
+
+    # ---------------- cost walk ----------------
+
+    def cost(self, comp: Optional[str] = None, fused: bool = False,
+             is_entry: bool = False) -> CompCost:
+        comp = comp or self.entry
+        if comp == self.entry:
+            is_entry = True
+        key = (comp, fused)
+        if key in self._memo:
+            return self._memo[key]
+        total = CompCost()
+        for op in self.comps.get(comp, ()):
+            oc = op.opcode
+            # traffic: results of non-fused computations. In-place update ops
+            # (dynamic-update-slice / scatter) only move the update slice;
+            # loop-body parameters alias the carried buffer (no re-read) —
+            # parameters are counted at the ENTRY only (argument loads).
+            if not fused and oc == "dynamic-update-slice":
+                total.bytes += 2 * self._operand_bytes(comp, op.rest, 1)
+            elif not fused and oc == "scatter":
+                total.bytes += 2 * self._operand_bytes(comp, op.rest, 2)
+            elif not fused and oc == "fusion":
+                total.bytes += self._fusion_bytes(comp, op)
+            elif not fused and oc not in _NO_TRAFFIC:
+                total.bytes += _all_shape_bytes(op.type_str)
+            if is_entry and oc == "parameter":
+                total.bytes += _all_shape_bytes(op.type_str)
+
+            if oc == "dot":
+                dims = _shape_dims(op.type_str)
+                out = 1
+                for d in dims:
+                    out *= d
+                cm = _CONTRACT.search(op.rest)
+                contracted = 1
+                if cm and cm.group(1):
+                    # resolve the lhs operand's shape via the symbol table
+                    fo = _FIRST_OPERAND.match(op.rest)
+                    lhs_type = self.symbols.get(comp, {}).get(
+                        fo.group(1), "") if fo else ""
+                    ldims = _shape_dims(lhs_type)
+                    for ci in cm.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(ldims):
+                            contracted *= ldims[ci]
+                total.flops += 2.0 * out * contracted
+            elif oc == "convolution":
+                dims = _shape_dims(op.type_str)
+                out = 1
+                for d in dims:
+                    out *= d
+                total.flops += 2.0 * out  # lower bound (no kernel dims)
+
+            base = oc.replace("-start", "")
+            if base in _COLLECTIVES:
+                dtype, n_elem = _first_shape(op.type_str)
+                nbytes = n_elem * _DTYPE_BYTES.get(dtype or "f32", 4)
+                # The CPU backend's float-normalization pass promotes bf16
+                # all-reduces to f32 (convert fused in front). TPU — the
+                # roofline target — reduces bf16 natively, so count the
+                # pre-promotion width when the operand is such a convert.
+                if base == "all-reduce" and dtype == "f32":
+                    fo = _FIRST_OPERAND.match(op.rest)
+                    prod = fo and self._producer(comp, fo.group(1))
+                    if prod is not None and "convert" in prod.name:
+                        nbytes //= 2
+                g = _GROUPS.search(op.rest)
+                n = 2
+                if g:
+                    n = (len(g.group(1).split(",")) if g.group(1)
+                         else int(g.group(3)))
+                moved = _coll_moved(base, nbytes, n)
+                s = total.coll.setdefault(
+                    base, {"count": 0, "bytes": 0.0, "moved": 0.0})
+                s["count"] += 1
+                s["bytes"] += nbytes
+                s["moved"] += moved
+                total.coll_moved += moved
+
+            # recurse into called computations
+            if oc == "while":
+                body = _CALL_ATTR.search(op.rest)
+                cond = _COND_ATTR.search(op.rest)
+                if body:
+                    trips = self._trip_count(
+                        op.rest, cond.group(1) if cond else None)
+                    sub = self.cost(body.group(1), fused=False)
+                    _acc(total, sub, trips)
+            elif oc == "fusion":
+                callee = _CALL_ATTR.search(op.rest)
+                if callee:
+                    sub = self.cost(callee.group(1), fused=True)
+                    _acc(total, sub, 1)
+            elif oc in ("call", "custom-call", "reduce", "reduce-window",
+                        "scatter", "sort", "map", "select-and-scatter"):
+                callee = _CALL_ATTR.search(op.rest)
+                if callee and callee.group(1) in self.comps:
+                    sub = self.cost(callee.group(1), fused=True)
+                    _acc(total, sub, 1)
+            elif oc == "conditional":
+                b = _BRANCHES.search(op.rest)
+                if b:
+                    names = [x.strip().lstrip("%") for x in
+                             b.group(1).split(",") if x.strip()]
+                    subs = [self.cost(nm, fused=False) for nm in names
+                            if nm in self.comps]
+                    if subs:
+                        worst = max(subs, key=lambda s: s.flops + s.bytes)
+                        _acc(total, worst, 1)
+        self._memo[key] = total
+        return total
+
+
+def _acc(total: CompCost, sub: CompCost, mult: float):
+    total.flops += sub.flops * mult
+    total.bytes += sub.bytes * mult
+    total.coll_moved += sub.coll_moved * mult
+    for k, v in sub.coll.items():
+        s = total.coll.setdefault(k, {"count": 0, "bytes": 0.0, "moved": 0.0})
+        s["count"] += v["count"] * mult
+        s["bytes"] += v["bytes"] * mult
+        s["moved"] += v["moved"] * mult
+
+
+def analyze(hlo_text: str) -> CompCost:
+    return HloCostModel(hlo_text).cost()

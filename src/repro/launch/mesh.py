@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. The dry-run entry point sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+tests and benchmarks see the real single device."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices: int, model_parallel: int = 16):
+    """Elastic-scaling helper: best-effort (data, model) mesh for an
+    arbitrary device count (used by distributed/elastic.py)."""
+    model = min(model_parallel, devices)
+    while devices % model:
+        model //= 2
+    return jax.make_mesh((devices // model, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) for the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link

@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill a batch of prompts, then decode with a
+KV cache (ring-buffered for SWA archs, O(1) state for RWKV)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.launch.steps import make_serve_step
+from repro.models import lm
+
+
+def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
+          gen_len: int = 32, max_len: int = 128, use_reduced: bool = True,
+          seed: int = 0, greedy: bool = True):
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduce_cfg(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_params(key, cfg)
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    cache = lm.init_cache(cfg, batch, max_len)
+    if cfg.frontend == "audio":
+        toks = jax.random.normal(key, (batch, prompt_len, cfg.d_model))
+        step_tok = lambda t: t[:, None]          # embeds
+        prompt_iter = [toks[:, i] for i in range(prompt_len)]
+    else:
+        prompt = jax.random.randint(key, (batch, prompt_len), 1,
+                                    cfg.vocab_size)
+        prompt_iter = [prompt[:, i] for i in range(prompt_len)]
+        step_tok = lambda t: t[:, None]
+
+    # Prefill by stepping the decoder over the prompt (cache-populating
+    # path; the batched prefill kernel is exercised by the dry-run).
+    t0 = time.time()
+    logits = None
+    for tok in prompt_iter:
+        logits, cache = serve_step(params, cache, step_tok(tok))
+    prefill_t = time.time() - t0
+
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)
+    t0 = time.time()
+    for _ in range(gen_len):
+        if cfg.frontend == "audio":
+            step_in = jax.nn.one_hot(tok, cfg.d_model)[:, None]
+        else:
+            step_in = tok[:, None]
+        logits, cache = serve_step(params, cache, step_in)
+        tok = jnp.argmax(logits[:, -1], axis=-1)
+        out_tokens.append(tok)
+    decode_t = time.time() - t0
+    tokens = jnp.stack(out_tokens, axis=1)
+    return {
+        "tokens": tokens,
+        "prefill_s": prefill_t,
+        "decode_s": decode_t,
+        "decode_tok_per_s": batch * gen_len / max(decode_t, 1e-9),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba_1_5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    args = ap.parse_args()
+    res = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+                gen_len=args.gen_len)
+    print(f"generated {res['tokens'].shape} tokens; "
+          f"prefill {res['prefill_s']:.2f}s, "
+          f"decode {res['decode_tok_per_s']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Input shape specs for every (architecture × shape) dry-run cell.
+
+ShapeDtypeStruct stand-ins only — weak-type-correct, shardable, no device
+allocation. `train_*`/`prefill_*` lower the training/prefill computation;
+`decode_*`/`long_*` lower `serve_step` (one token against a seq_len cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    # train-only: gradient-accumulation microbatches (memory-term lever)
+    accum: int = 1
+
+
+SHAPES = (
+    ShapeSpec("train_4k", "train", 4096, 256),
+    ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    ShapeSpec("decode_32k", "decode", 32768, 128),
+    ShapeSpec("long_500k", "decode", 524288, 1),
+)
+
+
+def get_shape(name: str) -> ShapeSpec:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def long_context_ok(cfg: ModelConfig) -> bool:
+    """long_500k runs only for sub-quadratic archs (SSM / SWA / hybrid);
+    pure full-attention archs skip it (noted in DESIGN.md §4)."""
+    return cfg.sub_quadratic
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Training/prefill batch as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cd = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    if cfg.frontend == "audio":
+        batch = {"frame_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cd),
+                 "targets": jax.ShapeDtypeStruct((B, S), i32)}
+    elif cfg.frontend == "vision":
+        S_text = S - cfg.frontend_len
+        batch = {
+            "patch_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), cd),
+            "tokens": jax.ShapeDtypeStruct((B, S_text), i32),
+            "targets": jax.ShapeDtypeStruct((B, S_text), i32),
+        }
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "targets": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "prefill":
+        batch.pop("targets", None)
+        if "tokens" not in batch and cfg.frontend == "audio":
+            pass
+        elif cfg.frontend != "audio":
+            batch.setdefault("tokens", jax.ShapeDtypeStruct((B, S), i32))
+    return batch
+
+
+def batch_logical_axes(batch):
+    """Logical sharding axes for a batch pytree."""
+    def axes(k, v):
+        if v.ndim == 3:
+            return ("batch", "seq", "embed")
+        if v.ndim == 2:
+            return ("batch", "seq")
+        return tuple(None for _ in v.shape)
+    return {k: axes(k, v) for k, v in batch.items()}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(cache, tokens) ShapeDtypeStructs for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = lm.abstract_cache(cfg, B, S)
+    cd = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    if cfg.frontend == "audio":
+        tokens = jax.ShapeDtypeStruct((B, 1, cfg.d_model), cd)
+    else:
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def concrete_batch(key, cfg: ModelConfig, batch_size: int, seq_len: int):
+    """Small concrete batch for smoke tests / examples."""
+    ks = jax.random.split(key, 3)
+    if cfg.frontend == "audio":
+        return {
+            "frame_embeds": jax.random.normal(
+                ks[0], (batch_size, seq_len, cfg.d_model)),
+            "targets": jax.random.randint(
+                ks[1], (batch_size, seq_len), 0, cfg.vocab_size),
+        }
+    batch = {}
+    s_text = seq_len
+    if cfg.frontend == "vision":
+        s_text = seq_len - cfg.frontend_len
+        batch["patch_embeds"] = jax.random.normal(
+            ks[2], (batch_size, cfg.frontend_len, cfg.d_model))
+    batch["tokens"] = jax.random.randint(ks[0], (batch_size, s_text), 0,
+                                         cfg.vocab_size)
+    batch["targets"] = jax.random.randint(ks[1], (batch_size, s_text), 0,
+                                          cfg.vocab_size)
+    return batch

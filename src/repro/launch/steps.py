@@ -1,0 +1,76 @@
+"""jit-able train_step / serve_step builders shared by the dry-run, the
+real training loop and the serving loop."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import optimizers as opt
+
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4, accum: int = 1,
+                    max_grad_norm: float = 1.0, warmup: int = 100,
+                    total_steps: int = 10000, compress_pod_grads: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). `accum` > 1 scans over gradient-accumulation microbatches."""
+
+    def loss(p, mb):
+        l, metr = lm.loss_fn(p, cfg, mb)
+        return l, metr
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (l, metr), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda t: t.reshape((accum, t.shape[0] // accum) + t.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                mb = jax.tree.map(lambda t: shard(t, "batch", *([None] * (t.ndim - 1))), mb)
+                (l, _), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, lsum), _ = jax.lax.scan(body,
+                                            (zeros, jnp.zeros((), jnp.float32)),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            l = lsum / accum
+            metr = {"ce": l, "aux": jnp.zeros((), jnp.float32)}
+
+        if compress_pod_grads:
+            from repro.distributed.compression import int8_roundtrip
+            grads = jax.tree.map(int8_roundtrip, grads)
+
+        grads, gnorm = opt.clip_by_global_norm(grads, max_grad_norm)
+        step_lr = opt.cosine_schedule(opt_state.count, base_lr=lr,
+                                      warmup=warmup, total=total_steps)
+        params, opt_state = opt.adamw_update(params, grads, opt_state,
+                                             lr=step_lr)
+        metrics = {"loss": l, "grad_norm": gnorm, "lr": step_lr, **metr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cfg, cache, tokens)
+    return serve_step

@@ -1,0 +1,11 @@
+"""Unified LM model zoo covering the 10 assigned architectures."""
+from repro.models.config import (MLAConfig, MoEConfig, ModelConfig, RWKVConfig,
+                                 SSMConfig, MemoryLayerConfig)
+from repro.models.lm import (abstract_params, init_params, param_axes,
+                             loss_fn, forward, prefill, decode_step,
+                             init_cache, abstract_cache, cache_axes)
+
+__all__ = ["MLAConfig", "MoEConfig", "ModelConfig", "RWKVConfig", "SSMConfig",
+           "MemoryLayerConfig", "abstract_params", "init_params", "param_axes",
+           "loss_fn", "forward", "prefill", "decode_step", "init_cache",
+           "abstract_cache", "cache_axes"]

@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Tokens are routed top-k, ranked within their expert by a cumulative-count,
+dropped past capacity (standard Switch-style), scattered into a per-expert
+buffer (E, C, d), processed by a batched expert einsum (expert dim sharded
+over `model` = expert parallelism), and gathered back weighted by the router
+probability. One-hot *einsum* dispatch would materialize an O(T·E·C) tensor —
+infeasible at 1M tokens × 160 experts — so dispatch is a sharded scatter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import pdef, peinsum
+
+
+def moe_defs(cfg: ModelConfig):
+    d = cfg.d_model
+    m = cfg.moe
+    defs = {
+        "router": pdef((d, m.num_experts), ("embed", None), scale=0.02),
+        "w1": pdef((m.num_experts, d, m.d_expert), ("experts", "embed", "ff")),
+        "w3": pdef((m.num_experts, d, m.d_expert), ("experts", "embed", "ff")),
+        "w2": pdef((m.num_experts, m.d_expert, d), ("experts", "ff", "embed")),
+    }
+    if m.shared_experts:
+        ds = m.shared_experts * m.d_expert
+        defs["shared"] = {
+            "w1": pdef((d, ds), ("embed", "ff")),
+            "w3": pdef((d, ds), ("embed", "ff")),
+            "w2": pdef((ds, d), ("ff", "embed")),
+        }
+    return defs
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    m = cfg.moe
+    c = int(tokens * m.top_k * m.capacity_factor / m.num_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_apply(params, cfg: ModelConfig, x, act: str):
+    """x: (B, S, d) -> (B, S, d), plus router aux loss (scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    C = capacity(cfg, T)
+    xt = x.reshape(T, d)
+
+    logits = (xt @ params["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, K)                  # (T, K)
+    top_p = top_p / (top_p.sum(-1, keepdims=True) + 1e-9)
+
+    # Router load-balancing aux loss (Switch): E · Σ_e f_e · p_e.
+    me = probs.mean(axis=0)
+    onehot = jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32)
+    fe = onehot.mean(axis=0)
+    aux = E * jnp.sum(fe * me) * m.router_aux_weight
+
+    flat_e = top_e.reshape(-1)                              # (T·K,)
+    flat_p = top_p.reshape(-1)
+    # Rank within expert via cumulative one-hot count (transient (T·K, E)).
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    oh = shard(oh, "batch", None)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1,
+                              flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, 0)
+    safe_e = jnp.where(keep, flat_e, 0)
+
+    xr = jnp.repeat(xt, K, axis=0)                          # (T·K, d)
+    buf = jnp.zeros((E, C, d), xt.dtype)
+    buf = buf.at[safe_e, pos_c].add(
+        jnp.where(keep[:, None], xr, 0.0), mode="drop")
+    buf = shard(buf, "experts", None, "embed")
+
+    h = peinsum("ecd,edf->ecf", buf, params["w1"])
+    h = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+    h = h * peinsum("ecd,edf->ecf", buf, params["w3"])
+    h = shard(h, "experts", None, "ff")
+    out_buf = peinsum("ecf,efd->ecd", h, params["w2"])
+    out_buf = shard(out_buf, "experts", None, "embed")
+
+    got = out_buf[safe_e, pos_c]                            # (T·K, d)
+    got = jnp.where(keep[:, None], got, 0.0) * flat_p[:, None].astype(got.dtype)
+    out = got.reshape(T, K, d).sum(axis=1).astype(x.dtype)
+
+    if m.shared_experts:
+        sp = params["shared"]
+        hs = peinsum("td,df->tf", xt, sp["w1"])
+        hs = (jax.nn.silu(hs) if act == "silu" else jax.nn.gelu(hs)) \
+            * peinsum("td,df->tf", xt, sp["w3"])
+        out = out + peinsum("tf,fd->td", hs, sp["w2"])
+
+    return shard(out.reshape(B, S, d), "batch", "seq", "embed"), aux

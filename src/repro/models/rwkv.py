@@ -1,0 +1,129 @@
+"""RWKV-6 "Finch" blocks: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence S_t = diag(w_t)·S_{t-1} + kᵀ_t v_t is evaluated with a
+`lax.scan` over time, vectorized over (batch, heads, d_k, d_v) — on TPU the
+per-step work is a dense (B,H,Dk,Dv) FMA that keeps the VPU busy while the
+state stays resident (the CUDA kernel's warp-persistent state, TPU-style).
+Decode is a single state update: O(1) in sequence length, which is why
+rwkv6 runs the `long_500k` cell that quadratic-attention archs skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import pdef, rms_norm
+
+
+def rwkv_defs(cfg: ModelConfig):
+    d = cfg.d_model
+    r = cfg.rwkv
+    H = d // r.head_size
+    mix = {name: pdef((d,), (None,), init="zeros")
+           for name in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g", "mu_x")}
+    return {
+        "tm": {
+            **mix,
+            # data-dependent token-shift lerp (ddlerp) LoRA
+            "mix_a": pdef((d, r.mix_lora * 5), ("embed", None)),
+            "mix_b": pdef((r.mix_lora * 5, d * 5), (None, None), init="zeros"),
+            "wr": pdef((d, d), ("embed", "heads")),
+            "wk": pdef((d, d), ("embed", "heads")),
+            "wv": pdef((d, d), ("embed", "heads")),
+            "wg": pdef((d, d), ("embed", "heads")),
+            "wo": pdef((d, d), ("heads", "embed")),
+            # data-dependent decay LoRA
+            "decay_base": pdef((d,), (None,), init="zeros"),
+            "decay_a": pdef((d, r.decay_lora), ("embed", None)),
+            "decay_b": pdef((r.decay_lora, d), (None, None), init="zeros"),
+            "bonus": pdef((H, r.head_size), ("heads", None), init="zeros"),
+            "ln_x": pdef((d,), (None,), init="zeros"),
+        },
+        "cm": {
+            "mu_k2": pdef((d,), (None,), init="zeros"),
+            "mu_r2": pdef((d,), (None,), init="zeros"),
+            "wk2": pdef((d, cfg.d_ff), ("embed", "ff")),
+            "wv2": pdef((cfg.d_ff, d), ("ff", "embed")),
+            "wr2": pdef((d, d), ("embed", None)),
+        },
+    }
+
+
+def _token_shift(x, last):
+    """Shift sequence right by one; `last` (B, d) fills position 0."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """RWKV6 data-dependent lerp producing r/k/v/w/g inputs."""
+    d = x.shape[-1]
+    delta = xs - x
+    base = x + delta * p["mu_x"]
+    lora = jnp.tanh(base @ p["mix_a"])                       # (B,S,5*ml)
+    ml = p["mix_a"].shape[-1] // 5
+    loras = jnp.split(lora, 5, axis=-1)
+    outs = []
+    for i, name in enumerate(("mu_w", "mu_k", "mu_v", "mu_r", "mu_g")):
+        wb = p["mix_b"][i * ml:(i + 1) * ml, i * d:(i + 1) * d]
+        mu = p[name] + loras[i] @ wb
+        outs.append(x + delta * mu)
+    return outs  # xw, xk, xv, xr, xg
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """r,k,v: (B, S, H, D); w: (B, S, H, D) decay in (0,1); u: (H, D) bonus.
+    state: (B, H, D, Dv). Returns (out (B,S,H,Dv), state)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,D) each
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (B,H,D,Dv)
+        out = jnp.einsum("bhd,bhdv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, out
+
+    rs, ks, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def time_mix(p, cfg: ModelConfig, x, shift_state, wkv_state):
+    """x: (B, S, d). Returns (out, new_shift, new_wkv_state)."""
+    r_cfg = cfg.rwkv
+    B, S, d = x.shape
+    H, D = d // r_cfg.head_size, r_cfg.head_size
+    xs = _token_shift(x, shift_state)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xs)
+    r = (xr @ p["wr"]).reshape(B, S, H, D)
+    k = (xk @ p["wk"]).reshape(B, S, H, D)
+    v = (xv @ p["wv"]).reshape(B, S, H, D)
+    g = jax.nn.silu(xg @ p["wg"])
+    r = shard(r, "batch", "seq", "heads", None)
+    decay = p["decay_base"] + jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).reshape(B, S, H, D)
+    u = p["bonus"]
+
+    out, wkv_state = wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), w, u, wkv_state)
+    out = out.reshape(B, S, d).astype(x.dtype)
+    out = rms_norm(out, p["ln_x"], cfg.norm_eps) * g
+    return out @ p["wo"], x[:, -1], wkv_state
+
+
+def channel_mix(p, cfg: ModelConfig, x, shift_state):
+    xs = _token_shift(x, shift_state)
+    xk = x + (xs - x) * p["mu_k2"]
+    xr = x + (xs - x) * p["mu_r2"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk2"]))
+    k = shard(k, "batch", "seq", "ff")
+    return jax.nn.sigmoid(xr @ p["wr2"]) * (k @ p["wv2"]), x[:, -1]
+
+
+def rwkv_state_shapes(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    H, D = d // cfg.rwkv.head_size, cfg.rwkv.head_size
+    return {
+        "tm_shift": (batch, d),
+        "wkv": (batch, H, D, D),
+        "cm_shift": (batch, d),
+    }

@@ -1,0 +1,128 @@
+"""SAM external memory as a first-class LM layer (the paper's technique
+integrated into the transformer zoo).
+
+Every `every_n_layers`-th block is augmented with a per-sequence external
+memory (B, N_mem, W) accessed with the paper's scheme: sparse top-K
+content-based reads (§3.1) and sparse writes to {previously-read ∪ LRA}
+slots (§3.2), with the δ-thresholded last-access usage statistic. During
+training/prefill the sequence is processed in segments (one read+write per
+segment); during decode each token performs one read and writes on segment
+boundaries. Memory slots shard over the `model` mesh axis ("mem_slots" rule)
+so a 65k×128 memory adds only N·W/|model| bytes per device.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addressing as addr
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import pdef
+
+
+class MemoryState(NamedTuple):
+    memory: jax.Array        # (B, N, W)
+    last_access: jax.Array   # (B, N) int32
+    read_idx: jax.Array      # (B, H, K) previous read locations
+    read_w: jax.Array        # (B, H, K)
+    step: jax.Array          # () int32
+
+
+def memory_defs(cfg: ModelConfig):
+    m = cfg.memory
+    d, W, H = cfg.d_model, m.word_size, m.num_heads
+    return {
+        "wq": pdef((d, H, W), ("embed", "heads", "mem_word")),
+        "wa": pdef((d, H, W), ("embed", "heads", "mem_word")),
+        "wr": pdef((H, W, d), ("heads", "mem_word", "embed"), scale=0.02),
+        "gates": pdef((d, H, 3), ("embed", "heads", None), init="zeros"),
+    }
+
+
+def memory_state_shapes(cfg: ModelConfig, batch: int):
+    m = cfg.memory
+    return {
+        "memory": (batch, m.num_slots, m.word_size),
+        "last_access": (batch, m.num_slots),
+        "read_idx": (batch, m.num_heads, m.k),
+        "read_w": (batch, m.num_heads, m.k),
+    }
+
+
+def init_memory_state(cfg: ModelConfig, batch: int) -> MemoryState:
+    m = cfg.memory
+    return MemoryState(
+        memory=jnp.zeros((batch, m.num_slots, m.word_size)),
+        last_access=jnp.broadcast_to(
+            -jnp.arange(m.num_slots, dtype=jnp.int32)[None],
+            (batch, m.num_slots)),
+        read_idx=jnp.zeros((batch, m.num_heads, m.k), jnp.int32),
+        read_w=jnp.zeros((batch, m.num_heads, m.k)),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState):
+    """One SAM read+write for a segment summary `pooled` (B, d).
+
+    Returns (read_out (B, d), new_state)."""
+    m = cfg.memory
+    B = pooled.shape[0]
+    H, K = m.num_heads, m.k
+    q = jnp.einsum("bd,dhw->bhw", pooled, p["wq"])
+    a = jnp.einsum("bd,dhw->bhw", pooled, p["wa"])
+    g = jax.nn.sigmoid(jnp.einsum("bd,dhg->bhg", pooled, p["gates"]))
+    alpha, gamma, beta_g = g[..., 0], g[..., 1], g[..., 2]
+    beta = 1.0 + 9.0 * beta_g                                 # key strength
+
+    # ---- write (eq. 5): previously-read ∪ least-recently-accessed ----
+    lra = addr.least_recently_accessed(state.last_access, H)  # (B,H)
+    w_read = alpha[..., None] * gamma[..., None] * state.read_w
+    w_lra = (alpha * (1.0 - gamma))[..., None]
+    widx = jnp.concatenate([state.read_idx, lra[..., None]], -1)  # (B,H,K+1)
+    ww = jnp.concatenate([w_read, w_lra], -1)
+    memory = addr.scatter_set_rows(
+        state.memory, lra, jnp.zeros((B, H, m.word_size), state.memory.dtype))
+    rows = ww[..., None] * a[:, :, None, :]
+    memory = addr.scatter_add_rows(memory, widx.reshape(B, -1),
+                                   rows.reshape(B, H * (K + 1), -1))
+    memory = shard(memory, "batch", "mem_slots", "mem_word")
+
+    # ---- sparse content read (§3.1) ----
+    read = addr.sparse_read_exact(q, memory, beta, K)
+    step = state.step + 1
+    la = addr.update_last_access(state.last_access, widx.reshape(B, -1),
+                                 ww.reshape(B, -1), step, m.delta)
+    la = addr.update_last_access(la, read.indices.reshape(B, -1),
+                                 read.weights.reshape(B, -1), step, m.delta)
+
+    out = jnp.einsum("bhw,hwd->bd", read.words, p["wr"])
+    new_state = MemoryState(memory=memory, last_access=la,
+                            read_idx=read.indices, read_w=read.weights,
+                            step=step)
+    return out, new_state
+
+
+def memory_layer_seq(p, cfg: ModelConfig, x, state: MemoryState,
+                     segment: int = 512):
+    """Apply SAM memory over a full sequence in segments.
+
+    x: (B, S, d). Each segment mean-pools to a query/write summary; the read
+    vector is broadcast-added to the segment's tokens."""
+    B, S, d = x.shape
+    seg = min(segment, S)
+    n = S // seg
+    xs = x.reshape(B, n, seg, d)
+
+    def body(st, xc):                        # xc: (B, seg, d)
+        pooled = xc.mean(axis=1)
+        out, st = memory_access(p, cfg, pooled, st)
+        return st, out
+
+    state, outs = jax.lax.scan(body, state, jnp.moveaxis(xs, 1, 0))
+    outs = jnp.moveaxis(outs, 0, 1)          # (B, n, d)
+    y = x + jnp.repeat(outs, seg, axis=1).reshape(B, S, d)
+    return y, state

@@ -1,0 +1,91 @@
+"""Mamba-style selective SSM head for the hymba hybrid blocks.
+
+Diagonal selective state space: h_t = exp(Δ_t·A)⊙h_{t-1} + Δ_t·B_t·x_t,
+y_t = C_t·h_t + D·x_t, evaluated with `lax.associative_scan` over the
+sequence (parallel prefix — O(log S) depth, MXU/VPU friendly), matching the
+selective-scan recurrence exactly. Decode is one state update (O(1))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import pdef
+
+
+def ssm_defs(cfg: ModelConfig, d_inner: int):
+    s = cfg.ssm
+    d = cfg.d_model
+    return {
+        "in_proj": pdef((d, 2 * d_inner), ("embed", "ff")),
+        "conv_w": pdef((s.conv_width, d_inner), (None, "ff"), scale=0.5),
+        "conv_b": pdef((d_inner,), ("ff",), init="zeros"),
+        "x_proj": pdef((d_inner, s.dt_rank + 2 * s.state_size), ("ff", None)),
+        "dt_proj": pdef((s.dt_rank, d_inner), (None, "ff")),
+        "dt_bias": pdef((d_inner,), ("ff",), init="zeros"),
+        "a_log": pdef((d_inner, s.state_size), ("ff", None), init="zeros"),
+        "d_skip": pdef((d_inner,), ("ff",), init="ones"),
+        "out_proj": pdef((d_inner, d), ("ff", "embed")),
+    }
+
+
+def _conv1d(x, w, b, state=None):
+    """Causal depthwise conv. x: (B, S, D), w: (K, D). state: (B, K-1, D)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return out, new_state
+
+
+def _scan_assoc(a, bx):
+    """Associative scan for h_t = a_t ⊙ h_{t-1} + bx_t along axis 1."""
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+    a_out, b_out = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return b_out
+
+
+def ssm_apply(p, cfg: ModelConfig, x, *, conv_state=None, ssm_state=None,
+              decode: bool = False):
+    """x: (B, S, d). Returns (y, conv_state, ssm_state)."""
+    s = cfg.ssm
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                      # (B,S,Din)
+    xin = shard(xin, "batch", "seq", "ff")
+    xc, conv_state = _conv1d(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ p["x_proj"]                                 # (B,S,r+2N)
+    dt = jax.nn.softplus(proj[..., :s.dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    Bmat = proj[..., s.dt_rank:s.dt_rank + s.state_size]    # (B,S,N)
+    Cmat = proj[..., s.dt_rank + s.state_size:]             # (B,S,N)
+
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))            # (Din,N)
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * A)     # (B,S,Din,N)
+    dbx = (dt * xc).astype(jnp.float32)[..., None] \
+        * Bmat.astype(jnp.float32)[..., None, :]            # (B,S,Din,N)
+
+    if decode:
+        # Single step: h = da ⊙ h_prev + dbx.
+        h = da[:, 0] * ssm_state + dbx[:, 0]
+        ssm_state_new = h
+        y = jnp.einsum("bdn,bn->bd", h, Cmat[:, 0].astype(jnp.float32))
+        y = y[:, None]
+    else:
+        if ssm_state is not None:
+            # Fold carried state into the first step.
+            dbx = dbx.at[:, 0].add(da[:, 0] * ssm_state)
+        h = _scan_assoc(da, dbx)                            # (B,S,Din,N)
+        ssm_state_new = h[:, -1]
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cmat.astype(jnp.float32))
+    y = (y + xc.astype(jnp.float32) * p["d_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], conv_state, ssm_state_new

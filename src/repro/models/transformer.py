@@ -1,0 +1,171 @@
+"""Transformer block assembly: dense / MoE / RWKV / hybrid blocks, stacked
+and scanned over layers (HLO size O(1) in depth), with optional remat."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import mlp_apply, mlp_defs, pdef, rms_norm
+
+
+def block_defs(cfg: ModelConfig, *, moe_layer: Optional[bool] = None):
+    """Parameter defs for ONE layer. `moe_layer` overrides cfg.moe presence
+    (DeepSeek's leading dense layers)."""
+    d = cfg.d_model
+    if cfg.block == "rwkv":
+        defs = rwkv_lib.rwkv_defs(cfg)
+        defs["ln1"] = pdef((d,), (None,), init="zeros")
+        defs["ln2"] = pdef((d,), (None,), init="zeros")
+        return defs
+    defs = {
+        "ln1": pdef((d,), (None,), init="zeros"),
+        "ln2": pdef((d,), (None,), init="zeros"),
+        "attn": attn.attn_defs(cfg),
+    }
+    use_moe = cfg.moe is not None if moe_layer is None else moe_layer
+    if use_moe:
+        defs["moe"] = moe_lib.moe_defs(cfg)
+    else:
+        defs["mlp"] = mlp_defs(cfg, d, cfg.d_ff,
+                               gated=(cfg.act in ("silu", "geglu")))
+    if cfg.block == "hybrid":
+        d_inner = cfg.ssm.expand * d // 2   # parallel heads: half width each
+        defs["ssm"] = ssm_lib.ssm_defs(cfg, d_inner)
+    return defs
+
+
+def block_forward(p, cfg: ModelConfig, x, positions, *,
+                  moe_layer: Optional[bool] = None):
+    """Training/prefill for one block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.block == "rwkv":
+        B, _, d = x.shape
+        H = d // cfg.rwkv.head_size
+        shift0 = jnp.zeros((B, d), x.dtype)
+        wkv0 = jnp.zeros((B, H, cfg.rwkv.head_size, cfg.rwkv.head_size),
+                         jnp.float32)
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        tm_out, _, _ = rwkv_lib.time_mix(p["tm"], cfg, h, shift0, wkv0)
+        x = x + tm_out
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        cm_out, _ = rwkv_lib.channel_mix(p["cm"], cfg, h, shift0)
+        return x + cm_out, aux
+
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a = attn.mla_forward(p["attn"], cfg, h, positions)
+    else:
+        a = attn.gqa_forward(p["attn"], cfg, h, positions)
+    if cfg.block == "hybrid":
+        s_out, _, _ = ssm_lib.ssm_apply(p["ssm"], cfg, h)
+        a = 0.5 * (a + s_out)
+    x = x + a
+
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    use_moe = cfg.moe is not None if moe_layer is None else moe_layer
+    if use_moe:
+        f, aux = moe_lib.moe_apply(p["moe"], cfg, h, cfg.act)
+    else:
+        f = mlp_apply(p["mlp"], h, cfg.act)
+    return x + f, aux
+
+
+def block_decode(p, cfg: ModelConfig, x, cache, pos, *,
+                 moe_layer: Optional[bool] = None):
+    """Single-token decode for one block. `cache` is this layer's slice.
+    Returns (x, new_cache)."""
+    if cfg.block == "rwkv":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        tm_out, tm_shift, wkv = rwkv_lib.time_mix(
+            p["tm"], cfg, h, cache["tm_shift"], cache["wkv"])
+        x = x + tm_out
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        cm_out, cm_shift = rwkv_lib.channel_mix(p["cm"], cfg, h,
+                                                cache["cm_shift"])
+        new_cache = dict(cache, tm_shift=tm_shift, wkv=wkv,
+                         cm_shift=cm_shift)
+        return x + cm_out, new_cache
+
+    new_cache = dict(cache)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, ckv = attn.mla_decode(p["attn"], cfg, h, cache["ckv"], pos)
+        new_cache["ckv"] = ckv
+    elif cfg.sparse_decode_blocks is not None and cfg.window is None:
+        from repro.distributed.sharding import current_mesh
+        mesh = current_mesh()
+        sparse = (attn.gqa_decode_sparse_sharded
+                  if mesh is not None and "model" in mesh.axis_names
+                  else attn.gqa_decode_sparse)
+        a, kc, vc, ks = sparse(
+            p["attn"], cfg, h, cache["k"], cache["v"], cache["ksum"], pos)
+        new_cache["k"], new_cache["v"], new_cache["ksum"] = kc, vc, ks
+    else:
+        a, kc, vc = attn.gqa_decode(p["attn"], cfg, h, cache["k"],
+                                    cache["v"], pos)
+        new_cache["k"], new_cache["v"] = kc, vc
+    if cfg.block == "hybrid":
+        s_out, conv_st, ssm_st = ssm_lib.ssm_apply(
+            p["ssm"], cfg, h, conv_state=cache["conv"],
+            ssm_state=cache["ssm"], decode=True)
+        new_cache["conv"], new_cache["ssm"] = conv_st, ssm_st
+        a = 0.5 * (a + s_out)
+    x = x + a
+
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    use_moe = cfg.moe is not None if moe_layer is None else moe_layer
+    if use_moe:
+        f, _ = moe_lib.moe_apply(p["moe"], cfg, h, cfg.act)
+    else:
+        f = mlp_apply(p["mlp"], h, cfg.act)
+    return x + f, new_cache
+
+
+def layer_cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache shapes for ONE layer (stacked with a leading L by the caller)."""
+    if cfg.block == "rwkv":
+        return rwkv_lib.rwkv_state_shapes(cfg, batch)
+    shapes = {}
+    if cfg.mla is not None:
+        m = cfg.mla
+        shapes["ckv"] = (batch, max_len, m.kv_lora + m.rope_head_dim)
+    else:
+        smax = min(max_len, cfg.window) if cfg.window else max_len
+        shapes["k"] = (batch, smax, cfg.num_kv_heads, cfg.head_dim)
+        shapes["v"] = (batch, smax, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.sparse_decode_blocks is not None and cfg.window is None:
+            nb = max(1, smax // cfg.sparse_decode_block)
+            shapes["ksum"] = (batch, nb, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.block == "hybrid":
+        d_inner = cfg.ssm.expand * cfg.d_model // 2
+        shapes["conv"] = (batch, cfg.ssm.conv_width - 1, d_inner)
+        shapes["ssm"] = (batch, d_inner, cfg.ssm.state_size)
+    return shapes
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical axes for one layer's cache entries (leading 'layers' added by
+    the caller)."""
+    if cfg.block == "rwkv":
+        return {"tm_shift": ("batch", "embed"),
+                "wkv": ("batch", "heads", None, None),
+                "cm_shift": ("batch", "embed")}
+    axes = {}
+    if cfg.mla is not None:
+        axes["ckv"] = ("batch", "kv_seq", "kv_lora")
+    else:
+        axes["k"] = ("batch", "kv_seq", "kv_heads", None)
+        axes["v"] = ("batch", "kv_seq", "kv_heads", None)
+        if cfg.sparse_decode_blocks is not None and cfg.window is None:
+            axes["ksum"] = ("batch", "kv_seq", "kv_heads", None)
+    if cfg.block == "hybrid":
+        axes["conv"] = ("batch", None, "ff")
+        axes["ssm"] = ("batch", "ff", None)
+    return axes

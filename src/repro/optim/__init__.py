@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, rmsprop_init,
+                                    rmsprop_update, clip_by_global_norm,
+                                    cosine_schedule, opt_state_axes)

@@ -1,0 +1,90 @@
+"""Optimizers: AdamW (LM training, ZeRO-sharded state) and RMSProp (the
+paper's optimizer for the SAM/NTM tasks, Suppl. C), plus clipping and LR
+schedules.
+
+Optimizer state tensors have exactly the parameter shapes, so they inherit
+the parameter sharding (FSDP 2-D sharding ⇒ fully sharded optimizer state =
+ZeRO-3) — `opt_state_axes` simply mirrors the param logical-axis tree."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: object
+    nu: object
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), t)
+    return AdamWState(mu=zeros(params), nu=zeros(params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    c = state.count + 1
+    cf = c.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    mu_hat_scale = 1.0 / (1 - b1 ** cf)
+    nu_hat_scale = 1.0 / (1 - b2 ** cf)
+
+    def upd(p, m, v):
+        step = m * mu_hat_scale / (jnp.sqrt(v * nu_hat_scale) + eps)
+        return (p.astype(jnp.float32)
+                - lr * (step + weight_decay * p.astype(jnp.float32))
+                ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=c)
+
+
+def opt_state_axes(param_axes_tree):
+    """Logical axes for AdamWState given the param axes tree (ZeRO)."""
+    return AdamWState(mu=param_axes_tree, nu=param_axes_tree, count=())
+
+
+class RMSPropState(NamedTuple):
+    acc: object
+
+
+def rmsprop_init(params) -> RMSPropState:
+    return RMSPropState(acc=jax.tree.map(
+        lambda x: jnp.zeros_like(x, jnp.float32), params))
+
+
+def rmsprop_update(params, grads, state: RMSPropState, *, lr, decay=0.9,
+                   eps=1e-10):
+    acc = jax.tree.map(
+        lambda a, g: decay * a + (1 - decay) * jnp.square(
+            g.astype(jnp.float32)), state.acc, grads)
+    new_params = jax.tree.map(
+        lambda p, g, a: (p.astype(jnp.float32)
+                         - lr * g.astype(jnp.float32)
+                         / jnp.sqrt(a + eps)).astype(p.dtype),
+        params, grads, acc)
+    return new_params, RMSPropState(acc=acc)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def cosine_schedule(step, *, base_lr, warmup, total):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,77 @@
+"""Property-based tests (hypothesis) for the data generators and numeric
+invariants of the system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.tasks import (associative_recall_task, copy_task,
+                              priority_sort_task)
+from repro.data.curriculum import Curriculum
+from repro.distributed.compression import int8_roundtrip, quantize_int8
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_copy_task_targets_equal_inputs(length, seed):
+    key = jax.random.PRNGKey(seed)
+    inputs, targets, mask = copy_task(key, 2, length, 8, bits=6)
+    # the masked answer span must equal the presented sequence
+    seq = np.asarray(inputs[:, 1:1 + length, :6])
+    ans = np.asarray(targets[:, length + 2:2 * length + 2])
+    np.testing.assert_allclose(seq, ans)
+    assert float(mask.sum()) == 2 * length
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_recall_answer_is_next_item(num_items, seed):
+    key = jax.random.PRNGKey(seed)
+    inputs, targets, mask = associative_recall_task(key, 2, num_items, 6,
+                                                    bits=6)
+    assert float(mask.sum()) == 2 * 3        # item_len answer rows per batch
+    assert np.asarray(targets)[np.asarray(mask, bool)].size > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+def test_priority_sort_descending(num_items, seed):
+    key = jax.random.PRNGKey(seed)
+    inputs, targets, mask = priority_sort_task(key, 1, num_items, 8, bits=6)
+    prio = np.asarray(inputs[0, :8, 6])
+    vecs = np.asarray(inputs[0, :8, :6])
+    n_out = int(np.ceil(0.8 * num_items))
+    order = np.argsort(-prio[:num_items], kind="stable")
+    expected = vecs[order][:n_out]
+    got = np.asarray(targets[0, num_items + 1:num_items + 1 + n_out])
+    np.testing.assert_allclose(got, expected)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=500))
+def test_int8_quantization_error_bound(values):
+    x = jnp.asarray(values, jnp.float32)
+    q, scale = quantize_int8(x)
+    out = int8_roundtrip(x)
+    # error bounded by half a quantization step of the block scale
+    err = np.abs(np.asarray(out) - np.asarray(x))
+    bound = np.repeat(np.asarray(scale)[:, 0], 256)[:x.size] * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_curriculum_doubles_after_patience():
+    c = Curriculum(start_level=2, threshold=0.1, patience=3)
+    doubled = [c.update(0.05) for _ in range(3)]
+    assert doubled == [False, False, True]
+    assert c.level == 4
+    # a bad episode resets the streak
+    c.update(0.5)
+    assert c.update(0.05) is False
+
+
+def test_curriculum_sample_in_range():
+    rng = np.random.default_rng(0)
+    c = Curriculum(start_level=8)
+    for _ in range(20):
+        assert 1 <= c.sample_level(rng) <= 8

@@ -1,0 +1,70 @@
+"""Per-kernel shape/dtype sweeps asserting allclose vs the pure-jnp oracles
+(interpret-mode Pallas on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,H,N,W,k,block_n", [
+    (1, 1, 256, 16, 4, 64),
+    (2, 4, 1024, 32, 8, 256),
+    (3, 2, 512, 64, 4, 128),
+])
+def test_topk_read_sweep(B, H, N, W, k, block_n):
+    key = jax.random.PRNGKey(N + W)
+    q = jax.random.normal(key, (B, H, W))
+    mem = jax.random.normal(jax.random.PRNGKey(1), (B, N, W))
+    v1, i1 = ops.topk_read(q, mem, k, use_pallas=True, block_n=block_n)
+    v2, i2 = ref.topk_read_ref(q, mem, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5)
+    assert np.array_equal(np.sort(np.asarray(i1)), np.sort(np.asarray(i2)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["add", "set"])
+def test_scatter_rows_sweep(dtype, mode):
+    key = jax.random.PRNGKey(0)
+    for B, N, W, J in [(1, 16, 8, 4), (2, 64, 32, 10)]:
+        m = jax.random.normal(key, (B, N, W)).astype(dtype)
+        idx = jax.random.randint(jax.random.PRNGKey(J), (B, J), 0, N)
+        rows = jax.random.normal(jax.random.PRNGKey(2), (B, J, W)).astype(dtype)
+        a = ops.scatter_rows(m, idx, rows, mode, use_pallas=True)
+        b = ref.scatter_rows_ref(m, idx, rows, mode)
+        atol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=atol)
+
+
+def test_scatter_add_duplicates_accumulate():
+    m = jnp.zeros((1, 8, 4))
+    idx = jnp.array([[3, 3, 3]], jnp.int32)
+    rows = jnp.ones((1, 3, 4))
+    out = ops.scatter_rows(m, idx, rows, "add", use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out[0, 3]), 3.0)
+
+
+@pytest.mark.parametrize("R,W,T,bits", [(10, 16, 2, 4), (300, 64, 4, 8)])
+def test_lsh_hash_sweep(R, W, T, bits):
+    key = jax.random.PRNGKey(R)
+    x = jax.random.normal(key, (R, W))
+    planes = jax.random.normal(jax.random.PRNGKey(1), (T, bits, W))
+    h1 = ops.lsh_hash(x, planes, use_pallas=True)
+    h2 = ref.lsh_hash_ref(x, planes)
+    assert np.array_equal(np.asarray(h1), np.asarray(h2))
+    assert (np.asarray(h1) < 2 ** bits).all()
+
+
+@pytest.mark.parametrize("B,N", [(1, 128), (4, 2048)])
+def test_usage_argmin_sweep(B, N):
+    u = jax.random.randint(jax.random.PRNGKey(N), (B, N), 0, 1000)
+    a1 = ops.usage_argmin(u.astype(jnp.int32), use_pallas=True)
+    a2 = ref.usage_argmin_ref(u)
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_usage_argmin_tie_breaks_low_index():
+    u = jnp.array([[5, 1, 1, 3]], jnp.int32)
+    assert int(ops.usage_argmin(u, use_pallas=True)[0]) == 1

@@ -1,0 +1,122 @@
+"""Sharding rules resolution, optimizers, ANN index, SAM memory layer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ann as ann_lib
+from repro.core.types import MemoryConfig
+from repro.distributed.sharding import logical_spec, mesh_rules, shard
+from repro.optim import optimizers as opt
+
+
+def test_logical_spec_resolution():
+    mesh = jax.make_mesh((1,), ("data",))
+    spec = logical_spec(("batch", "seq"), (8, 128), mesh)
+    assert spec == P(("data",), None) or spec == P("data", None)
+
+
+def test_logical_spec_drops_nondividing_axes():
+    mesh = jax.make_mesh((1,), ("model",))
+    # vocab 7 not divisible by ... 1 divides everything; use size-1 mesh but
+    # simulate with a fake: divisibility logic is in _resolve.
+    from repro.distributed.sharding import _resolve
+    class FakeMesh:
+        axis_names = ("model",)
+        shape = {"model": 16}
+    assert _resolve("heads", FakeMesh(), 8) is None or True
+    # 8 heads on 16-way model axis: cannot divide -> dropped
+    assert _resolve("heads", FakeMesh(), 8) is None
+    assert _resolve("heads", FakeMesh(), 32) == "model"
+
+
+def test_shard_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", "embed") is x
+
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.adamw_update(params, grads, state, lr=0.05,
+                                         weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_rmsprop_decreases_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.rmsprop_init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.rmsprop_update(params, grads, state, lr=0.02)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((3,)) * 10}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr0 = opt.cosine_schedule(jnp.int32(0), base_lr=1.0, warmup=10, total=100)
+    lr_mid = opt.cosine_schedule(jnp.int32(10), base_lr=1.0, warmup=10,
+                                 total=100)
+    lr_end = opt.cosine_schedule(jnp.int32(100), base_lr=1.0, warmup=10,
+                                 total=100)
+    assert float(lr0) == 0.0
+    assert float(lr_mid) == pytest.approx(1.0)
+    assert float(lr_end) == pytest.approx(0.0, abs=1e-6)
+
+
+# ------------------------------- ANN index -------------------------------
+
+def test_ann_insert_query_recall(rng_key):
+    cfg = MemoryConfig(num_slots=128, word_size=16, lsh_tables=8, lsh_bits=4,
+                       lsh_bucket_size=16, ann="lsh")
+    planes = ann_lib.lsh_planes(rng_key, cfg)
+    mem = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 16))
+    state = ann_lib.ann_build(planes, mem, cfg)
+    # querying with an exact stored row must return its index as candidate
+    hits = 0
+    for i in range(0, 128, 8):
+        q = mem[:, i][:, None, :]                      # (1,1,W)
+        cands = ann_lib.ann_query(planes, state, q, cfg)
+        hits += int(i in np.asarray(cands[0, 0]).tolist())
+    assert hits >= 14, f"recall too low: {hits}/16"
+
+
+def test_ann_insert_updates_bucket(rng_key):
+    cfg = MemoryConfig(num_slots=8, word_size=8, lsh_tables=2, lsh_bits=3,
+                       lsh_bucket_size=4, ann="lsh")
+    planes = ann_lib.lsh_planes(rng_key, cfg)
+    state = ann_lib.ann_init(1, cfg)
+    row = jax.random.normal(rng_key, (1, 1, 8))
+    state = ann_lib.ann_insert(planes, state, jnp.array([[5]], jnp.int32),
+                               row, cfg)
+    cands = ann_lib.ann_query(planes, state, row, cfg)
+    assert 5 in np.asarray(cands[0, 0]).tolist()
+
+
+# ---------------------------- SAM memory layer ----------------------------
+
+def test_memory_layer_reads_what_it_wrote(rng_key):
+    from repro.configs import get_config, reduced
+    from repro.models import sam_layer
+    cfg = reduced(get_config("starcoder2_7b_sam"))
+    p = jax.tree.map(
+        lambda d: d.initialize(rng_key, jnp.float32),
+        sam_layer.memory_defs(cfg),
+        is_leaf=lambda x: hasattr(x, "initialize"))
+    state = sam_layer.init_memory_state(cfg, 2)
+    x = jax.random.normal(rng_key, (2, 64, cfg.d_model))
+    y, state2 = sam_layer.memory_layer_seq(p, cfg, x, state, segment=32)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert int(state2.step) == 2                      # two segments
+    # memory was written
+    assert float(jnp.abs(state2.memory).sum()) > 0.0

@@ -1,0 +1,65 @@
+"""End-to-end behaviour tests: SAM learns the paper's tasks, the LM training
+driver runs with checkpoint/resume, and the serving driver generates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.training import ModelSpec, train_task
+from repro.core.types import ControllerConfig, MemoryConfig
+
+
+MEM = MemoryConfig(num_slots=32, word_size=16, num_heads=2, k=4)
+CTL = ControllerConfig(input_size=10, hidden_size=64, output_size=8)
+
+
+def test_sam_learns_copy():
+    """Loss on the copy task must clearly decrease (paper Fig. 2 behaviour,
+    CPU-scale)."""
+    _, hist = train_task(ModelSpec("sam", MEM, CTL), "copy", steps=250,
+                         batch=16, level=2, max_level=4, lr=1e-3)
+    first = np.mean([h["loss"] for h in hist[:25]])
+    last = np.mean([h["loss"] for h in hist[-25:]])
+    assert last < first * 0.75, (first, last)
+
+
+def test_sam_ann_runs_same_task():
+    _, hist = train_task(ModelSpec("sam_ann", MEM, CTL), "copy", steps=30,
+                         batch=4, level=2, max_level=4, lr=1e-3)
+    assert np.isfinite([h["loss"] for h in hist]).all()
+
+
+def test_curriculum_advances():
+    from repro.data.curriculum import Curriculum
+    cur = Curriculum(start_level=1, threshold=10.0, patience=5, max_level=8)
+    _, hist = train_task(ModelSpec("lstm", MEM, CTL), "copy", steps=25,
+                         batch=4, level=1, max_level=8, curriculum=cur,
+                         lr=1e-3)
+    assert cur.level > 1                      # threshold is loose: must move
+
+
+def test_lm_train_driver_with_checkpoint(tmp_path):
+    from repro.launch.train import train
+    state, log = train("hymba_1_5b", steps=6, batch=2, seq=64,
+                       ckpt_dir=str(tmp_path), ckpt_every=2, log_every=2)
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) is not None
+    # resume runs further without error
+    state2, _ = train("hymba_1_5b", steps=8, batch=2, seq=64,
+                      ckpt_dir=str(tmp_path), ckpt_every=4, log_every=4)
+
+
+def test_serve_driver_generates():
+    from repro.launch.serve import serve
+    res = serve("h2o_danube_3_4b", batch=2, prompt_len=4, gen_len=4,
+                max_len=16)
+    assert res["tokens"].shape == (2, 4)
+
+
+def test_lm_loss_decreases_quickly(rng_key):
+    """A tiny LM on the structured synthetic corpus: loss decreases."""
+    from repro.launch.train import train
+    state, log = train("starcoder2_7b", steps=30, batch=4, seq=128,
+                       lr=2e-3, log_every=1)
+    losses = [m["loss"] for _, m in log]
+    assert losses[-1] < losses[0], losses
