@@ -1,0 +1,126 @@
+"""Kernel-backend latency: ref vs the fused Pallas sparse-write kernel.
+
+Measures one SAM write-side step (LRA erase + w^W a^T scatter-add + usage
+stamp) across memory sizes N ∈ {4k, 64k, 1M} on the "ref" backend and on
+the fused kernel, and records the trajectory to
+``experiments/bench/BENCH_kernels.json``.
+
+On TPU the fused backend is ``"pallas"`` (compiled); elsewhere it falls
+back to ``"pallas-interpret"``, whose absolute numbers only sanity-check
+the kernel's O(J·W) grid (independent of N) — the scaling story, not the
+absolute speed, is the claim reproducible on CPU. ``--topk`` additionally
+benches the tiled top-K read sweep (skipped by default on CPU: interpret
+mode executes N/block_n grid steps in Python).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_kernels [--quick] [--topk]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.kernels import ops
+
+OUT_DIR = "experiments/bench"
+OUT_PATH = os.path.join(OUT_DIR, "BENCH_kernels.json")
+
+B, W, H, K = 1, 32, 4, 4
+J = H * (K + 1)
+DELTA = 0.005
+
+
+def _write_case(n: int):
+    key = jax.random.PRNGKey(n)
+    mem = jax.random.normal(key, (B, n, W))
+    last = jnp.zeros((B, n), jnp.int32)
+    widx = jax.random.randint(jax.random.PRNGKey(1), (B, J), 0, n)
+    lra = widx.reshape(B, H, K + 1)[..., -1]
+    ww = jax.random.uniform(jax.random.PRNGKey(2), (B, J))
+    a = jax.random.normal(jax.random.PRNGKey(3), (B, H, W))
+    step = jnp.int32(1)
+    return mem, last, widx, ww, a, lra, step
+
+
+def bench_sparse_write(n: int, backend: str):
+    mem, last, widx, ww, a, lra, step = _write_case(n)
+
+    @jax.jit
+    def f(mem, last, ww, a):
+        return ops.sparse_write_update(mem, last, widx, ww, a, lra, step,
+                                       delta=DELTA, backend=backend)
+
+    return timed(lambda: f(mem, last, ww, a))
+
+
+def bench_topk(n: int, backend: str, block_n: int = 512):
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, W))
+    mem = jax.random.normal(jax.random.PRNGKey(n), (B, n, W))
+
+    @jax.jit
+    def f(q, mem):
+        return ops.topk_read(q, mem, K, backend=backend, block_n=block_n)
+
+    return timed(lambda: f(q, mem))
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="small sizes only (CI smoke)")
+    p.add_argument("--topk", action="store_true",
+                   help="also bench the tiled top-K read kernel")
+    p.add_argument("--sizes", type=int, nargs="*", default=None)
+    args = p.parse_args(argv)
+
+    on_tpu = jax.default_backend() == "tpu"
+    pallas_be = "pallas" if on_tpu else "pallas-interpret"
+    sizes = args.sizes or ([4096, 16384] if args.quick
+                           else [4096, 65536, 1048576])
+
+    results = []
+    for n in sizes:
+        for be in ("ref", pallas_be):
+            us = bench_sparse_write(n, be)
+            results.append({"op": "sparse_write_update", "backend": be,
+                            "N": n, "us_per_call": us})
+            row(f"sparse_write/{be}/N={n}", us)
+        if args.topk:
+            for be in ("ref", pallas_be):
+                us = bench_topk(n, be)
+                results.append({"op": "topk_read", "backend": be, "N": n,
+                                "us_per_call": us})
+                row(f"topk_read/{be}/N={n}", us)
+
+    # Speedup column: ref / fused at each size (on CPU-interpret this mostly
+    # demonstrates N-independence of the fused grid, not a speedup).
+    for n in sizes:
+        pair = {r["backend"]: r["us_per_call"] for r in results
+                if r["op"] == "sparse_write_update" and r["N"] == n}
+        if len(pair) == 2:
+            ref_us = pair["ref"]
+            fused_us = pair[pallas_be]
+            row(f"sparse_write/speedup/N={n}", fused_us,
+                f"{ref_us / fused_us:.2f}x")
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    record = {
+        "bench": "kernels",
+        "device": jax.devices()[0].platform,
+        "jax": jax.__version__,
+        "shapes": {"B": B, "W": W, "H": H, "K": K, "J": J},
+        "pallas_backend": pallas_be,
+        "results": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {OUT_PATH} ({len(results)} rows)")
+    return record
+
+
+if __name__ == "__main__":
+    main()

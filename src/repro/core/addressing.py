@@ -3,6 +3,11 @@ reads (eq. 4), plus usage tracking / least-recently-accessed selection.
 
 The sparse path only backpropagates through K rows of memory per head — the
 defining property of SAM (§3.1).
+
+Every O(N) operation here dispatches through `repro.kernels.ops`, so the
+hot path runs the Pallas TPU kernels when the caller threads a
+``backend=`` (normally `MemoryConfig.backend`) and falls back to the
+pure-jnp oracles otherwise. See docs/kernels.md.
 """
 from __future__ import annotations
 
@@ -10,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import SparseRead
+from repro.kernels import ops
 
 _NEG = -1e9
 
@@ -42,13 +48,19 @@ def topk_from_sims(sims: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
 
 
 def sparse_read_exact(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
-                      sims_fn=cosine_sim) -> SparseRead:
+                      sims_fn=cosine_sim, *, backend=None) -> SparseRead:
     """'Linear index' SAM read: exact K nearest by similarity, softmax over the
     kept K entries only (§3.1 — remaining entries set to zero).
 
-    Gradients flow only through the K gathered rows (take_along_axis)."""
-    sims = sims_fn(jax.lax.stop_gradient(q), jax.lax.stop_gradient(m))
-    _, idx = topk_from_sims(sims, k)                        # (B, H, K), no grads
+    Gradients flow only through the K gathered rows (take_along_axis). The
+    O(N·W) similarity sweep runs on the kernel backend (the index selection
+    is under stop_gradient, so no kernel VJP is needed)."""
+    if sims_fn is cosine_sim:
+        _, idx = ops.topk_read(jax.lax.stop_gradient(q),
+                               jax.lax.stop_gradient(m), k, backend=backend)
+    else:
+        sims = sims_fn(jax.lax.stop_gradient(q), jax.lax.stop_gradient(m))
+        _, idx = topk_from_sims(sims, k)                    # (B, H, K), no grads
     words = gather_rows(m, idx)                             # (B, H, K, W)
     # Re-compute similarities for the selected rows only => sparse gradients.
     sel = _rerank(q, words) * beta[..., None]
@@ -83,17 +95,16 @@ def gather_rows(m: jax.Array, idx: jax.Array) -> jax.Array:
     return rows.reshape(idx.shape + (m.shape[-1],))
 
 
-def scatter_add_rows(m: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array:
+def scatter_add_rows(m: jax.Array, idx: jax.Array, rows: jax.Array,
+                     *, backend=None) -> jax.Array:
     """m[b, idx[b, j]] += rows[b, j]. idx: (B, J), rows: (B, J, W)."""
-    B = m.shape[0]
-    b = jnp.arange(B)[:, None]
-    return m.at[b, idx].add(rows)
+    return ops.scatter_rows(m, idx, rows, mode="add", backend=backend)
 
 
-def scatter_set_rows(m: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array:
-    B = m.shape[0]
-    b = jnp.arange(B)[:, None]
-    return m.at[b, idx].set(rows)
+def scatter_set_rows(m: jax.Array, idx: jax.Array, rows: jax.Array,
+                     *, backend=None) -> jax.Array:
+    """m[b, idx[b, j]] = rows[b, j] (last duplicate wins)."""
+    return ops.scatter_rows(m, idx, rows, mode="set", backend=backend)
 
 
 def _rerank(q: jax.Array, words: jax.Array, eps: float = 1e-6) -> jax.Array:
@@ -128,12 +139,25 @@ def update_last_access(last_access: jax.Array, idx: jax.Array, w: jax.Array,
     return last_access.at[b, idx].max(upd)
 
 
-def least_recently_accessed(last_access: jax.Array, n: int) -> jax.Array:
+def least_recently_accessed(last_access: jax.Array, n: int,
+                            *, backend=None) -> jax.Array:
     """Return the n least-recently-accessed slot indices per batch (B, n).
 
     Eq. (6): argmin of usage; ties broken arbitrarily (here: lowest index)."""
-    _, idx = jax.lax.top_k(-last_access, n)
-    return idx
+    return ops.lra_topn(last_access, n, backend=backend)
+
+
+def sparse_write_update(memory: jax.Array, last_access: jax.Array,
+                        write_idx: jax.Array, write_w: jax.Array,
+                        a: jax.Array, lra_idx: jax.Array, step: jax.Array,
+                        delta: float, *, backend=None):
+    """Fused SAM write side (eqs. 3/5/6 + the U^(2) update for the written
+    rows): erase the LRA rows, scatter-add w^W a^T, stamp `step` into
+    `last_access` wherever the write weight exceeds δ. One kernel dispatch
+    on the Pallas backends. Returns (memory', last_access')."""
+    return ops.sparse_write_update(memory, last_access, write_idx, write_w,
+                                   a, lra_idx, step, delta=delta,
+                                   backend=backend)
 
 
 def dam_usage_update(usage: jax.Array, read_w: jax.Array, write_w: jax.Array,

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import ANNState, MemoryConfig
+from repro.kernels import ops
 
 
 def lsh_planes(key, cfg: MemoryConfig) -> jax.Array:
@@ -26,13 +27,12 @@ def lsh_planes(key, cfg: MemoryConfig) -> jax.Array:
     return jax.random.normal(key, (cfg.lsh_tables, cfg.lsh_bits, cfg.word_size))
 
 
-def lsh_hash(planes: jax.Array, x: jax.Array) -> jax.Array:
-    """x: (..., W) -> bucket ids (..., T)."""
-    # sign bits -> integer bucket id per table.
-    proj = jnp.einsum("...w,tbw->...tb", x, planes)
-    bits = (proj > 0).astype(jnp.int32)
-    weights = 2 ** jnp.arange(planes.shape[1], dtype=jnp.int32)
-    return (bits * weights).sum(axis=-1)
+def lsh_hash(planes: jax.Array, x: jax.Array, *, backend=None) -> jax.Array:
+    """x: (..., W) -> bucket ids (..., T), sign bits packed per table.
+
+    Dispatches to the Pallas signature-hash kernel on the pallas backends
+    (bucket ids are integers and the planes are fixed — no gradients)."""
+    return ops.lsh_hash(x, planes, backend=backend)
 
 
 def ann_init(batch: int, cfg: MemoryConfig) -> ANNState:
@@ -66,7 +66,7 @@ def ann_insert(planes: jax.Array, state: ANNState, idx: jax.Array,
     table (ring overwrite within the bucket)."""
     B, J = idx.shape
     T = cfg.lsh_tables
-    bucket_ids = lsh_hash(planes, rows)                       # (B, J, T)
+    bucket_ids = lsh_hash(planes, rows, backend=cfg.backend)  # (B, J, T)
     b = jnp.arange(B)[:, None, None]                          # (B,1,1)
     t = jnp.arange(T)[None, None, :]                          # (1,1,T)
     cur = state.cursor[b, t, bucket_ids]                      # (B, J, T)
@@ -81,7 +81,7 @@ def ann_query(planes: jax.Array, state: ANNState, q: jax.Array,
               cfg: MemoryConfig) -> jax.Array:
     """q: (B, H, W) -> candidate slot indices (B, H, T * bucket_size)."""
     B, H, _ = q.shape
-    bucket_ids = lsh_hash(planes, q)                          # (B, H, T)
+    bucket_ids = lsh_hash(planes, q, backend=cfg.backend)     # (B, H, T)
     b = jnp.arange(B)[:, None, None]
     t = jnp.arange(cfg.lsh_tables)[None, None, :]
     cands = state.buckets[b, t, bucket_ids]                   # (B, H, T, S)

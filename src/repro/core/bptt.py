@@ -56,7 +56,8 @@ def replay_step(params, cfg: SAMConfig, mem_prev, read_w_prev, read_words_prev,
     w_lra = (alpha * (1.0 - gamma))[..., None]                      # (B,H,1)
     ww = jnp.concatenate([w_read, w_lra], axis=-1).reshape(B, -1)
     lra_idx = write_idx.reshape(B, H, K + 1)[..., -1]
-    memory = apply_write(mem_prev, write_idx, ww, a, lra_idx, cfg)
+    memory = apply_write(mem_prev, write_idx, ww, a, lra_idx, cfg,
+                         backend=cfg.memory.backend)
 
     # Read at the recorded indices.
     words = addr.gather_rows(memory, read_idx)                      # (B,H,K,W)
@@ -123,7 +124,8 @@ def make_sparse_unroll(cfg: SAMConfig):
             mem_t, g_mem, g_rw, g_rwords, g_h, g_c, g_params = carry
             r, g_y = step_in
             # Roll the memory back: restore the touched rows (§3.4).
-            mem_prev = addr.scatter_set_rows(mem_t, r.write_idx, r.old_rows)
+            mem_prev = addr.scatter_set_rows(mem_t, r.write_idx, r.old_rows,
+                                             backend=cfg.memory.backend)
 
             def f(p, mem, rw_prev, rwords_prev, h_prev, c_prev, x):
                 return replay_step(p, cfg, mem, rw_prev, rwords_prev, h_prev,

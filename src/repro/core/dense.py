@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core import addressing as addr
 from repro.core.controller import linear, linear_init, lstm_init, lstm_step, lstm_zero_state
 from repro.core.types import ControllerConfig, DenseState, MemoryConfig
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,7 +74,7 @@ def _dam_step(params, cfg: DenseConfig, s: DenseState, x: jax.Array):
     gamma = jax.nn.sigmoid(p[..., 2 * W + 2])
 
     # Least-used indicator from discounted usage U^(1) (dense one-hot).
-    lra = jnp.argmin(s.usage, axis=-1)                       # (B,)
+    lra = ops.usage_argmin(s.usage, backend=mem.backend)     # (B,)
     i_u = jax.nn.one_hot(lra, N)[:, None, :]                 # (B,1,N)
     write_w = alpha[..., None] * (gamma[..., None] * s.read_w
                                   + (1 - gamma[..., None]) * i_u)

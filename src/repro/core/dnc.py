@@ -234,8 +234,9 @@ def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
     rk, rb, modes, wk, wb, er, wv, free, alloc_g, write_g = _parse_iface(
         cfg, linear(params["iface"], h))
 
+    be = mem.backend
     # ---- sparse write, identical mechanism to SAM (Suppl. D.1) ----
-    lra = addr.least_recently_accessed(s.usage, 1)                  # (B,1)
+    lra = addr.least_recently_accessed(s.usage, 1, backend=be)      # (B,1)
     prev_idx = s.read.indices.reshape(B, -1)                        # (B,R*K)
     prev_w = s.read.weights.reshape(B, -1)
     # Normalize previous read weights across heads for the interpolation.
@@ -247,15 +248,17 @@ def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
         write_g[:, None] * alloc_g[:, None] * jnp.ones((B, 1))], axis=-1)
 
     # Erase LRA then scatter-add write vector.
-    memory = addr.scatter_set_rows(s.memory, lra, jnp.zeros((B, 1, W)))
-    memory = addr.scatter_add_rows(memory, widx, ww[..., None] * wv[:, None, :])
+    memory = addr.scatter_set_rows(s.memory, lra, jnp.zeros((B, 1, W)),
+                                   backend=be)
+    memory = addr.scatter_add_rows(memory, widx,
+                                   ww[..., None] * wv[:, None, :], backend=be)
 
     # ---- sparse temporal linkage (Suppl. D eqs. 17-22), stop-gradient ----
     ww_sg = jax.lax.stop_gradient(ww)
     n_mat, p_mat, prec_sp = _update_linkage(s, widx, ww_sg, KL)
 
     # ---- reads: content + sparse forward/backward link reads ----
-    cont = addr.sparse_read_exact(rk, memory, rb, K)
+    cont = addr.sparse_read_exact(rk, memory, rb, K, backend=be)
     fwd_idx, fwd_w = _link_read(s.n_mat, s.read, K)
     bwd_idx, bwd_w = _link_read(s.p_mat, s.read, K)
 

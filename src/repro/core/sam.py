@@ -101,19 +101,24 @@ def write_plan(cfg: SAMConfig, prev_read: SparseRead, lra_idx: jax.Array,
 
 def apply_write(memory: jax.Array, write_idx_flat: jax.Array,
                 write_w: jax.Array, a: jax.Array, lra_idx: jax.Array,
-                cfg: SAMConfig):
+                cfg: SAMConfig, *, backend=None):
     """Erase the LRA rows (R_t = I^U 1^T) then scatter-add the outer product
-    A_t = w^W a^T restricted to the K+1 touched rows per head."""
+    A_t = w^W a^T restricted to the K+1 touched rows per head.
+
+    Memory-only variant of the fused write (used by the BPTT replay, which
+    reconstructs usage-free gradients); `sam_step` itself uses
+    `addr.sparse_write_update` to also fold in the usage update."""
     B, H, _ = a.shape
     Kp1 = cfg.write_rows_per_head
     # Erase: zero LRA rows.
     zeros = jnp.zeros((B, H, memory.shape[-1]), memory.dtype)
-    memory = addr.scatter_set_rows(memory, lra_idx, zeros)
+    memory = addr.scatter_set_rows(memory, lra_idx, zeros, backend=backend)
     # Add: per head, rows = w (B,H,K+1) ⊗ a (B,H,W).
     w = write_w.reshape(B, H, Kp1)
     add_rows = w[..., None] * a[:, :, None, :]                 # (B,H,K+1,W)
     memory = addr.scatter_add_rows(memory, write_idx_flat,
-                                   add_rows.reshape(B, H * Kp1, -1))
+                                   add_rows.reshape(B, H * Kp1, -1),
+                                   backend=backend)
     return memory
 
 
@@ -123,20 +128,25 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
     mem = cfg.memory
     H, K = mem.num_heads, mem.k
     B = x.shape[0]
+    be = mem.backend
 
     ctrl_in = jnp.concatenate([x, state.read.words.reshape(B, -1)], axis=-1)
     ctrl, h = lstm_step(params["lstm"], state.ctrl, ctrl_in)
     q, a, beta, alpha, gamma = _interface(params, cfg, h)
 
     # ---- write (uses the previous step's read locations, eq. 5) ----
-    lra_idx = addr.least_recently_accessed(state.last_access, H)   # (B, H)
+    step = state.step + 1
+    lra_idx = addr.least_recently_accessed(state.last_access, H, backend=be)
     widx_flat, ww_flat, widx, ww = write_plan(cfg, state.read, lra_idx,
                                               alpha, gamma)
     deltas = None
     if collect_deltas:
         deltas = StepDeltas(write_idx=widx_flat,
                             old_rows=addr.gather_rows(state.memory, widx_flat))
-    memory = apply_write(state.memory, widx_flat, ww_flat, a, lra_idx, cfg)
+    # Fused: LRA erase + w^W a^T scatter-add + write-side usage stamp.
+    memory, la = addr.sparse_write_update(state.memory, state.last_access,
+                                          widx_flat, ww_flat, a, lra_idx,
+                                          step, mem.delta, backend=be)
 
     # ---- read (content-based, sparse) ----
     if mem.ann == "lsh":
@@ -151,13 +161,10 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
             planes, state.ann, widx_flat,
             jax.lax.stop_gradient(addr.gather_rows(memory, widx_flat)), mem)
     else:
-        read = addr.sparse_read_exact(q, memory, beta, K)
+        read = addr.sparse_read_exact(q, memory, beta, K, backend=be)
         ann_state = state.ann
 
-    # ---- usage (U^(2): step of last non-negligible access) ----
-    step = state.step + 1
-    la = addr.update_last_access(state.last_access, widx_flat, ww_flat, step,
-                                 mem.delta)
+    # ---- usage (U^(2)) for the read side; the write side was fused above ----
     la = addr.update_last_access(la, read.indices.reshape(B, -1),
                                  read.weights.reshape(B, -1), step, mem.delta)
 

@@ -24,6 +24,10 @@ class MemoryConfig:
     delta: float = 0.005           # usage threshold δ (paper §3.2)
     # ANN backend: 'exact' (linear re-rank, still sparse-gradient) or 'lsh'.
     ann: str = "exact"
+    # Kernel backend: 'ref' | 'pallas' | 'pallas-interpret' | a registered
+    # custom name (repro.kernels.registry). None -> $REPRO_KERNEL_BACKEND
+    # -> 'ref'. Trace-time static; threaded through every memory op.
+    backend: Optional[str] = None
     lsh_tables: int = 4
     lsh_bits: int = 8              # buckets per table = 2**bits
     lsh_bucket_size: int = 32

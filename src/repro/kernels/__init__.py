@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Kernel layer: Pallas TPU kernels for the SAM hot path plus pure-jnp
+# oracles (`ref.py`). `ops.py` is the only entry point the rest of the
+# repo uses — it dispatches through the backend registry (`registry.py`,
+# "ref" | "pallas" | "pallas-interpret", selectable per MemoryConfig or
+# via REPRO_KERNEL_BACKEND). See docs/kernels.md for every kernel's
+# contract and how to add a backend.

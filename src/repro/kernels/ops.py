@@ -1,47 +1,228 @@
-"""Public jit'd wrappers for the Pallas kernels with oracle fallback.
+"""Backend-dispatched public wrappers for the kernel suite.
 
-`use_pallas=False` (or unsupported shapes) routes to the pure-jnp reference —
-useful on CPU where interpret-mode Pallas is slow for large N. On TPU the
-Pallas path is the production one."""
+Every op takes ``backend=`` (a name, a :class:`~repro.kernels.registry.
+KernelBackend`, or None → `REPRO_KERNEL_BACKEND` env var → ``"ref"``) and
+routes to that backend's implementation, falling back to the pure-jnp
+oracles in `kernels/ref.py`. The backend choice is trace-time static.
+
+Silent-fallback rule (documented contract, covered by tests): the Pallas
+``topk_read``, ``lra_topn`` and ``usage_argmin`` tile the N axis, so when
+N is not divisible by the (clamped) block size — or the input dtype is
+unsupported (float ``lra_topn``) — the op silently uses the reference
+implementation instead of failing: results are identical, only the
+execution path differs. ``scatter_rows``, ``lsh_hash`` and
+``sparse_write_update`` have no shape restrictions.
+
+Gradients: the Pallas kernels have no VJP of their own, so the mutating ops
+(`scatter_rows`, `sparse_write_update`) are wrapped in closed-form
+`jax.custom_vjp` rules here — both the naive SAM unroll and the rollback
+BPTT replay differentiate through them. The selection ops (`topk_read`,
+`lra_topn`, `usage_argmin`, `lsh_hash`) return integers or are used under
+`stop_gradient` and need no rule.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.lsh_hash import lsh_hash as lsh_hash_pallas
+from repro.kernels.registry import BackendSpec, resolve
 from repro.kernels.scatter_rows import scatter_rows as scatter_rows_pallas
+from repro.kernels.sparse_write import \
+    sparse_write_update as sparse_write_pallas
 from repro.kernels.topk_read import topk_read as topk_read_pallas
+from repro.kernels.usage_argmin import lra_topn as lra_topn_pallas
 from repro.kernels.usage_argmin import usage_argmin as usage_argmin_pallas
 
 
-def topk_read(q, mem, k: int, *, use_pallas: bool = False,
-              block_n: int = 512, interpret: bool = True):
-    if use_pallas and mem.shape[1] % block_n == 0:
-        return topk_read_pallas(q, mem, k=k, block_n=block_n,
-                                interpret=interpret)
+def _zero_ct(x):
+    """Zero cotangent with the dtype JAX expects (float0 for ints)."""
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.zeros_like(x)
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+def _detach_int(x):
+    """Detach an integer array from the autodiff tracer chain.
+
+    `lax.stop_gradient` is an identity short-circuit for ints, so an int32
+    output of a `custom_vjp` still carries a (float0) tangent tracer — and
+    JAX's integer scatter-max JVP rule downstream is broken (it mixes f32
+    normalizers into an int select). `bitwise_or` has a `defjvp_zero` rule,
+    so ``x | 0`` produces the plain primal with a symbolic-zero tangent."""
+    return jnp.bitwise_or(x, jnp.zeros((), x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Selection ops (no gradients needed)
+# --------------------------------------------------------------------------
+
+def topk_read(q, mem, k: int, *, backend: BackendSpec = None,
+              block_n: int = 512):
+    """q: (B,H,W), mem: (B,N,W) -> (vals, idx) each (B,H,k), cosine
+    similarity descending."""
+    be = resolve(backend)
+    if (impl := be.impl("topk_read")) is not None:
+        return impl(q, mem, k, block_n=block_n)
+    bn = min(block_n, mem.shape[1])
+    if be.use_pallas and mem.shape[1] % bn == 0:
+        return topk_read_pallas(q, mem, k=k, block_n=bn,
+                                interpret=be.interpret)
     return ref.topk_read_ref(q, mem, k)
 
 
-def scatter_rows(mem, idx, rows, mode: str = "add", *,
-                 use_pallas: bool = False, interpret: bool = True):
-    if use_pallas:
-        return scatter_rows_pallas(mem, idx, rows, mode=mode,
-                                   interpret=interpret)
-    return ref.scatter_rows_ref(mem, idx, rows, mode)
-
-
-def lsh_hash(x, planes, *, use_pallas: bool = False, interpret: bool = True):
-    if use_pallas:
+def lsh_hash(x, planes, *, backend: BackendSpec = None):
+    """x: (..., W), planes: (T, bits, W) -> bucket ids (..., T) int32."""
+    be = resolve(backend)
+    if (impl := be.impl("lsh_hash")) is not None:
+        return impl(x, planes)
+    if be.use_pallas:
         shape = x.shape
         out = lsh_hash_pallas(x.reshape(-1, shape[-1]), planes,
-                              interpret=interpret)
+                              interpret=be.interpret)
         return out.reshape(shape[:-1] + (planes.shape[0],))
     return ref.lsh_hash_ref(x, planes)
 
 
-def usage_argmin(last_access, *, use_pallas: bool = False,
-                 interpret: bool = True):
-    if use_pallas:
-        return usage_argmin_pallas(last_access, interpret=interpret)
+def usage_argmin(last_access, *, backend: BackendSpec = None,
+                 block_n: int = 1024):
+    """last_access: (B, N) -> (B,) int32 argmin (lowest index on ties)."""
+    be = resolve(backend)
+    if (impl := be.impl("usage_argmin")) is not None:
+        return impl(last_access)
+    bn = min(block_n, last_access.shape[1])
+    if be.use_pallas and last_access.shape[1] % bn == 0:
+        return usage_argmin_pallas(last_access, block_n=bn,
+                                   interpret=be.interpret)
     return ref.usage_argmin_ref(last_access)
+
+
+def lra_topn(last_access, n: int, *, backend: BackendSpec = None,
+             block_n: int = 1024):
+    """last_access: (B, N) -> (B, n) int32 least-recently-accessed rows,
+    most stale first (ties toward the lowest index)."""
+    be = resolve(backend)
+    if (impl := be.impl("lra_topn")) is not None:
+        return impl(last_access, n)
+    bn = min(block_n, last_access.shape[1])
+    # Integer inputs only on the kernel path: the tiled kernel compares in
+    # int32, and float usage tables (e.g. DAM's U^(1)) would silently
+    # truncate — those fall back to the exact reference.
+    if (be.use_pallas and jnp.issubdtype(last_access.dtype, jnp.integer)
+            and last_access.shape[1] % bn == 0 and n <= bn):
+        return lra_topn_pallas(last_access, n=n, block_n=bn,
+                               interpret=be.interpret)
+    return ref.lra_topn_ref(last_access, n)
+
+
+# --------------------------------------------------------------------------
+# scatter_rows (differentiable)
+# --------------------------------------------------------------------------
+
+def scatter_rows(mem, idx, rows, mode: str = "add", *,
+                 backend: BackendSpec = None):
+    """mem: (B,N,W), idx: (B,J) int32, rows: (B,J,W) -> updated memory.
+
+    'add' accumulates duplicate indices; 'set' takes the last write
+    (sequential semantics, j ascending)."""
+    be = resolve(backend)
+    if (impl := be.impl("scatter_rows")) is not None:
+        return impl(mem, idx, rows, mode=mode)
+    if be.use_pallas:
+        return _scatter_rows_vjp(mem, idx, rows, mode, be.interpret)
+    return ref.scatter_rows_ref(mem, idx, rows, mode)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _scatter_rows_vjp(mem, idx, rows, mode, interpret):
+    return scatter_rows_pallas(mem, idx, rows, mode=mode, interpret=interpret)
+
+
+def _scatter_rows_fwd(mem, idx, rows, mode, interpret):
+    return _scatter_rows_vjp(mem, idx, rows, mode, interpret), idx
+
+
+def _scatter_rows_bwd(mode, interpret, idx, g):
+    B, J = idx.shape
+    b = jnp.arange(B)[:, None]
+    g_gather = g[b, idx]                              # (B, J, W)
+    if mode == "add":
+        return g, _zero_ct(idx), g_gather
+    # 'set': overwritten rows receive no cotangent; among duplicates only
+    # the last write survives the primal, so only it gets the cotangent.
+    g_mem = g.at[b, idx].set(0.0)
+    later_same = (idx[:, :, None] == idx[:, None, :]) \
+        & (jnp.arange(J)[None, :] > jnp.arange(J)[:, None])[None]
+    is_last = ~later_same.any(-1)                     # (B, J)
+    return g_mem, _zero_ct(idx), jnp.where(is_last[..., None], g_gather, 0.0)
+
+
+_scatter_rows_vjp.defvjp(_scatter_rows_fwd, _scatter_rows_bwd)
+
+
+# --------------------------------------------------------------------------
+# Fused SAM write + usage update (differentiable)
+# --------------------------------------------------------------------------
+
+def sparse_write_update(mem, last_access, write_idx, write_w, a, lra_idx,
+                        step, *, delta: float, backend: BackendSpec = None):
+    """Fused LRA erase + scatter-add of w^W a^T + last-access update.
+
+    See `ref.sparse_write_update_ref` for the exact contract. Returns
+    (mem', last_access'). The usage output is non-differentiable (the paper
+    passes no gradients through U^(2)) and is explicitly detached so
+    downstream integer scatter ops never see a tangent tracer."""
+    be = resolve(backend)
+    if (impl := be.impl("sparse_write_update")) is not None:
+        out = impl(mem, last_access, write_idx, write_w, a, lra_idx, step,
+                   delta=delta)
+    elif be.use_pallas:
+        out = _sparse_write_vjp(mem, last_access, write_idx, write_w, a,
+                                lra_idx, step, delta, be.interpret)
+    else:
+        out = ref.sparse_write_update_ref(mem, last_access, write_idx,
+                                          write_w, a, lra_idx, step, delta)
+    mem_out, la_out = out
+    return mem_out, _detach_int(la_out)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def _sparse_write_vjp(mem, last_access, write_idx, write_w, a, lra_idx,
+                      step, delta, interpret):
+    return sparse_write_pallas(mem, last_access, write_idx, write_w, a,
+                               lra_idx, step, delta=delta,
+                               interpret=interpret)
+
+
+def _sparse_write_fwd(mem, last_access, write_idx, write_w, a, lra_idx,
+                      step, delta, interpret):
+    out = _sparse_write_vjp(mem, last_access, write_idx, write_w, a,
+                            lra_idx, step, delta, interpret)
+    return out, (last_access, write_idx, a, write_w, lra_idx, step)
+
+
+def _sparse_write_bwd(delta, interpret, res, ct):
+    last_access, write_idx, a, write_w, lra_idx, step = res
+    g_mem_out, _ = ct                                 # la' is int: float0 ct
+    B, H, W = a.shape
+    J = write_idx.shape[1]
+    kp1 = J // H
+    b = jnp.arange(B)[:, None]
+    # mem' rows: erased rows lose their mem dependence, all others identity.
+    g_mem = g_mem_out.at[b, lra_idx].set(0.0)
+    # w_j and a_h see the output cotangent at their target rows; duplicates
+    # each read the same row (the primal sums their contributions).
+    g_rows = g_mem_out[b, write_idx]                  # (B, J, W)
+    a_per_j = jnp.repeat(a, kp1, axis=1)              # (B, J, W)
+    g_w = (g_rows * a_per_j).sum(-1)                  # (B, J)
+    g_a = (write_w.reshape(B, H, kp1)[..., None]
+           * g_rows.reshape(B, H, kp1, W)).sum(2)     # (B, H, W)
+    return (g_mem, _zero_ct(last_access), _zero_ct(write_idx), g_w, g_a,
+            _zero_ct(lra_idx), _zero_ct(step))
+
+
+_sparse_write_vjp.defvjp(_sparse_write_fwd, _sparse_write_bwd)

@@ -19,10 +19,18 @@ def topk_read_ref(q: jax.Array, mem: jax.Array, k: int):
 def scatter_rows_ref(mem: jax.Array, idx: jax.Array, rows: jax.Array,
                      mode: str = "add"):
     """mem: (B,N,W), idx: (B,J), rows: (B,J,W). Sequential semantics for
-    duplicate indices in 'set' mode (later j wins)."""
+    duplicate indices in 'set' mode (later j wins) — made explicit below
+    because XLA's scatter-set order for conflicting updates is otherwise
+    implementation-defined across platforms."""
     b = jnp.arange(mem.shape[0])[:, None]
     if mode == "add":
         return mem.at[b, idx].add(rows)
+    # Replace every duplicate's row with its last occurrence's row, so the
+    # scatter writes identical values regardless of XLA's update order.
+    J = idx.shape[1]
+    eq = idx[:, :, None] == idx[:, None, :]                  # (B, J, J)
+    last = jnp.argmax(jnp.where(eq, jnp.arange(J)[None, None, :], -1), -1)
+    rows = jnp.take_along_axis(rows, last[..., None], axis=1)
     return mem.at[b, idx].set(rows)
 
 
@@ -38,3 +46,41 @@ def usage_argmin_ref(last_access: jax.Array):
     """last_access: (B, N) -> LRA index per batch (B,) int32 (lowest index
     wins ties)."""
     return jnp.argmin(last_access, axis=-1).astype(jnp.int32)
+
+
+def lra_topn_ref(last_access: jax.Array, n: int):
+    """last_access: (B, N) -> the n least-recently-accessed slot indices per
+    batch, (B, n) int32, most stale first. Ties break toward the lowest
+    index (top_k stability)."""
+    _, idx = jax.lax.top_k(-last_access, n)
+    return idx.astype(jnp.int32)
+
+
+def sparse_write_update_ref(mem: jax.Array, last_access: jax.Array,
+                            write_idx: jax.Array, write_w: jax.Array,
+                            a: jax.Array, lra_idx: jax.Array,
+                            step: jax.Array, delta: float):
+    """Oracle for the fused SAM write (erase + outer-product add + usage).
+
+    mem: (B, N, W); last_access: (B, N) int32; write_idx: (B, J) int32 with
+    J = H·(K+1); write_w: (B, J); a: (B, H, W) write words (head of column j
+    is j // (K+1)); lra_idx: (B, H) rows to erase; step: () int32.
+
+    Semantics (matching `sam_step`'s unfused sequence exactly):
+      1. mem[b, lra_idx]   = 0                       (R_t erase, eq. 6)
+      2. mem[b, write_idx] += write_w · a            (A_t = w^W a^T, eq. 3/5;
+                                                      duplicates accumulate)
+      3. last_access[b, i]  = max(last_access, step) where any write with
+                              weight > delta touched i (U^(2), §3.2)
+    """
+    B, H, W = a.shape
+    J = write_idx.shape[1]
+    kp1 = J // H
+    b = jnp.arange(B)[:, None]
+    mem = mem.at[b, lra_idx].set(jnp.zeros((B, lra_idx.shape[1], W), mem.dtype))
+    add_rows = (write_w.reshape(B, H, kp1)[..., None]
+                * a[:, :, None, :]).reshape(B, J, W)
+    mem = mem.at[b, write_idx].add(add_rows)
+    upd = jnp.where(write_w > delta, step, last_access[b, write_idx])
+    la = last_access.at[b, write_idx].max(upd)
+    return mem, la

@@ -29,11 +29,20 @@ def _kernel(idx_ref, mem_ref, rows_ref, out_ref, *, mode: str):
         out_ref[...] = rows_ref[...]
 
 
+def first_occurrence(idx: jax.Array) -> jax.Array:
+    """(B, J) bool mask: True where idx[b, j] is the first occurrence of its
+    value along j. O(J²) pairwise compare — J is H·(K+1) ≈ 20. Shared by
+    every kernel that needs unique row ownership under in/out aliasing
+    (here and kernels/sparse_write.py)."""
+    eq = idx[:, :, None] == idx[:, None, :]                      # (B,J,J)
+    return jnp.argmax(eq, axis=-1) == jnp.arange(idx.shape[-1])
+
+
 def _combine_duplicates(idx: jax.Array, rows: jax.Array, dummy: int):
     """Sum rows sharing an index into the first occurrence; redirect the
-    remaining duplicates to a dummy slot. O(J²) — J is H·(K+1) ≈ 20."""
+    remaining duplicates to a dummy slot."""
     eq = idx[:, :, None] == idx[:, None, :]                      # (B,J,J)
-    first = jnp.argmax(eq, axis=-1) == jnp.arange(idx.shape[-1])
+    first = first_occurrence(idx)
     combined = jnp.einsum("bjk,bkw->bjw", eq.astype(rows.dtype), rows)
     rows = jnp.where(first[..., None], combined, 0.0)
     idx = jnp.where(first, idx, dummy)

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused SAM write + usage update (§3.2, eqs. 3/5/6).
+
+One SAM step's write side is, unfused, 3–4 separate dispatches:
+
+  1. scatter-set zeros into the LRA rows        (R_t erase)
+  2. materialize the (B, J, W) outer product w^W a^T in HBM
+  3. scatter-add it into the memory             (A_t)
+  4. scatter-max the last-access table          (U^(2) usage)
+
+This kernel does all of it in a single pass over the J = H·(K+1) touched
+rows. Each grid step (b, u) owns one *unique* touched row: it loads the
+(1, W) memory block, zeroes it if the row is an erase target, accumulates
+every matching write's w_j · a_{head(j)} contribution on the fly (the outer
+product never exists in HBM), and refreshes the row's last-access scalar.
+HBM traffic is O(J·W) — independent of N, the paper's headline property.
+
+Duplicate handling: each output row must be written by exactly one grid
+step (later steps would read stale data through the in/out alias), so
+duplicate indices are redirected to a dummy row N on the host side and the
+first occurrence accumulates *all* matching contributions — the kernel's
+inner loop matches on row id, not on position.
+
+Gradients: `pallas_call` has no VJP; `kernels/ops.py` wraps this in a
+`jax.custom_vjp` whose backward is closed-form (gather of the output
+cotangent), so the fused path is usable inside `jax.grad` — required by
+both the naive unroll and the rollback BPTT replay.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.scatter_rows import first_occurrence
+
+
+def _kernel(uidx_ref, widx_ref, erase_ref, w_ref, step_ref,
+            mem_ref, la_ref, a_ref, out_mem_ref, out_la_ref,
+            *, J: int, kp1: int, delta: float):
+    b = pl.program_id(0)
+    u = pl.program_id(1)
+    row = uidx_ref[b, u]
+
+    acc = jnp.where(erase_ref[b, u] > 0,
+                    jnp.zeros_like(mem_ref[0, 0, :]), mem_ref[0, 0, :])
+    touched = None
+    for j in range(J):                     # J ≈ 20, statically unrolled
+        match = widx_ref[b, j] == row
+        wj = w_ref[b, j]
+        acc = acc + jnp.where(match, wj, 0.0) * a_ref[0, j // kp1, :]
+        hit = match & (wj > delta)
+        touched = hit if touched is None else (touched | hit)
+    out_mem_ref[0, 0, :] = acc
+    out_la_ref[0, 0] = jnp.where(touched,
+                                 jnp.maximum(step_ref[0], la_ref[0, 0]),
+                                 la_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "interpret"))
+def sparse_write_update(mem: jax.Array, last_access: jax.Array,
+                        write_idx: jax.Array, write_w: jax.Array,
+                        a: jax.Array, lra_idx: jax.Array, step: jax.Array,
+                        *, delta: float, interpret: bool = True):
+    """Fused erase + outer-product scatter-add + usage update.
+
+    mem: (B, N, W); last_access: (B, N) int32; write_idx: (B, J) int32,
+    J = H·(K+1); write_w: (B, J); a: (B, H, W); lra_idx: (B, H) int32;
+    step: () int32. Returns (mem', last_access'). Numerically matches
+    `ref.sparse_write_update_ref` (duplicates accumulate; usage takes the
+    max over step and the previous value wherever weight > delta).
+
+    Precondition: every lra_idx row must also appear in write_idx — only
+    write_idx rows get grid steps, so an LRA row outside the write set
+    would not be erased (the reference erases unconditionally). SAM's
+    write plan guarantees this by construction: the LRA slot is the last
+    of each head's K+1 write rows (`write_plan`, eq. 5).
+
+    Known cost on the compiled path: the dummy-row parking pads/slices the
+    (B, N, W) memory around the kernel, an O(N·W) copy per step that the
+    kernel itself avoids. Removing it needs a persistent N+1-row memory
+    buffer in SAMState (ROADMAP open item); interpret-mode parity and the
+    O(J·W) kernel grid are unaffected.
+    """
+    B, N, W = mem.shape
+    _, J = write_idx.shape
+    H = a.shape[1]
+    kp1 = J // H
+    assert kp1 * H == J, (J, H)
+
+    # Unique-first row ownership: duplicates are parked on dummy row N.
+    write_idx = write_idx.astype(jnp.int32)
+    first = first_occurrence(write_idx)
+    uidx = jnp.where(first, write_idx, N).astype(jnp.int32)
+    erase = (uidx[:, :, None] == lra_idx[:, None, :]).any(-1).astype(jnp.int32)
+
+    mem_p = jnp.pad(mem, ((0, 0), (0, 1), (0, 0)))
+    la_p = jnp.pad(last_access, ((0, 0), (0, 1)))
+    step_arr = jnp.broadcast_to(step, (1,)).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,   # uidx, write_idx, erase, write_w, step
+        grid=(B, J),
+        in_specs=[
+            pl.BlockSpec((1, 1, W), lambda b, u, ui, *_: (b, ui[b, u], 0)),
+            pl.BlockSpec((1, 1), lambda b, u, ui, *_: (b, ui[b, u])),
+            pl.BlockSpec((1, H, W), lambda b, u, *_: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, W), lambda b, u, ui, *_: (b, ui[b, u], 0)),
+            pl.BlockSpec((1, 1), lambda b, u, ui, *_: (b, ui[b, u])),
+        ],
+    )
+    out_mem, out_la = pl.pallas_call(
+        functools.partial(_kernel, J=J, kp1=kp1, delta=delta),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(mem_p.shape, mem.dtype),
+                   jax.ShapeDtypeStruct(la_p.shape, last_access.dtype)],
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(uidx, write_idx, erase, write_w.astype(mem.dtype), step_arr,
+      mem_p, la_p, a.astype(mem.dtype))
+    return out_mem[:, :N], out_la[:, :N]

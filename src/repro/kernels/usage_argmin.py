@@ -1,9 +1,14 @@
-"""Pallas TPU kernel: least-recently-accessed slot (SAM §3.2, eq. 6).
+"""Pallas TPU kernels: least-recently-accessed slots (SAM §3.2, eq. 6).
 
-Streams the (N,) last-access array through VMEM tiles keeping a running
-(min, argmin) in SMEM scratch across the sequential grid — the TPU-native
+`usage_argmin` streams the (N,) last-access array through VMEM tiles keeping
+a running (min, argmin) across the sequential grid — the TPU-native
 replacement for the paper's circular-linked-list LRA ring (DESIGN.md §2).
-Ties break toward the lowest index, matching the reference."""
+
+`lra_topn` generalizes it to the n least-recently-accessed slots (SAM needs
+one LRA row per head): each tile emits its local n minima via an iterative
+n-pass argmin (n = num_heads ≤ 8), and a final O(tiles·n) lexicographic
+merge picks the global n. Both tie-break toward the lowest index, matching
+the `jax.lax.top_k` reference."""
 from __future__ import annotations
 
 import functools
@@ -50,3 +55,46 @@ def usage_argmin(last_access: jax.Array, *, block_n: int = 1024,
         interpret=interpret,
     )(last_access)
     return idx[:, 0]
+
+
+_INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _topn_kernel(u_ref, vals_ref, idx_ref, *, n: int, block_n: int):
+    tile = pl.program_id(1)
+    base = tile * block_n
+    u = u_ref[0, :].astype(jnp.int32)
+
+    def body(i, carry):
+        masked, = carry
+        j = jnp.argmin(masked)                      # first occurrence on ties
+        vals_ref[0, i] = masked[j]
+        idx_ref[0, i] = (base + j).astype(jnp.int32)
+        return (masked.at[j].set(_INT_MAX),)
+
+    jax.lax.fori_loop(0, n, body, (u,))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_n", "interpret"))
+def lra_topn(last_access: jax.Array, *, n: int, block_n: int = 1024,
+             interpret: bool = True):
+    """last_access: (B, N) -> (B, n) int32 indices of the n smallest entries,
+    ascending by (value, index) — identical to `lra_topn_ref`."""
+    B, N = last_access.shape
+    bn = min(block_n, N)
+    assert N % bn == 0, (N, bn)
+    assert n <= bn, (n, bn)
+    tiles = N // bn
+    vals, idx = pl.pallas_call(
+        functools.partial(_topn_kernel, n=n, block_n=bn),
+        grid=(B, tiles),
+        in_specs=[pl.BlockSpec((1, bn), lambda b, t: (b, t))],
+        out_specs=[pl.BlockSpec((1, n), lambda b, t: (b, t)),
+                   pl.BlockSpec((1, n), lambda b, t: (b, t))],
+        out_shape=[jax.ShapeDtypeStruct((B, tiles * n), jnp.int32),
+                   jax.ShapeDtypeStruct((B, tiles * n), jnp.int32)],
+        interpret=interpret,
+    )(last_access.astype(jnp.int32))
+    # Merge the per-tile candidates: n smallest by (value, index).
+    order = jnp.lexsort((idx, vals), axis=-1)
+    return jnp.take_along_axis(idx, order[..., :n], axis=-1)

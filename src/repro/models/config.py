@@ -62,6 +62,9 @@ class MemoryLayerConfig:
     every_n_layers: int = 4
     delta: float = 0.005
     segment: int = 512
+    # Kernel backend for the memory ops ('ref' | 'pallas' |
+    # 'pallas-interpret' | registered custom; None -> env default).
+    backend: "str | None" = None
 
 
 @dataclasses.dataclass(frozen=True)

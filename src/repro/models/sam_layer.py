@@ -79,23 +79,20 @@ def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState):
     beta = 1.0 + 9.0 * beta_g                                 # key strength
 
     # ---- write (eq. 5): previously-read ∪ least-recently-accessed ----
-    lra = addr.least_recently_accessed(state.last_access, H)  # (B,H)
+    be = m.backend
+    step = state.step + 1
+    lra = addr.least_recently_accessed(state.last_access, H, backend=be)
     w_read = alpha[..., None] * gamma[..., None] * state.read_w
     w_lra = (alpha * (1.0 - gamma))[..., None]
     widx = jnp.concatenate([state.read_idx, lra[..., None]], -1)  # (B,H,K+1)
     ww = jnp.concatenate([w_read, w_lra], -1)
-    memory = addr.scatter_set_rows(
-        state.memory, lra, jnp.zeros((B, H, m.word_size), state.memory.dtype))
-    rows = ww[..., None] * a[:, :, None, :]
-    memory = addr.scatter_add_rows(memory, widx.reshape(B, -1),
-                                   rows.reshape(B, H * (K + 1), -1))
+    memory, la = addr.sparse_write_update(
+        state.memory, state.last_access, widx.reshape(B, -1),
+        ww.reshape(B, -1), a, lra, step, m.delta, backend=be)
     memory = shard(memory, "batch", "mem_slots", "mem_word")
 
     # ---- sparse content read (§3.1) ----
-    read = addr.sparse_read_exact(q, memory, beta, K)
-    step = state.step + 1
-    la = addr.update_last_access(state.last_access, widx.reshape(B, -1),
-                                 ww.reshape(B, -1), step, m.delta)
+    read = addr.sparse_read_exact(q, memory, beta, K, backend=be)
     la = addr.update_last_access(la, read.indices.reshape(B, -1),
                                  read.weights.reshape(B, -1), step, m.delta)
 

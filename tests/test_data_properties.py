@@ -3,7 +3,10 @@ invariants of the system."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra; pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.data.tasks import (associative_recall_task, copy_task,
                               priority_sort_task)

@@ -1,5 +1,5 @@
-"""Per-kernel shape/dtype sweeps asserting allclose vs the pure-jnp oracles
-(interpret-mode Pallas on CPU)."""
+"""Per-kernel shape/dtype sweeps asserting allclose vs the pure-jnp oracles,
+parametrized over registry backends (interpret-mode Pallas on CPU)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,64 +7,155 @@ import pytest
 
 from repro.kernels import ops, ref
 
+BACKENDS = ["ref", "pallas-interpret"]
 
+
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("B,H,N,W,k,block_n", [
     (1, 1, 256, 16, 4, 64),
     (2, 4, 1024, 32, 8, 256),
     (3, 2, 512, 64, 4, 128),
 ])
-def test_topk_read_sweep(B, H, N, W, k, block_n):
+def test_topk_read_sweep(B, H, N, W, k, block_n, backend):
     key = jax.random.PRNGKey(N + W)
     q = jax.random.normal(key, (B, H, W))
     mem = jax.random.normal(jax.random.PRNGKey(1), (B, N, W))
-    v1, i1 = ops.topk_read(q, mem, k, use_pallas=True, block_n=block_n)
+    v1, i1 = ops.topk_read(q, mem, k, backend=backend, block_n=block_n)
     v2, i2 = ref.topk_read_ref(q, mem, k)
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5)
     assert np.array_equal(np.sort(np.asarray(i1)), np.sort(np.asarray(i2)))
 
 
+def test_topk_read_non_divisible_block_falls_back_to_ref():
+    """Documented silent-fallback contract: N % block_n != 0 -> reference
+    path, identical results (ops.py)."""
+    B, H, N, W, k = 2, 2, 192, 16, 4          # 192 % 128 != 0
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, W))
+    mem = jax.random.normal(jax.random.PRNGKey(1), (B, N, W))
+    v1, i1 = ops.topk_read(q, mem, k, backend="pallas-interpret", block_n=128)
+    v2, i2 = ref.topk_read_ref(q, mem, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_topk_read_small_n_clamps_block():
+    """N smaller than block_n clamps the tile instead of falling back, so
+    tiny configs still exercise the kernel."""
+    B, H, N, W, k = 1, 2, 64, 8, 4
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, H, W))
+    mem = jax.random.normal(jax.random.PRNGKey(3), (B, N, W))
+    v1, i1 = ops.topk_read(q, mem, k, backend="pallas-interpret", block_n=512)
+    v2, i2 = ref.topk_read_ref(q, mem, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5)
+    assert np.array_equal(np.sort(np.asarray(i1)), np.sort(np.asarray(i2)))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("mode", ["add", "set"])
-def test_scatter_rows_sweep(dtype, mode):
+def test_scatter_rows_sweep(dtype, mode, backend):
     key = jax.random.PRNGKey(0)
     for B, N, W, J in [(1, 16, 8, 4), (2, 64, 32, 10)]:
         m = jax.random.normal(key, (B, N, W)).astype(dtype)
         idx = jax.random.randint(jax.random.PRNGKey(J), (B, J), 0, N)
         rows = jax.random.normal(jax.random.PRNGKey(2), (B, J, W)).astype(dtype)
-        a = ops.scatter_rows(m, idx, rows, mode, use_pallas=True)
+        a = ops.scatter_rows(m, idx, rows, mode, backend=backend)
         b = ref.scatter_rows_ref(m, idx, rows, mode)
         atol = 1e-5 if dtype == jnp.float32 else 5e-2
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=atol)
 
 
-def test_scatter_add_duplicates_accumulate():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scatter_add_duplicates_accumulate(backend):
     m = jnp.zeros((1, 8, 4))
     idx = jnp.array([[3, 3, 3]], jnp.int32)
     rows = jnp.ones((1, 3, 4))
-    out = ops.scatter_rows(m, idx, rows, "add", use_pallas=True)
+    out = ops.scatter_rows(m, idx, rows, "add", backend=backend)
     np.testing.assert_allclose(np.asarray(out[0, 3]), 3.0)
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scatter_add_mixed_duplicates(backend):
+    """Duplicate-index semantics contract (docs/kernels.md): 'add' sums every
+    contribution, including when duplicates interleave distinct rows."""
+    m = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 8))
+    idx = jnp.array([[5, 2, 5, 9, 2, 5], [0, 0, 1, 15, 15, 15]], jnp.int32)
+    rows = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 8))
+    out = ops.scatter_rows(m, idx, rows, "add", backend=backend)
+    expect = np.asarray(m).copy()
+    for b in range(2):
+        for j in range(6):
+            expect[b, int(idx[b, j])] += np.asarray(rows)[b, j]
+    np.testing.assert_allclose(np.asarray(out), expect, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scatter_set_duplicates_last_wins(backend):
+    """'set' follows sequential semantics: the highest j writing a row wins."""
+    m = jnp.zeros((1, 8, 2))
+    idx = jnp.array([[3, 5, 3]], jnp.int32)
+    rows = jnp.stack([jnp.full((2,), v) for v in (1.0, 2.0, 7.0)])[None]
+    out = np.asarray(ops.scatter_rows(m, idx, rows, "set", backend=backend))
+    np.testing.assert_allclose(out[0, 3], 7.0)
+    np.testing.assert_allclose(out[0, 5], 2.0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("R,W,T,bits", [(10, 16, 2, 4), (300, 64, 4, 8)])
-def test_lsh_hash_sweep(R, W, T, bits):
+def test_lsh_hash_sweep(R, W, T, bits, backend):
     key = jax.random.PRNGKey(R)
     x = jax.random.normal(key, (R, W))
     planes = jax.random.normal(jax.random.PRNGKey(1), (T, bits, W))
-    h1 = ops.lsh_hash(x, planes, use_pallas=True)
+    h1 = ops.lsh_hash(x, planes, backend=backend)
     h2 = ref.lsh_hash_ref(x, planes)
     assert np.array_equal(np.asarray(h1), np.asarray(h2))
     assert (np.asarray(h1) < 2 ** bits).all()
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("B,N", [(1, 128), (4, 2048)])
-def test_usage_argmin_sweep(B, N):
+def test_usage_argmin_sweep(B, N, backend):
     u = jax.random.randint(jax.random.PRNGKey(N), (B, N), 0, 1000)
-    a1 = ops.usage_argmin(u.astype(jnp.int32), use_pallas=True)
+    a1 = ops.usage_argmin(u.astype(jnp.int32), backend=backend)
     a2 = ref.usage_argmin_ref(u)
     assert np.array_equal(np.asarray(a1), np.asarray(a2))
 
 
-def test_usage_argmin_tie_breaks_low_index():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_usage_argmin_tie_breaks_low_index(backend):
     u = jnp.array([[5, 1, 1, 3]], jnp.int32)
-    assert int(ops.usage_argmin(u, use_pallas=True)[0]) == 1
+    assert int(ops.usage_argmin(u, backend=backend)[0]) == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("B,N,n", [(1, 128, 1), (2, 512, 4), (3, 96, 8)])
+def test_lra_topn_sweep(B, N, n, backend):
+    u = jax.random.randint(jax.random.PRNGKey(B * N + n), (B, N), -20, 20)
+    a1 = ops.lra_topn(u.astype(jnp.int32), n, backend=backend, block_n=64)
+    a2 = ref.lra_topn_ref(u, n)
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lra_topn_tie_breaks_low_index(backend):
+    u = jnp.array([[4, 0, 9, 0, 0, 7]], jnp.int32)
+    idx = ops.lra_topn(u, 3, backend=backend)
+    assert np.asarray(idx[0]).tolist() == [1, 3, 4]
+
+
+def test_usage_argmin_non_divisible_block_falls_back_to_ref():
+    """usage_argmin shares the silent-fallback contract: N=1500 is not
+    divisible by the clamped 1024 tile, so the pallas backend must route
+    to the reference instead of tripping the kernel's shape assert."""
+    u = jax.random.randint(jax.random.PRNGKey(0), (2, 1500), 0, 1000)
+    a1 = ops.usage_argmin(u.astype(jnp.int32), backend="pallas-interpret")
+    assert np.array_equal(np.asarray(a1), np.asarray(ref.usage_argmin_ref(u)))
+
+
+def test_lra_topn_float_input_falls_back_to_ref():
+    """Float usage tables (DAM's U^(1)) must not be truncated by the int32
+    kernel — the pallas backend silently uses the exact reference."""
+    u = jax.random.uniform(jax.random.PRNGKey(1), (2, 128)) * 1e-3
+    a1 = ops.lra_topn(u, 4, backend="pallas-interpret")
+    assert np.array_equal(np.asarray(a1), np.asarray(ref.lra_topn_ref(u, 4)))
