@@ -1,9 +1,26 @@
-"""Kernel-backend latency: ref vs the fused Pallas sparse-write kernel.
+"""Kernel-backend latency: ref vs the fused Pallas sparse-write kernel,
+and the persistent scratch-row layout vs the retired pad/slice path.
 
 Measures one SAM write-side step (LRA erase + w^W a^T scatter-add + usage
 stamp) across memory sizes N ∈ {4k, 64k, 1M} on the "ref" backend and on
-the fused kernel, and records the trajectory to
-``experiments/bench/BENCH_kernels.json``.
+the fused kernel. The fused (pallas) backend additionally runs in both
+layouts:
+
+  * ``scratch`` — the persistent (B, N+1, W) buffer (`SAMState` layout):
+    the kernel dispatch involves no pad/slice, so the fused step cost is
+    O(J·W), independent of N;
+  * ``legacy``  — the pre-refactor (B, N, W) layout, which pads a
+    transient scratch row on and slices it off around the kernel — an
+    O(N·W) copy per step that dominates at large N.
+
+The layout comparison is pallas-only by construction: on the "ref"
+backend both layouts lower to the same jnp scatter oracle (``scratch_row``
+is purely a kernel-dispatch concern), so timing them against each other
+would measure noise.
+
+Results go to ``experiments/bench/BENCH_kernels.json``; the
+``layout_speedup`` rows record scratch-vs-legacy at each size, the
+evidence for the ROADMAP item this layout closed.
 
 On TPU the fused backend is ``"pallas"`` (compiled); elsewhere it falls
 back to ``"pallas-interpret"``, whose absolute numbers only sanity-check
@@ -17,6 +34,7 @@ Run:  PYTHONPATH=src python -m benchmarks.bench_kernels [--quick] [--topk]
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 
@@ -34,10 +52,11 @@ J = H * (K + 1)
 DELTA = 0.005
 
 
-def _write_case(n: int):
+def _write_case(n: int, layout: str):
+    rows = n + 1 if layout == "scratch" else n
     key = jax.random.PRNGKey(n)
-    mem = jax.random.normal(key, (B, n, W))
-    last = jnp.zeros((B, n), jnp.int32)
+    mem = jax.random.normal(key, (B, rows, W))
+    last = jnp.zeros((B, rows), jnp.int32)
     widx = jax.random.randint(jax.random.PRNGKey(1), (B, J), 0, n)
     lra = widx.reshape(B, H, K + 1)[..., -1]
     ww = jax.random.uniform(jax.random.PRNGKey(2), (B, J))
@@ -46,15 +65,31 @@ def _write_case(n: int):
     return mem, last, widx, ww, a, lra, step
 
 
-def bench_sparse_write(n: int, backend: str):
-    mem, last, widx, ww, a, lra, step = _write_case(n)
+def bench_sparse_write(n: int, backend: str, layout: str = "scratch"):
+    """One fused write step. The memory/usage buffers are donated — the
+    recurrent carry semantics: the old state dies as the new one is
+    produced. With the scratch layout XLA can then update the (B, N+1, W)
+    buffer in place (O(J·W) per step); the legacy layout's pad/slice forces
+    a fresh O(N·W) allocation+copy per step even with donation — exactly
+    the gap this bench records."""
+    case = _write_case(n, layout)
+    widx, lra, step = case[2], case[5], case[6]
+    scratch = n if layout == "scratch" else None
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
     def f(mem, last, ww, a):
         return ops.sparse_write_update(mem, last, widx, ww, a, lra, step,
-                                       delta=DELTA, backend=backend)
+                                       delta=DELTA, backend=backend,
+                                       scratch_row=scratch)
 
-    return timed(lambda: f(mem, last, ww, a))
+    def run():
+        # Re-donate the previous call's outputs, like a scan carry would.
+        run.mem, run.last = f(run.mem, run.last, run.ww, run.a)
+        return run.mem
+
+    run.mem, run.last = case[0], case[1]
+    run.ww, run.a = case[3], case[4]
+    return timed(run)
 
 
 def bench_topk(n: int, backend: str, block_n: int = 512):
@@ -84,11 +119,13 @@ def main(argv=None):
 
     results = []
     for n in sizes:
-        for be in ("ref", pallas_be):
-            us = bench_sparse_write(n, be)
-            results.append({"op": "sparse_write_update", "backend": be,
-                            "N": n, "us_per_call": us})
-            row(f"sparse_write/{be}/N={n}", us)
+        for be, layouts in (("ref", ("scratch",)),
+                            (pallas_be, ("scratch", "legacy"))):
+            for layout in layouts:
+                us = bench_sparse_write(n, be, layout)
+                results.append({"op": "sparse_write_update", "backend": be,
+                                "layout": layout, "N": n, "us_per_call": us})
+                row(f"sparse_write/{be}/{layout}/N={n}", us)
         if args.topk:
             for be in ("ref", pallas_be):
                 us = bench_topk(n, be)
@@ -96,16 +133,25 @@ def main(argv=None):
                                 "us_per_call": us})
                 row(f"topk_read/{be}/N={n}", us)
 
-    # Speedup column: ref / fused at each size (on CPU-interpret this mostly
-    # demonstrates N-independence of the fused grid, not a speedup).
+    # Speedup columns. ref/fused compares backends on the scratch layout (on
+    # CPU-interpret this mostly demonstrates N-independence of the fused
+    # grid, not a speedup); layout_speedup is legacy/scratch on the fused
+    # backend — the O(N·W) pad/slice this PR removed from the compiled hot
+    # path (interpret-mode numbers carry the interpreter's own O(N) buffer
+    # handling as noise; the clean measurement is "pallas" on TPU).
     for n in sizes:
-        pair = {r["backend"]: r["us_per_call"] for r in results
-                if r["op"] == "sparse_write_update" and r["N"] == n}
-        if len(pair) == 2:
-            ref_us = pair["ref"]
-            fused_us = pair[pallas_be]
+        pick = {(r["backend"], r["layout"]): r["us_per_call"]
+                for r in results if r["op"] == "sparse_write_update"
+                and r["N"] == n}
+        if ("ref", "scratch") in pick and (pallas_be, "scratch") in pick:
+            ref_us = pick[("ref", "scratch")]
+            fused_us = pick[(pallas_be, "scratch")]
             row(f"sparse_write/speedup/N={n}", fused_us,
                 f"{ref_us / fused_us:.2f}x")
+        if (pallas_be, "legacy") in pick and (pallas_be, "scratch") in pick:
+            row(f"sparse_write/layout_speedup/{pallas_be}/N={n}",
+                pick[(pallas_be, "scratch")],
+                f"{pick[(pallas_be, 'legacy')] / pick[(pallas_be, 'scratch')]:.2f}x")
 
     os.makedirs(OUT_DIR, exist_ok=True)
     record = {

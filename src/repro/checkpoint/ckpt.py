@@ -11,7 +11,19 @@ Fault-tolerance contract (DESIGN.md §5):
     the file I/O does not);
   * arrays are stored per-leaf as ``.npy`` plus a JSON manifest of the tree
     structure — on restore with a *different mesh*, leaves are re-sharded by
-    ``distributed/elastic.py`` (elastic scaling).
+    ``distributed/elastic.py`` (elastic scaling);
+  * scratch-row migration shim: checkpoints written before the persistent
+    (B, N+1, W) memory layout (core/types.py) predate the manifest
+    ``format`` field (now 2) and hold (B, N, W)/(B, N) memory and usage
+    leaves. On restore of such a **format-1 (markerless)** checkpoint,
+    when the template expects exactly one more row on axis 1 and the leaf
+    is named memory/last_access/usage, the loaded leaf is padded with the
+    scratch-row init (zeros for float memory, int32 max for the usage
+    table) — everything else restores bit-exactly. Format-2 checkpoints
+    are restored strictly (shapes must match), and any other mismatch
+    raises — so a config change (head count, slot count — including
+    `num_slots` N→N+1, which would be shape-indistinguishable from the
+    legacy layout) cannot masquerade as a layout migration.
 """
 from __future__ import annotations
 
@@ -33,6 +45,13 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
+# Manifest format: 1 (implicit — no field) predates the scratch-row layout;
+# 2 = scratch-row era. Only format-1 checkpoints are eligible for the
+# shape-based migration shim: once a checkpoint carries the marker, its
+# shapes are authoritative and any mismatch is a config error.
+MANIFEST_FORMAT = 2
+
+
 def save_checkpoint(directory: str, step: int, tree) -> str:
     """Blocking atomic save. Returns the committed path."""
     os.makedirs(directory, exist_ok=True)
@@ -42,7 +61,7 @@ def save_checkpoint(directory: str, step: int, tree) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     paths, leaves, _ = _flatten_with_paths(tree)
-    manifest = {"step": step, "leaves": []}
+    manifest = {"step": step, "format": MANIFEST_FORMAT, "leaves": []}
     for i, (p, leaf) in enumerate(zip(paths, leaves)):
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
@@ -68,11 +87,43 @@ def latest_step(directory: str):
     return max(steps) if steps else None
 
 
+# Leaves the scratch-row migration shim may pad: the memory buffer and the
+# usage table, addressed by their field name (the last component of the
+# manifest path). Any other leaf with a shape mismatch still raises — a
+# head-count or slot-count config change must not be silently "migrated".
+_MIGRATABLE_LEAVES = frozenset({"memory", "last_access", "usage"})
+
+
+def _migrate_scratch_row(arr: np.ndarray, want_shape) -> np.ndarray:
+    """Legacy-layout shim: pad a (B, N, ...) leaf to the (B, N+1, ...)
+    scratch-row layout the template expects. The scratch row is initialized
+    the way `init_state` does: 0 for float memory, int32 max (`LA_SCRATCH`)
+    for integer usage tables. Returns `arr` unchanged when shapes already
+    match; raises on any other mismatch."""
+    want = tuple(want_shape)
+    if arr.shape == want:
+        return arr
+    legacy = (arr.ndim >= 2 and len(want) == arr.ndim
+              and want[0] == arr.shape[0]
+              and want[1] == arr.shape[1] + 1
+              and want[2:] == arr.shape[2:])
+    if not legacy:
+        raise ValueError(
+            f"checkpoint leaf shape {arr.shape} does not match template "
+            f"{want} and is not a legacy (one fewer row on axis 1) layout")
+    from repro.core.types import LA_SCRATCH
+    pad = [(0, 0)] * arr.ndim
+    pad[1] = (0, 1)
+    fill = LA_SCRATCH if np.issubdtype(arr.dtype, np.integer) else 0
+    return np.pad(arr, pad, constant_values=fill)
+
+
 def restore_checkpoint(directory: str, template, step: int = None,
                        shardings=None):
     """Restore into the structure of `template`. `shardings` (optional pytree
     of NamedShardings) re-shards each leaf — this is how elastic re-scaling
-    restores onto a different mesh."""
+    restores onto a different mesh. Legacy pre-scratch-row checkpoints are
+    migrated leaf-by-leaf (`_migrate_scratch_row`)."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -86,8 +137,21 @@ def restore_checkpoint(directory: str, template, step: int = None,
     leaves = []
     s_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
                 if shardings is not None else [None] * len(t_leaves))
+    migratable = manifest.get("format", 1) < MANIFEST_FORMAT
     for entry, tmpl, sh in zip(manifest["leaves"], t_leaves, s_leaves):
         arr = np.load(os.path.join(path, entry["file"]))
+        if hasattr(tmpl, "shape") and arr.shape != tuple(tmpl.shape):
+            # Path components render as ".memory" (GetAttrKey) or "memory"
+            # (dict key) depending on the container — compare field names.
+            leaf_name = entry["path"].rsplit("/", 1)[-1].lstrip(".")
+            if not migratable or leaf_name not in _MIGRATABLE_LEAVES:
+                raise ValueError(
+                    f"checkpoint leaf {entry['path']!r} has shape "
+                    f"{arr.shape}, template expects {tuple(tmpl.shape)} — "
+                    f"scratch-row migration applies only to pre-format-"
+                    f"{MANIFEST_FORMAT} checkpoints and to "
+                    f"{sorted(_MIGRATABLE_LEAVES)} leaves")
+            arr = _migrate_scratch_row(arr, tmpl.shape)
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:

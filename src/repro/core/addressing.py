@@ -48,18 +48,24 @@ def topk_from_sims(sims: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
 
 
 def sparse_read_exact(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
-                      sims_fn=cosine_sim, *, backend=None) -> SparseRead:
+                      sims_fn=cosine_sim, *, backend=None,
+                      valid_n=None) -> SparseRead:
     """'Linear index' SAM read: exact K nearest by similarity, softmax over the
     kept K entries only (§3.1 — remaining entries set to zero).
 
     Gradients flow only through the K gathered rows (take_along_axis). The
     O(N·W) similarity sweep runs on the kernel backend (the index selection
-    is under stop_gradient, so no kernel VJP is needed)."""
+    is under stop_gradient, so no kernel VJP is needed). ``valid_n``
+    restricts the sweep to the logical rows of a scratch-row buffer — the
+    scratch row can never be selected, so no gradient ever flows through
+    it."""
     if sims_fn is cosine_sim:
         _, idx = ops.topk_read(jax.lax.stop_gradient(q),
-                               jax.lax.stop_gradient(m), k, backend=backend)
+                               jax.lax.stop_gradient(m), k, backend=backend,
+                               valid_n=valid_n)
     else:
-        sims = sims_fn(jax.lax.stop_gradient(q), jax.lax.stop_gradient(m))
+        mv = m if valid_n is None else m[:, :valid_n]
+        sims = sims_fn(jax.lax.stop_gradient(q), jax.lax.stop_gradient(mv))
         _, idx = topk_from_sims(sims, k)                    # (B, H, K), no grads
     words = gather_rows(m, idx)                             # (B, H, K, W)
     # Re-compute similarities for the selected rows only => sparse gradients.
@@ -96,9 +102,11 @@ def gather_rows(m: jax.Array, idx: jax.Array) -> jax.Array:
 
 
 def scatter_add_rows(m: jax.Array, idx: jax.Array, rows: jax.Array,
-                     *, backend=None) -> jax.Array:
-    """m[b, idx[b, j]] += rows[b, j]. idx: (B, J), rows: (B, J, W)."""
-    return ops.scatter_rows(m, idx, rows, mode="add", backend=backend)
+                     *, backend=None, scratch_row=None) -> jax.Array:
+    """m[b, idx[b, j]] += rows[b, j]. idx: (B, J), rows: (B, J, W).
+    ``scratch_row=N`` parks duplicates on row N of a scratch-row buffer."""
+    return ops.scatter_rows(m, idx, rows, mode="add", backend=backend,
+                            scratch_row=scratch_row)
 
 
 def scatter_set_rows(m: jax.Array, idx: jax.Array, rows: jax.Array,
@@ -140,24 +148,27 @@ def update_last_access(last_access: jax.Array, idx: jax.Array, w: jax.Array,
 
 
 def least_recently_accessed(last_access: jax.Array, n: int,
-                            *, backend=None) -> jax.Array:
+                            *, backend=None, valid_n=None) -> jax.Array:
     """Return the n least-recently-accessed slot indices per batch (B, n).
 
-    Eq. (6): argmin of usage; ties broken arbitrarily (here: lowest index)."""
-    return ops.lra_topn(last_access, n, backend=backend)
+    Eq. (6): argmin of usage; ties broken arbitrarily (here: lowest index).
+    ``valid_n`` excludes the scratch entry of a (B, N+1) usage table."""
+    return ops.lra_topn(last_access, n, backend=backend, valid_n=valid_n)
 
 
 def sparse_write_update(memory: jax.Array, last_access: jax.Array,
                         write_idx: jax.Array, write_w: jax.Array,
                         a: jax.Array, lra_idx: jax.Array, step: jax.Array,
-                        delta: float, *, backend=None):
+                        delta: float, *, backend=None, scratch_row=None):
     """Fused SAM write side (eqs. 3/5/6 + the U^(2) update for the written
     rows): erase the LRA rows, scatter-add w^W a^T, stamp `step` into
     `last_access` wherever the write weight exceeds δ. One kernel dispatch
-    on the Pallas backends. Returns (memory', last_access')."""
+    on the Pallas backends; with ``scratch_row=N`` (the persistent
+    scratch-row state) the dispatch involves no pad/slice of the memory.
+    Returns (memory', last_access')."""
     return ops.sparse_write_update(memory, last_access, write_idx, write_w,
                                    a, lra_idx, step, delta=delta,
-                                   backend=backend)
+                                   backend=backend, scratch_row=scratch_row)
 
 
 def dam_usage_update(usage: jax.Array, read_w: jax.Array, write_w: jax.Array,

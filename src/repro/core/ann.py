@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import ANNState, MemoryConfig
+from repro.core.types import ANNState, MemoryConfig, has_scratch_row
 from repro.kernels import ops
 
 
@@ -30,9 +30,18 @@ def lsh_planes(key, cfg: MemoryConfig) -> jax.Array:
 def lsh_hash(planes: jax.Array, x: jax.Array, *, backend=None) -> jax.Array:
     """x: (..., W) -> bucket ids (..., T), sign bits packed per table.
 
-    Dispatches to the Pallas signature-hash kernel on the pallas backends
-    (bucket ids are integers and the planes are fixed — no gradients)."""
-    return ops.lsh_hash(x, planes, backend=backend)
+    Dispatches to the Pallas signature-hash kernel on the pallas backends.
+    The hash is non-differentiable by contract ("there are no gradients
+    with respect to the ANN as its function is fixed"), and the Pallas
+    kernel cannot be linearized, so both operands are detached here — the
+    planes sit inside the params tree handed to `jax.grad`, and an
+    undetached tracer reaching `pallas_call` breaks `jax.grad` on the
+    pallas backends. The int output is detached too (`detach_int`): an id
+    carrying a tangent tracer clashes, under `lax.scan`'s JVP, with the
+    float0 gather indices it gets concatenated with."""
+    ids = ops.lsh_hash(jax.lax.stop_gradient(x),
+                       jax.lax.stop_gradient(planes), backend=backend)
+    return ops.detach_int(ids)
 
 
 def ann_init(batch: int, cfg: MemoryConfig) -> ANNState:
@@ -46,8 +55,12 @@ def ann_init(batch: int, cfg: MemoryConfig) -> ANNState:
 
 def ann_build(planes: jax.Array, memory: jax.Array, cfg: MemoryConfig) -> ANNState:
     """Bulk-build the index from a full memory (the paper rebuilds every N
-    insertions; we expose the same rebuild primitive)."""
+    insertions; we expose the same rebuild primitive). Only the logical rows
+    of a scratch-row buffer are indexed — the scratch row is never readable,
+    so it must never enter the candidate set."""
     B, N, _ = memory.shape
+    if has_scratch_row(cfg.num_slots, N):
+        N = cfg.num_slots
     state = ann_init(B, cfg)
 
     def insert_one(state: ANNState, i: jax.Array) -> tuple[ANNState, None]:

@@ -13,6 +13,14 @@ inputs — the backward pass never needs the usage table or the ANN index.
 
 At the end of the backward pass the memory has been rolled back to the start
 state, exactly as described in the paper.
+
+Scratch-row layout: the memory carried through the scan is the persistent
+(B, N+1, W) buffer (core/types.py). `StepDeltas.write_idx` only ever names
+logical rows (< N), so the rollback `scatter_set_rows` and the replay's
+`apply_write` leave row N untouched — a cotangent entering through the
+final state's scratch row passes straight back to the initial state without
+mixing into any logical row, and a loss that never reads the scratch row
+(no supported read can) gets an exactly-zero gradient for it.
 """
 from __future__ import annotations
 

@@ -4,6 +4,12 @@ DAM uses the discounted-usage statistic U^(1) and the same write rule as SAM
 (eq. 5) but with *dense* read weights — it is the paper's control for "does
 sparsity hurt learning". The NTM is the original Graves et al. 2014 head
 with content + location (interpolate / shift / sharpen) addressing.
+
+Layout note: the dense models keep the plain (B, N, W) memory — a dense
+softmax weighting addresses *every* row, so there is no never-read slot to
+park scatter duplicates on and the scratch-row layout (core/types.py) does
+not apply. Their `ops.usage_argmin` / `dense_read_weights` calls therefore
+always see exactly the logical N rows.
 """
 from __future__ import annotations
 

@@ -21,7 +21,9 @@ import jax.numpy as jnp
 
 from repro.core import addressing as addr
 from repro.core.controller import linear, linear_init, lstm_init, lstm_step, lstm_zero_state
-from repro.core.types import ControllerConfig, LSTMState, MemoryConfig, SparseRead
+from repro.core.types import (ControllerConfig, LSTMState, MemoryConfig,
+                              SparseRead, has_scratch_row,
+                              init_scratch_last_access, init_scratch_memory)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,14 +120,16 @@ def init_state(batch: int, cfg: DNCConfig) -> DNCState:
     R, W, N, KL = mem.num_heads, mem.word_size, mem.num_slots, cfg.k_l
     J = R * mem.k + 1
     common = dict(
-        memory=jnp.zeros((batch, N, W)),
         read_words=jnp.zeros((batch, R, W)),
         ctrl=lstm_zero_state(batch, ctl.hidden_size),
         step=jnp.zeros((), jnp.int32))
     if cfg.sparse:
+        # SDNC carries the persistent scratch-row layout, like SAM: row N is
+        # the kernels' duplicate-parking scratch row, its usage entry pinned
+        # so LRA selection can never pick it.
         return DNCState(
-            usage=jnp.broadcast_to(-jnp.arange(N, dtype=jnp.int32)[None],
-                                   (batch, N)),
+            memory=init_scratch_memory(batch, N, W),
+            usage=init_scratch_last_access(batch, N),
             read_w=jnp.zeros((batch,)),
             read=SparseRead(indices=jnp.zeros((batch, R, mem.k), jnp.int32),
                             weights=jnp.zeros((batch, R, mem.k)),
@@ -141,7 +145,10 @@ def init_state(batch: int, cfg: DNCConfig) -> DNCState:
             p_mat=SparseMat(cols=jnp.full((batch, N, KL), -1, jnp.int32),
                             vals=jnp.zeros((batch, N, KL))),
             **common)
+    # Dense DNC: dense weightings address every row, so the memory stays
+    # unpadded — the scratch-row layout is only for the sparse write scheme.
     return DNCState(
+        memory=jnp.zeros((batch, N, W)),
         usage=jnp.zeros((batch, N)),
         read_w=jnp.zeros((batch, R, N)).at[:, :, 0].set(1.0),
         read=None,
@@ -235,8 +242,13 @@ def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
         cfg, linear(params["iface"], h))
 
     be = mem.backend
+    N = mem.num_slots
+    padded = has_scratch_row(N, s.memory.shape[1])
+    valid_n = N if padded else None
+    scratch = N if padded else None
     # ---- sparse write, identical mechanism to SAM (Suppl. D.1) ----
-    lra = addr.least_recently_accessed(s.usage, 1, backend=be)      # (B,1)
+    lra = addr.least_recently_accessed(s.usage, 1, backend=be,
+                                       valid_n=valid_n)             # (B,1)
     prev_idx = s.read.indices.reshape(B, -1)                        # (B,R*K)
     prev_w = s.read.weights.reshape(B, -1)
     # Normalize previous read weights across heads for the interpolation.
@@ -251,14 +263,16 @@ def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
     memory = addr.scatter_set_rows(s.memory, lra, jnp.zeros((B, 1, W)),
                                    backend=be)
     memory = addr.scatter_add_rows(memory, widx,
-                                   ww[..., None] * wv[:, None, :], backend=be)
+                                   ww[..., None] * wv[:, None, :], backend=be,
+                                   scratch_row=scratch)
 
     # ---- sparse temporal linkage (Suppl. D eqs. 17-22), stop-gradient ----
     ww_sg = jax.lax.stop_gradient(ww)
     n_mat, p_mat, prec_sp = _update_linkage(s, widx, ww_sg, KL)
 
     # ---- reads: content + sparse forward/backward link reads ----
-    cont = addr.sparse_read_exact(rk, memory, rb, K, backend=be)
+    cont = addr.sparse_read_exact(rk, memory, rb, K, backend=be,
+                                  valid_n=valid_n)
     fwd_idx, fwd_w = _link_read(s.n_mat, s.read, K)
     bwd_idx, bwd_w = _link_read(s.p_mat, s.read, K)
 

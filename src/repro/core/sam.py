@@ -20,8 +20,10 @@ import jax.numpy as jnp
 from repro.core import addressing as addr
 from repro.core import ann as ann_lib
 from repro.core.controller import linear, linear_init, lstm_init, lstm_step, lstm_zero_state
-from repro.core.types import (ANNState, ControllerConfig, MemoryConfig, SAMState,
-                              SparseRead, StepDeltas)
+from repro.core.types import (ANNState, ControllerConfig, MemoryConfig,
+                              SAMState, SparseRead, StepDeltas,
+                              has_scratch_row, init_scratch_last_access,
+                              init_scratch_memory)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,10 +60,10 @@ def init_params(key, cfg: SAMConfig):
 def init_state(batch: int, cfg: SAMConfig, params=None) -> SAMState:
     mem, ctl = cfg.memory, cfg.controller
     H, K, W, N = mem.num_heads, mem.k, mem.word_size, mem.num_slots
-    memory = jnp.zeros((batch, N, W))
-    # Stagger initial last-access so the LRA ordering is well defined.
-    last_access = jnp.broadcast_to(
-        -jnp.arange(N, dtype=jnp.int32)[None, :], (batch, N))
+    # Persistent scratch-row layout: row N is the kernels' write-scratch row
+    # (never read; its last-access entry is pinned so LRA never picks it).
+    memory = init_scratch_memory(batch, N, W)
+    last_access = init_scratch_last_access(batch, N)
     read = SparseRead(
         indices=jnp.zeros((batch, H, K), jnp.int32),
         weights=jnp.zeros((batch, H, K)),
@@ -107,9 +109,13 @@ def apply_write(memory: jax.Array, write_idx_flat: jax.Array,
 
     Memory-only variant of the fused write (used by the BPTT replay, which
     reconstructs usage-free gradients); `sam_step` itself uses
-    `addr.sparse_write_update` to also fold in the usage update."""
+    `addr.sparse_write_update` to also fold in the usage update. Accepts the
+    persistent scratch-row buffer (detected by shape) and then parks scatter
+    duplicates on the in-state row N — no transient pad."""
     B, H, _ = a.shape
     Kp1 = cfg.write_rows_per_head
+    N = cfg.memory.num_slots
+    scratch = N if has_scratch_row(N, memory.shape[1]) else None
     # Erase: zero LRA rows.
     zeros = jnp.zeros((B, H, memory.shape[-1]), memory.dtype)
     memory = addr.scatter_set_rows(memory, lra_idx, zeros, backend=backend)
@@ -118,7 +124,7 @@ def apply_write(memory: jax.Array, write_idx_flat: jax.Array,
     add_rows = w[..., None] * a[:, :, None, :]                 # (B,H,K+1,W)
     memory = addr.scatter_add_rows(memory, write_idx_flat,
                                    add_rows.reshape(B, H * Kp1, -1),
-                                   backend=backend)
+                                   backend=backend, scratch_row=scratch)
     return memory
 
 
@@ -126,9 +132,16 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
              *, collect_deltas: bool = False):
     """One SAM time step. Returns (new_state, y_t[, deltas])."""
     mem = cfg.memory
-    H, K = mem.num_heads, mem.k
+    H, K, N = mem.num_heads, mem.k, mem.num_slots
     B = x.shape[0]
     be = mem.backend
+    # Scratch-row layout detection: padded states (the default from
+    # `init_state`) sweep only the logical N rows and park scatter
+    # duplicates on row N in place; legacy (B, N, W) states still work via
+    # the transient-pad kernel path.
+    padded = has_scratch_row(N, state.memory.shape[1])
+    valid_n = N if padded else None
+    scratch = N if padded else None
 
     ctrl_in = jnp.concatenate([x, state.read.words.reshape(B, -1)], axis=-1)
     ctrl, h = lstm_step(params["lstm"], state.ctrl, ctrl_in)
@@ -136,7 +149,8 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
 
     # ---- write (uses the previous step's read locations, eq. 5) ----
     step = state.step + 1
-    lra_idx = addr.least_recently_accessed(state.last_access, H, backend=be)
+    lra_idx = addr.least_recently_accessed(state.last_access, H, backend=be,
+                                           valid_n=valid_n)
     widx_flat, ww_flat, widx, ww = write_plan(cfg, state.read, lra_idx,
                                               alpha, gamma)
     deltas = None
@@ -146,7 +160,8 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
     # Fused: LRA erase + w^W a^T scatter-add + write-side usage stamp.
     memory, la = addr.sparse_write_update(state.memory, state.last_access,
                                           widx_flat, ww_flat, a, lra_idx,
-                                          step, mem.delta, backend=be)
+                                          step, mem.delta, backend=be,
+                                          scratch_row=scratch)
 
     # ---- read (content-based, sparse) ----
     if mem.ann == "lsh":
@@ -161,7 +176,8 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
             planes, state.ann, widx_flat,
             jax.lax.stop_gradient(addr.gather_rows(memory, widx_flat)), mem)
     else:
-        read = addr.sparse_read_exact(q, memory, beta, K, backend=be)
+        read = addr.sparse_read_exact(q, memory, beta, K, backend=be,
+                                      valid_n=valid_n)
         ann_state = state.ann
 
     # ---- usage (U^(2)) for the read side; the write side was fused above ----

@@ -3,6 +3,21 @@
 All state is fixed-shape and jit/scan friendly. Sparse quantities use the
 fixed-K "ELL" layout: an int32 index tensor plus a float value tensor of the
 same leading shape (see DESIGN.md §2 — CSR does not map to TPU).
+
+Scratch-row memory layout
+-------------------------
+The sparse cores (SAM, SDNC, the LM memory layer) carry their memory as a
+**persistent (B, N+1, W) buffer**: rows [0, N) are the logical memory, row N
+is a write-scratch row that the Pallas scatter kernels use to park duplicate
+write indices under input/output aliasing. `last_access` is carried as
+(B, N+1) with the scratch entry pinned to ``LA_SCRATCH`` (int32 max) so LRA
+selection can never pick it. The scratch row is *never read*: every sweep
+(top-K similarity, LRA selection) addresses only the logical N rows
+(``valid_n=`` in `repro.kernels.ops`), so its contents never influence read
+outputs, usage, or gradients. Keeping the row in the state — instead of
+padding/slicing around every kernel call — removes an O(N·W) copy from each
+step, which is what makes the per-step cost O(J·W) as the paper claims.
+See docs/memory-model.md.
 """
 from __future__ import annotations
 
@@ -11,6 +26,37 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+# Number of write-scratch rows appended past the logical memory (row N).
+SCRATCH_ROWS = 1
+# `last_access` value pinned on the scratch row: int32 max, so the scratch
+# row can never win an LRA argmin even if a sweep forgets to exclude it.
+LA_SCRATCH = 2 ** 31 - 1
+
+
+def has_scratch_row(num_slots: int, buf_rows: int) -> bool:
+    """True when a buffer with `buf_rows` rows carries the scratch-row layout
+    for a logical memory of `num_slots` rows."""
+    return buf_rows == num_slots + SCRATCH_ROWS
+
+
+def init_scratch_memory(batch: int, num_slots: int,
+                        word_size: int) -> jax.Array:
+    """Zero-initialized (B, N+1, W) memory in the scratch-row layout."""
+    return jnp.zeros((batch, num_slots + SCRATCH_ROWS, word_size))
+
+
+def init_scratch_last_access(batch: int, num_slots: int) -> jax.Array:
+    """(B, N+1) int32 usage table: the logical rows staggered with
+    ``-arange(N)`` so the initial LRA ordering is well defined (slot N-1
+    first), the scratch entry pinned to `LA_SCRATCH`. The single source of
+    the scratch-row state init — SAM, SDNC, and the LM memory layer all
+    build their usage tables here, and the checkpoint migration shim
+    reproduces the same values."""
+    return jnp.concatenate([
+        jnp.broadcast_to(-jnp.arange(num_slots, dtype=jnp.int32)[None, :],
+                         (batch, num_slots)),
+        jnp.full((batch, SCRATCH_ROWS), LA_SCRATCH, jnp.int32)], axis=1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,8 +117,13 @@ class SparseRead(NamedTuple):
 
 
 class SAMState(NamedTuple):
-    memory: jax.Array        # (B, N, W)
-    last_access: jax.Array   # (B, N) int32 — step of last non-negligible access
+    """SAM recurrent state. `memory`/`last_access` use the scratch-row layout
+    (module docstring): row N is write scratch, never read, never LRA-picked.
+    Legacy (B, N, W) states are still accepted by `sam_step` (detected by
+    shape) so old checkpoints keep working through the migration shim."""
+
+    memory: jax.Array        # (B, N+1, W) — row N = write scratch
+    last_access: jax.Array   # (B, N+1) int32 — step of last access; [N]=LA_SCRATCH
     read: SparseRead         # previous step's read (for the write interpolation)
     ctrl: LSTMState
     step: jax.Array          # () int32

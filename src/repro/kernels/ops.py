@@ -13,6 +13,25 @@ implementation instead of failing: results are identical, only the
 execution path differs. ``scatter_rows``, ``lsh_hash`` and
 ``sparse_write_update`` have no shape restrictions.
 
+Scratch-row layout (docs/memory-model.md): the sweep ops take ``valid_n=``
+to restrict the scan to the logical rows [0, valid_n) of a persistent
+(B, N+1, ...) buffer, and the mutating ops take ``scratch_row=`` to park
+duplicate write indices on the in-state scratch row instead of padding a
+transient one (the retired O(N·W) pad/slice path, kept only for
+``scratch_row=None`` legacy callers). On the reference fallback ``valid_n``
+is applied as a slice — fused by XLA into the O(N·W) oracle sweep it
+already performs. Divisibility checks use ``valid_n``, so the padded buffer
+(N+1 rows) keeps the kernel path whenever the logical N qualifies.
+
+Backend ``overrides`` written before these keywords existed keep working:
+the dispatch inspects the override's signature and, when it cannot accept
+the keyword, adapts instead — sweep ops hand the override the sliced
+[0, valid_n) view (correct, at the cost of an O(N) slice per call), and
+mutating ops simply drop ``scratch_row`` (safe: the oracle contract says
+an implementation touches only the rows its indices name, so the padded
+buffer's row N passes through untouched). Overrides that do accept the
+keywords get them whenever the caller sets them.
+
 Gradients: the Pallas kernels have no VJP of their own, so the mutating ops
 (`scatter_rows`, `sparse_write_update`) are wrapped in closed-form
 `jax.custom_vjp` rules here — both the naive SAM unroll and the rollback
@@ -23,6 +42,7 @@ BPTT replay differentiate through them. The selection ops (`topk_read`,
 from __future__ import annotations
 
 import functools
+import inspect
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +66,7 @@ def _zero_ct(x):
     return np.zeros(x.shape, dtype=jax.dtypes.float0)
 
 
-def _detach_int(x):
+def detach_int(x):
     """Detach an integer array from the autodiff tracer chain.
 
     `lax.stop_gradient` is an identity short-circuit for ints, so an int32
@@ -57,22 +77,47 @@ def _detach_int(x):
     return jnp.bitwise_or(x, jnp.zeros((), x.dtype))
 
 
+_detach_int = detach_int
+
+
 # --------------------------------------------------------------------------
 # Selection ops (no gradients needed)
 # --------------------------------------------------------------------------
 
+def _accepts_kw(fn, name: str) -> bool:
+    """True when `fn` can take keyword `name` (explicitly or via **kwargs).
+    Unintrospectable callables are assumed to accept it."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return True
+    return name in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
+def _opt_kw(**kw):
+    """Keyword dict with the None-valued entries dropped (overrides only see
+    the layout keywords when the caller actually uses them)."""
+    return {k: v for k, v in kw.items() if v is not None}
+
+
 def topk_read(q, mem, k: int, *, backend: BackendSpec = None,
-              block_n: int = 512):
+              block_n: int = 512, valid_n: int = None):
     """q: (B,H,W), mem: (B,N,W) -> (vals, idx) each (B,H,k), cosine
-    similarity descending."""
+    similarity descending. ``valid_n`` restricts the sweep to the logical
+    rows [0, valid_n) (scratch-row layout)."""
     be = resolve(backend)
     if (impl := be.impl("topk_read")) is not None:
-        return impl(q, mem, k, block_n=block_n)
-    bn = min(block_n, mem.shape[1])
-    if be.use_pallas and mem.shape[1] % bn == 0:
+        if valid_n is not None and not _accepts_kw(impl, "valid_n"):
+            return impl(q, mem[:, :valid_n], k, block_n=block_n)
+        return impl(q, mem, k, block_n=block_n, **_opt_kw(valid_n=valid_n))
+    nv = mem.shape[1] if valid_n is None else valid_n
+    bn = min(block_n, nv)
+    if be.use_pallas and nv % bn == 0:
         return topk_read_pallas(q, mem, k=k, block_n=bn,
-                                interpret=be.interpret)
-    return ref.topk_read_ref(q, mem, k)
+                                interpret=be.interpret, valid_n=valid_n)
+    m = mem if valid_n is None else mem[:, :valid_n]
+    return ref.topk_read_ref(q, m, k)
 
 
 def lsh_hash(x, planes, *, backend: BackendSpec = None):
@@ -89,34 +134,44 @@ def lsh_hash(x, planes, *, backend: BackendSpec = None):
 
 
 def usage_argmin(last_access, *, backend: BackendSpec = None,
-                 block_n: int = 1024):
-    """last_access: (B, N) -> (B,) int32 argmin (lowest index on ties)."""
+                 block_n: int = 1024, valid_n: int = None):
+    """last_access: (B, N) -> (B,) int32 argmin (lowest index on ties) over
+    the logical rows [0, valid_n) (default: all)."""
     be = resolve(backend)
     if (impl := be.impl("usage_argmin")) is not None:
-        return impl(last_access)
-    bn = min(block_n, last_access.shape[1])
-    if be.use_pallas and last_access.shape[1] % bn == 0:
+        if valid_n is not None and not _accepts_kw(impl, "valid_n"):
+            return impl(last_access[:, :valid_n])
+        return impl(last_access, **_opt_kw(valid_n=valid_n))
+    nv = last_access.shape[1] if valid_n is None else valid_n
+    bn = min(block_n, nv)
+    if be.use_pallas and nv % bn == 0:
         return usage_argmin_pallas(last_access, block_n=bn,
-                                   interpret=be.interpret)
-    return ref.usage_argmin_ref(last_access)
+                                   interpret=be.interpret, valid_n=valid_n)
+    la = last_access if valid_n is None else last_access[:, :valid_n]
+    return ref.usage_argmin_ref(la)
 
 
 def lra_topn(last_access, n: int, *, backend: BackendSpec = None,
-             block_n: int = 1024):
-    """last_access: (B, N) -> (B, n) int32 least-recently-accessed rows,
-    most stale first (ties toward the lowest index)."""
+             block_n: int = 1024, valid_n: int = None):
+    """last_access: (B, N) -> (B, n) int32 least-recently-accessed rows
+    among the logical rows [0, valid_n) (default: all), most stale first
+    (ties toward the lowest index)."""
     be = resolve(backend)
     if (impl := be.impl("lra_topn")) is not None:
-        return impl(last_access, n)
-    bn = min(block_n, last_access.shape[1])
+        if valid_n is not None and not _accepts_kw(impl, "valid_n"):
+            return impl(last_access[:, :valid_n], n)
+        return impl(last_access, n, **_opt_kw(valid_n=valid_n))
+    nv = last_access.shape[1] if valid_n is None else valid_n
+    bn = min(block_n, nv)
     # Integer inputs only on the kernel path: the tiled kernel compares in
     # int32, and float usage tables (e.g. DAM's U^(1)) would silently
     # truncate — those fall back to the exact reference.
     if (be.use_pallas and jnp.issubdtype(last_access.dtype, jnp.integer)
-            and last_access.shape[1] % bn == 0 and n <= bn):
+            and nv % bn == 0 and n <= bn):
         return lra_topn_pallas(last_access, n=n, block_n=bn,
-                               interpret=be.interpret)
-    return ref.lra_topn_ref(last_access, n)
+                               interpret=be.interpret, valid_n=valid_n)
+    la = last_access if valid_n is None else last_access[:, :valid_n]
+    return ref.lra_topn_ref(la, n)
 
 
 # --------------------------------------------------------------------------
@@ -124,29 +179,39 @@ def lra_topn(last_access, n: int, *, backend: BackendSpec = None,
 # --------------------------------------------------------------------------
 
 def scatter_rows(mem, idx, rows, mode: str = "add", *,
-                 backend: BackendSpec = None):
+                 backend: BackendSpec = None, scratch_row: int = None):
     """mem: (B,N,W), idx: (B,J) int32, rows: (B,J,W) -> updated memory.
 
     'add' accumulates duplicate indices; 'set' takes the last write
-    (sequential semantics, j ascending)."""
+    (sequential semantics, j ascending). ``scratch_row=N`` marks a
+    persistent (B, N+1, W) scratch-row buffer: 'add' parks duplicates on
+    row N in place instead of padding a transient row."""
     be = resolve(backend)
     if (impl := be.impl("scatter_rows")) is not None:
-        return impl(mem, idx, rows, mode=mode)
+        if scratch_row is not None and not _accepts_kw(impl, "scratch_row"):
+            # Oracle contract: only indexed rows are touched, so the padded
+            # buffer's scratch row passes through an old-signature override.
+            return impl(mem, idx, rows, mode=mode)
+        return impl(mem, idx, rows, mode=mode,
+                    **_opt_kw(scratch_row=scratch_row))
     if be.use_pallas:
-        return _scatter_rows_vjp(mem, idx, rows, mode, be.interpret)
+        return _scatter_rows_vjp(mem, idx, rows, mode, be.interpret,
+                                 scratch_row)
+    # The jnp oracle is layout-agnostic: indices stay below the scratch row.
     return ref.scatter_rows_ref(mem, idx, rows, mode)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _scatter_rows_vjp(mem, idx, rows, mode, interpret):
-    return scatter_rows_pallas(mem, idx, rows, mode=mode, interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _scatter_rows_vjp(mem, idx, rows, mode, interpret, scratch_row):
+    return scatter_rows_pallas(mem, idx, rows, mode=mode, interpret=interpret,
+                               scratch_row=scratch_row)
 
 
-def _scatter_rows_fwd(mem, idx, rows, mode, interpret):
-    return _scatter_rows_vjp(mem, idx, rows, mode, interpret), idx
+def _scatter_rows_fwd(mem, idx, rows, mode, interpret, scratch_row):
+    return _scatter_rows_vjp(mem, idx, rows, mode, interpret, scratch_row), idx
 
 
-def _scatter_rows_bwd(mode, interpret, idx, g):
+def _scatter_rows_bwd(mode, interpret, scratch_row, idx, g):
     B, J = idx.shape
     b = jnp.arange(B)[:, None]
     g_gather = g[b, idx]                              # (B, J, W)
@@ -169,20 +234,30 @@ _scatter_rows_vjp.defvjp(_scatter_rows_fwd, _scatter_rows_bwd)
 # --------------------------------------------------------------------------
 
 def sparse_write_update(mem, last_access, write_idx, write_w, a, lra_idx,
-                        step, *, delta: float, backend: BackendSpec = None):
+                        step, *, delta: float, backend: BackendSpec = None,
+                        scratch_row: int = None):
     """Fused LRA erase + scatter-add of w^W a^T + last-access update.
 
     See `ref.sparse_write_update_ref` for the exact contract. Returns
-    (mem', last_access'). The usage output is non-differentiable (the paper
-    passes no gradients through U^(2)) and is explicitly detached so
-    downstream integer scatter ops never see a tangent tracer."""
+    (mem', last_access'). ``scratch_row=N`` marks the persistent
+    (B, N+1, W)/(B, N+1) scratch-row layout — the Pallas path then runs
+    with no pad/slice around the kernel (row N is a fixed point of the
+    update; the jnp oracle never touches it because every index is < N).
+    The usage output is non-differentiable (the paper passes no gradients
+    through U^(2)) and is explicitly detached so downstream integer scatter
+    ops never see a tangent tracer."""
     be = resolve(backend)
     if (impl := be.impl("sparse_write_update")) is not None:
-        out = impl(mem, last_access, write_idx, write_w, a, lra_idx, step,
-                   delta=delta)
+        if scratch_row is not None and not _accepts_kw(impl, "scratch_row"):
+            out = impl(mem, last_access, write_idx, write_w, a, lra_idx,
+                       step, delta=delta)
+        else:
+            out = impl(mem, last_access, write_idx, write_w, a, lra_idx,
+                       step, delta=delta, **_opt_kw(scratch_row=scratch_row))
     elif be.use_pallas:
         out = _sparse_write_vjp(mem, last_access, write_idx, write_w, a,
-                                lra_idx, step, delta, be.interpret)
+                                lra_idx, step, delta, be.interpret,
+                                scratch_row)
     else:
         out = ref.sparse_write_update_ref(mem, last_access, write_idx,
                                           write_w, a, lra_idx, step, delta)
@@ -190,22 +265,22 @@ def sparse_write_update(mem, last_access, write_idx, write_w, a, lra_idx,
     return mem_out, _detach_int(la_out)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
 def _sparse_write_vjp(mem, last_access, write_idx, write_w, a, lra_idx,
-                      step, delta, interpret):
+                      step, delta, interpret, scratch_row):
     return sparse_write_pallas(mem, last_access, write_idx, write_w, a,
                                lra_idx, step, delta=delta,
-                               interpret=interpret)
+                               interpret=interpret, scratch_row=scratch_row)
 
 
 def _sparse_write_fwd(mem, last_access, write_idx, write_w, a, lra_idx,
-                      step, delta, interpret):
+                      step, delta, interpret, scratch_row):
     out = _sparse_write_vjp(mem, last_access, write_idx, write_w, a,
-                            lra_idx, step, delta, interpret)
+                            lra_idx, step, delta, interpret, scratch_row)
     return out, (last_access, write_idx, a, write_w, lra_idx, step)
 
 
-def _sparse_write_bwd(delta, interpret, res, ct):
+def _sparse_write_bwd(delta, interpret, scratch_row, res, ct):
     last_access, write_idx, a, write_w, lra_idx, step = res
     g_mem_out, _ = ct                                 # la' is int: float0 ct
     B, H, W = a.shape

@@ -1,4 +1,13 @@
-"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Scratch-row layout: the mutating oracles (`scatter_rows_ref`,
+`sparse_write_update_ref`) are layout-agnostic — they only touch rows named
+by their index arguments, so handing them the persistent (B, N+1, W)
+scratch-row buffer (docs/memory-model.md) leaves row N bit-identical. The
+sweep oracles (`topk_read_ref`, `usage_argmin_ref`, `lra_topn_ref`) scan
+every row they are given; `kernels/ops.py` slices the logical [0, N) view
+off a padded buffer before calling them (``valid_n=``), which XLA fuses
+into the O(N·W) sweep these oracles already perform."""
 from __future__ import annotations
 
 import jax
@@ -64,7 +73,9 @@ def sparse_write_update_ref(mem: jax.Array, last_access: jax.Array,
 
     mem: (B, N, W); last_access: (B, N) int32; write_idx: (B, J) int32 with
     J = H·(K+1); write_w: (B, J); a: (B, H, W) write words (head of column j
-    is j // (K+1)); lra_idx: (B, H) rows to erase; step: () int32.
+    is j // (K+1)); lra_idx: (B, H) rows to erase; step: () int32. Also
+    accepts scratch-row buffers ((B, N+1, W)/(B, N+1), indices < N): the
+    scatter updates below never reach row N, so it passes through untouched.
 
     Semantics (matching `sam_step`'s unfused sequence exactly):
       1. mem[b, lra_idx]   = 0                       (R_t erase, eq. 6)

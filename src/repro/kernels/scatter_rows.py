@@ -10,10 +10,15 @@ Sequential grid semantics on TPU make duplicate indices well-defined:
 
 Uses ``input_output_aliasing`` so the memory buffer is updated in place —
 the functional-JAX analogue of the paper's in-place write + rollback.
+Duplicate 'add' indices are pre-combined into their first occurrence and
+the leftovers parked on a scratch row; with ``scratch_row=N`` that row is
+row N of the caller's persistent (B, N+1, W) buffer (no pad/slice —
+docs/memory-model.md), otherwise a transient padded row is used.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,17 +54,26 @@ def _combine_duplicates(idx: jax.Array, rows: jax.Array, dummy: int):
     return idx, rows
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+@functools.partial(jax.jit, static_argnames=("mode", "interpret",
+                                             "scratch_row"))
 def scatter_rows(mem: jax.Array, idx: jax.Array, rows: jax.Array,
-                 *, mode: str = "add", interpret: bool = True):
+                 *, mode: str = "add", interpret: bool = True,
+                 scratch_row: Optional[int] = None):
     """mem: (B, N, W), idx: (B, J) int32, rows: (B, J, W) -> updated memory.
 
-    'add' accumulates duplicate indices; 'set' takes the last write."""
+    'add' accumulates duplicate indices; 'set' takes the last write. With
+    ``scratch_row=N`` the memory is the persistent (B, N+1, W) scratch-row
+    buffer and 'add' parks duplicates on row N in place (no pad/slice)."""
     B, N, W = mem.shape
     _, J = idx.shape
     if mode == "add":
         # Read-modify-write of a freshly written block would see stale data
         # under in/out aliasing, so make the touched row set unique first.
+        if scratch_row is not None:
+            assert scratch_row == N - 1, (scratch_row, mem.shape)
+            idx, rows = _combine_duplicates(idx, rows, dummy=scratch_row)
+            return _scatter_unique(mem, idx, rows, mode=mode,
+                                   interpret=interpret)
         mem = jnp.pad(mem, ((0, 0), (0, 1), (0, 0)))
         idx, rows = _combine_duplicates(idx, rows, dummy=N)
         out = _scatter_unique(mem, idx, rows, mode=mode, interpret=interpret)

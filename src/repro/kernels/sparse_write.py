@@ -14,11 +14,20 @@ every matching write's w_j · a_{head(j)} contribution on the fly (the outer
 product never exists in HBM), and refreshes the row's last-access scalar.
 HBM traffic is O(J·W) — independent of N, the paper's headline property.
 
-Duplicate handling: each output row must be written by exactly one grid
-step (later steps would read stale data through the in/out alias), so
-duplicate indices are redirected to a dummy row N on the host side and the
-first occurrence accumulates *all* matching contributions — the kernel's
-inner loop matches on row id, not on position.
+Duplicate handling — the persistent scratch-row contract: each output row
+must be written by exactly one grid step (later steps would read stale data
+through the in/out alias), so duplicate indices are redirected to a
+**scratch row** and the first occurrence accumulates *all* matching
+contributions (the kernel's inner loop matches on row id, not on position).
+With ``scratch_row=N`` the caller carries the memory as a persistent
+(B, N+1, W) buffer (`SAMState`, docs/memory-model.md) whose row N *is* the
+scratch row: the kernel reads and writes the buffer in place and the parked
+grid steps rewrite row N with its own contents (no write index ever equals
+N, so the scratch row is a fixed point). Nothing is padded or sliced — the
+compiled step stays O(J·W). Without ``scratch_row`` (legacy callers holding
+a (B, N, W) memory) the wrapper still pads a transient row N and slices it
+back off, an O(N·W) copy per call kept only for layout migration and the
+`benchmarks/bench_kernels.py` legacy-vs-scratch comparison.
 
 Gradients: `pallas_call` has no VJP; `kernels/ops.py` wraps this in a
 `jax.custom_vjp` whose backward is closed-form (gather of the output
@@ -28,6 +37,7 @@ both the naive unroll and the rollback BPTT replay.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,45 +69,55 @@ def _kernel(uidx_ref, widx_ref, erase_ref, w_ref, step_ref,
                                  la_ref[0, 0])
 
 
-@functools.partial(jax.jit, static_argnames=("delta", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("delta", "interpret", "scratch_row"))
 def sparse_write_update(mem: jax.Array, last_access: jax.Array,
                         write_idx: jax.Array, write_w: jax.Array,
                         a: jax.Array, lra_idx: jax.Array, step: jax.Array,
-                        *, delta: float, interpret: bool = True):
+                        *, delta: float, interpret: bool = True,
+                        scratch_row: Optional[int] = None):
     """Fused erase + outer-product scatter-add + usage update.
 
-    mem: (B, N, W); last_access: (B, N) int32; write_idx: (B, J) int32,
-    J = H·(K+1); write_w: (B, J); a: (B, H, W); lra_idx: (B, H) int32;
-    step: () int32. Returns (mem', last_access'). Numerically matches
-    `ref.sparse_write_update_ref` (duplicates accumulate; usage takes the
-    max over step and the previous value wherever weight > delta).
+    Scratch-row layout (``scratch_row=N``): mem: (B, N+1, W);
+    last_access: (B, N+1) int32 — row N is the persistent write-scratch row
+    (never referenced by any index argument). Returns (mem', last_access')
+    in the same padded shapes, with row N a fixed point of the update.
+    Legacy layout (``scratch_row=None``): mem: (B, N, W); a transient
+    scratch row is padded on and sliced back off (O(N·W) per call).
+
+    write_idx: (B, J) int32, J = H·(K+1); write_w: (B, J); a: (B, H, W);
+    lra_idx: (B, H) int32; step: () int32. All indices < N. Numerically
+    matches `ref.sparse_write_update_ref` (duplicates accumulate; usage
+    takes the max over step and the previous value wherever weight > delta).
 
     Precondition: every lra_idx row must also appear in write_idx — only
     write_idx rows get grid steps, so an LRA row outside the write set
     would not be erased (the reference erases unconditionally). SAM's
     write plan guarantees this by construction: the LRA slot is the last
     of each head's K+1 write rows (`write_plan`, eq. 5).
-
-    Known cost on the compiled path: the dummy-row parking pads/slices the
-    (B, N, W) memory around the kernel, an O(N·W) copy per step that the
-    kernel itself avoids. Removing it needs a persistent N+1-row memory
-    buffer in SAMState (ROADMAP open item); interpret-mode parity and the
-    O(J·W) kernel grid are unaffected.
     """
-    B, N, W = mem.shape
+    B, rows, W = mem.shape
     _, J = write_idx.shape
     H = a.shape[1]
     kp1 = J // H
     assert kp1 * H == J, (J, H)
 
-    # Unique-first row ownership: duplicates are parked on dummy row N.
+    if scratch_row is None:
+        # Legacy layout: transient scratch row N, padded on / sliced off.
+        N = rows
+        mem_p = jnp.pad(mem, ((0, 0), (0, 1), (0, 0)))
+        la_p = jnp.pad(last_access, ((0, 0), (0, 1)))
+        dummy = N
+    else:
+        assert scratch_row == rows - 1 == last_access.shape[1] - 1, \
+            (scratch_row, mem.shape, last_access.shape)
+        mem_p, la_p, dummy = mem, last_access, scratch_row
+
+    # Unique-first row ownership: duplicates are parked on the scratch row.
     write_idx = write_idx.astype(jnp.int32)
     first = first_occurrence(write_idx)
-    uidx = jnp.where(first, write_idx, N).astype(jnp.int32)
+    uidx = jnp.where(first, write_idx, dummy).astype(jnp.int32)
     erase = (uidx[:, :, None] == lra_idx[:, None, :]).any(-1).astype(jnp.int32)
-
-    mem_p = jnp.pad(mem, ((0, 0), (0, 1), (0, 0)))
-    la_p = jnp.pad(last_access, ((0, 0), (0, 1)))
     step_arr = jnp.broadcast_to(step, (1,)).astype(jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -122,4 +142,6 @@ def sparse_write_update(mem: jax.Array, last_access: jax.Array,
         interpret=interpret,
     )(uidx, write_idx, erase, write_w.astype(mem.dtype), step_arr,
       mem_p, la_p, a.astype(mem.dtype))
-    return out_mem[:, :N], out_la[:, :N]
+    if scratch_row is None:
+        return out_mem[:, :rows], out_la[:, :rows]
+    return out_mem, out_la

@@ -10,10 +10,16 @@ the (num_tiles · K) candidates — O(N/block_n · K) ≪ N.
 Grid: (B·H, N/block_n). Memory tile re-use across the H query heads of the
 same batch element is left to the compiler's HBM caching; the block index
 map only depends on (b, tile).
+
+Scratch-row layout: with ``valid_n=N`` the memory may carry extra scratch
+rows past N (the persistent (B, N+1, W) buffer, docs/memory-model.md); the
+grid tiles cover exactly rows [0, N), so the scratch row is never swept —
+no slice of the big buffer is needed to exclude it.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,13 +51,16 @@ def _kernel(q_ref, m_ref, vals_ref, idx_ref, *, k: int, block_n: int):
     jax.lax.fori_loop(0, k, body, (sims,))
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret",
+                                             "valid_n"))
 def topk_read(q: jax.Array, mem: jax.Array, *, k: int, block_n: int = 512,
-              interpret: bool = True):
+              interpret: bool = True, valid_n: Optional[int] = None):
     """q: (B, H, W), mem: (B, N, W) -> (vals, idx) each (B, H, K), cosine
-    similarity, descending."""
+    similarity, descending. ``valid_n`` restricts the sweep to the first
+    `valid_n` rows (scratch-row layout: mem is (B, N+1, W), valid_n=N)."""
     B, H, W = q.shape
     _, N, _ = mem.shape
+    N = N if valid_n is None else valid_n
     assert N % block_n == 0, (N, block_n)
     tiles = N // block_n
     qf = q.reshape(B * H, W)

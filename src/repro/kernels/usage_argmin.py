@@ -8,10 +8,15 @@ replacement for the paper's circular-linked-list LRA ring (DESIGN.md §2).
 one LRA row per head): each tile emits its local n minima via an iterative
 n-pass argmin (n = num_heads ≤ 8), and a final O(tiles·n) lexicographic
 merge picks the global n. Both tie-break toward the lowest index, matching
-the `jax.lax.top_k` reference."""
+the `jax.lax.top_k` reference.
+
+Scratch-row layout: with ``valid_n=N`` the usage table may carry a scratch
+entry past N ((B, N+1), pinned to int32 max — docs/memory-model.md); the
+grid tiles cover exactly rows [0, N), so the scratch entry is never swept."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,11 +42,14 @@ def _kernel(u_ref, idx_ref, val_ref, *, block_n: int):
         val_ref[0, 0] = jnp.where(better, v, val_ref[0, 0])
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret",
+                                             "valid_n"))
 def usage_argmin(last_access: jax.Array, *, block_n: int = 1024,
-                 interpret: bool = True):
-    """last_access: (B, N) -> (B,) int32 index of the minimum."""
+                 interpret: bool = True, valid_n: Optional[int] = None):
+    """last_access: (B, N) -> (B,) int32 index of the minimum over the first
+    `valid_n` rows (default: all)."""
     B, N = last_access.shape
+    N = N if valid_n is None else valid_n
     bn = min(block_n, N)
     assert N % bn == 0, (N, bn)
     idx, _ = pl.pallas_call(
@@ -75,12 +83,15 @@ def _topn_kernel(u_ref, vals_ref, idx_ref, *, n: int, block_n: int):
     jax.lax.fori_loop(0, n, body, (u,))
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n", "block_n", "interpret",
+                                             "valid_n"))
 def lra_topn(last_access: jax.Array, *, n: int, block_n: int = 1024,
-             interpret: bool = True):
-    """last_access: (B, N) -> (B, n) int32 indices of the n smallest entries,
-    ascending by (value, index) — identical to `lra_topn_ref`."""
+             interpret: bool = True, valid_n: Optional[int] = None):
+    """last_access: (B, N) -> (B, n) int32 indices of the n smallest entries
+    over the first `valid_n` rows (default: all), ascending by
+    (value, index) — identical to `lra_topn_ref`."""
     B, N = last_access.shape
+    N = N if valid_n is None else valid_n
     bn = min(block_n, N)
     assert N % bn == 0, (N, bn)
     assert n <= bn, (n, bn)

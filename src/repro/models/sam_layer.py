@@ -18,14 +18,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import addressing as addr
+from repro.core.types import (SCRATCH_ROWS, has_scratch_row,
+                              init_scratch_last_access, init_scratch_memory)
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
 from repro.models.layers import pdef
 
 
 class MemoryState(NamedTuple):
-    memory: jax.Array        # (B, N, W)
-    last_access: jax.Array   # (B, N) int32
+    """Per-sequence external memory. Carries the persistent scratch-row
+    layout (core/types.py): row N is the kernels' write-scratch row."""
+
+    memory: jax.Array        # (B, N+1, W) — row N = write scratch
+    last_access: jax.Array   # (B, N+1) int32; [N] = LA_SCRATCH
     read_idx: jax.Array      # (B, H, K) previous read locations
     read_w: jax.Array        # (B, H, K)
     step: jax.Array          # () int32
@@ -45,8 +50,8 @@ def memory_defs(cfg: ModelConfig):
 def memory_state_shapes(cfg: ModelConfig, batch: int):
     m = cfg.memory
     return {
-        "memory": (batch, m.num_slots, m.word_size),
-        "last_access": (batch, m.num_slots),
+        "memory": (batch, m.num_slots + SCRATCH_ROWS, m.word_size),
+        "last_access": (batch, m.num_slots + SCRATCH_ROWS),
         "read_idx": (batch, m.num_heads, m.k),
         "read_w": (batch, m.num_heads, m.k),
     }
@@ -55,10 +60,8 @@ def memory_state_shapes(cfg: ModelConfig, batch: int):
 def init_memory_state(cfg: ModelConfig, batch: int) -> MemoryState:
     m = cfg.memory
     return MemoryState(
-        memory=jnp.zeros((batch, m.num_slots, m.word_size)),
-        last_access=jnp.broadcast_to(
-            -jnp.arange(m.num_slots, dtype=jnp.int32)[None],
-            (batch, m.num_slots)),
+        memory=init_scratch_memory(batch, m.num_slots, m.word_size),
+        last_access=init_scratch_last_access(batch, m.num_slots),
         read_idx=jnp.zeros((batch, m.num_heads, m.k), jnp.int32),
         read_w=jnp.zeros((batch, m.num_heads, m.k)),
         step=jnp.zeros((), jnp.int32),
@@ -80,19 +83,30 @@ def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState):
 
     # ---- write (eq. 5): previously-read ∪ least-recently-accessed ----
     be = m.backend
+    N = m.num_slots
+    padded = has_scratch_row(N, state.memory.shape[1])
+    valid_n = N if padded else None
     step = state.step + 1
-    lra = addr.least_recently_accessed(state.last_access, H, backend=be)
+    lra = addr.least_recently_accessed(state.last_access, H, backend=be,
+                                       valid_n=valid_n)
     w_read = alpha[..., None] * gamma[..., None] * state.read_w
     w_lra = (alpha * (1.0 - gamma))[..., None]
     widx = jnp.concatenate([state.read_idx, lra[..., None]], -1)  # (B,H,K+1)
     ww = jnp.concatenate([w_read, w_lra], -1)
     memory, la = addr.sparse_write_update(
         state.memory, state.last_access, widx.reshape(B, -1),
-        ww.reshape(B, -1), a, lra, step, m.delta, backend=be)
+        ww.reshape(B, -1), a, lra, step, m.delta, backend=be,
+        scratch_row=N if padded else None)
+    # Soft GSPMD constraint; with the scratch-row layout the slot dim is
+    # N+1, which no longer divides the model axis — GSPMD pads the odd
+    # scratch row onto the last shard (a one-row imbalance, not an error).
+    # If profiling ever shows the padding collective mattering, swap the
+    # "mem_slots" rule to None (replicate) via `mesh_rules` instead.
     memory = shard(memory, "batch", "mem_slots", "mem_word")
 
     # ---- sparse content read (§3.1) ----
-    read = addr.sparse_read_exact(q, memory, beta, K, backend=be)
+    read = addr.sparse_read_exact(q, memory, beta, K, backend=be,
+                                  valid_n=valid_n)
     la = addr.update_last_access(la, read.indices.reshape(B, -1),
                                  read.weights.reshape(B, -1), step, m.delta)
 

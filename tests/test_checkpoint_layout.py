@@ -1,0 +1,141 @@
+"""Checkpointing the scratch-row memory layout.
+
+* a (B, N+1, W) `SAMState` saved via `checkpoint/ckpt.py` restores
+  **bit-exactly** (every leaf, scratch row included);
+* a legacy pre-layout checkpoint — (B, N, W) memory, (B, N) usage, no
+  manifest `format` marker — loads through the migration shim: the logical
+  rows restore bit-exactly and the scratch row comes back with the
+  `init_state` values (0 memory, int32 max usage), after which the state
+  steps normally;
+* the shim is deliberately narrow: format-2 checkpoints restore strictly
+  (a num_slots N→N+1 config change must raise, not silently pad), only
+  memory/last_access/usage leaves are eligible, and only the exact
+  one-extra-row-on-axis-1 shape delta qualifies.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (restore_checkpoint, save_checkpoint,
+                                   _migrate_scratch_row)
+from repro.core import sam as sam_lib
+from repro.core.types import LA_SCRATCH, ControllerConfig, MemoryConfig
+
+CTL = ControllerConfig(input_size=8, hidden_size=24, output_size=6)
+
+
+def _strip_format_marker(directory: str, step: int):
+    """Turn a freshly saved checkpoint into a pre-scratch-row (format-1)
+    one: old writers never emitted the manifest `format` field."""
+    mpath = os.path.join(directory, f"step_{step}", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["format"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+
+def _cfg(backend="ref"):
+    mem = MemoryConfig(num_slots=32, word_size=8, num_heads=2, k=2,
+                       backend=backend)
+    return sam_lib.SAMConfig(mem, CTL)
+
+
+def _stepped_state(cfg, T=3):
+    params = sam_lib.init_params(jax.random.PRNGKey(0), cfg)
+    state = sam_lib.init_state(2, cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (T, 2, 8))
+    state, _ = sam_lib.sam_unroll(params, cfg, state, xs)
+    return params, state
+
+
+def test_padded_state_roundtrips_bit_exactly(tmp_path):
+    cfg = _cfg()
+    _, state = _stepped_state(cfg)
+    save_checkpoint(str(tmp_path), 7, state)
+    restored, step = restore_checkpoint(str(tmp_path), state)
+    assert step == 7
+    for orig, back in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(orig), np.asarray(back))
+        assert np.asarray(orig).dtype == np.asarray(back).dtype
+
+
+def test_legacy_checkpoint_loads_through_migration_shim(tmp_path):
+    """Simulate a pre-scratch-row checkpoint: legacy (B, N, W)/(B, N) memory
+    and usage leaves, and no manifest format marker."""
+    cfg = _cfg()
+    params, state = _stepped_state(cfg)
+    legacy = state._replace(memory=state.memory[:, :-1],
+                            last_access=state.last_access[:, :-1])
+    save_checkpoint(str(tmp_path), 3, legacy)
+    _strip_format_marker(str(tmp_path), 3)
+
+    template = sam_lib.init_state(2, cfg)
+    restored, step = restore_checkpoint(str(tmp_path), template)
+    assert step == 3
+    assert restored.memory.shape == template.memory.shape
+    assert restored.last_access.shape == template.last_access.shape
+    # Logical rows bit-exact, scratch row re-initialized.
+    assert np.array_equal(np.asarray(restored.memory[:, :-1]),
+                          np.asarray(legacy.memory))
+    assert np.array_equal(np.asarray(restored.last_access[:, :-1]),
+                          np.asarray(legacy.last_access))
+    assert np.all(np.asarray(restored.memory[:, -1]) == 0.0)
+    assert np.all(np.asarray(restored.last_access[:, -1]) == LA_SCRATCH)
+    # The migrated state steps normally.
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8))
+    s2, y = sam_lib.sam_step(params, cfg, restored, x)
+    assert bool(jnp.isfinite(y).all())
+    assert np.all(np.asarray(s2.last_access[:, -1]) == LA_SCRATCH)
+
+
+def test_migration_requires_an_eligible_leaf_name(tmp_path):
+    """A one-row-short mismatch on a leaf NOT named memory/last_access/usage
+    (e.g. a head-count config change hitting read_idx) must raise, not be
+    silently padded — even on a format-1 checkpoint."""
+    cfg = _cfg()
+    _, state = _stepped_state(cfg)
+    shrunk = state._replace(
+        read=state.read._replace(indices=state.read.indices[:, :-1],
+                                 weights=state.read.weights[:, :-1],
+                                 words=state.read.words[:, :-1]))
+    save_checkpoint(str(tmp_path), 1, shrunk)
+    _strip_format_marker(str(tmp_path), 1)
+    with pytest.raises(ValueError, match="migration"):
+        restore_checkpoint(str(tmp_path), state)
+
+
+def test_format2_checkpoint_never_migrates(tmp_path):
+    """A scratch-row-era checkpoint restored into a template with
+    num_slots+1 is a config change, shape-indistinguishable from the
+    legacy layout — the format marker makes it raise instead of silently
+    padding (which would leave a dead slot carrying LA_SCRATCH usage)."""
+    cfg_small = _cfg()
+    _, state = _stepped_state(cfg_small)
+    save_checkpoint(str(tmp_path), 2, state)
+    mem_big = MemoryConfig(num_slots=cfg_small.memory.num_slots + 1,
+                           word_size=8, num_heads=2, k=2, backend="ref")
+    cfg_big = sam_lib.SAMConfig(mem_big, CTL)
+    template = sam_lib.init_state(2, cfg_big)
+    with pytest.raises(ValueError, match="migration"):
+        restore_checkpoint(str(tmp_path), template)
+
+
+def test_migration_shim_is_narrow():
+    """Only the one-extra-row-on-axis-1 mismatch is migrated."""
+    arr = np.zeros((2, 8, 4), np.float32)
+    out = _migrate_scratch_row(arr, (2, 9, 4))
+    assert out.shape == (2, 9, 4) and np.all(out[:, 8] == 0.0)
+    ints = np.zeros((2, 8), np.int32)
+    out_i = _migrate_scratch_row(ints, (2, 9))
+    assert out_i.dtype == np.int32 and np.all(out_i[:, 8] == LA_SCRATCH)
+    with pytest.raises(ValueError, match="legacy"):
+        _migrate_scratch_row(arr, (2, 10, 4))       # two extra rows
+    with pytest.raises(ValueError, match="legacy"):
+        _migrate_scratch_row(arr, (2, 9, 5))        # other dim differs
+    with pytest.raises(ValueError, match="legacy"):
+        _migrate_scratch_row(arr, (3, 9, 4))        # batch differs

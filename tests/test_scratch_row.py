@@ -1,0 +1,196 @@
+"""The persistent scratch-row layout contract (docs/memory-model.md):
+
+* row N of the (B, N+1, W) state buffer never influences read outputs,
+  usage, or gradients, on any backend — checked by tampering the scratch
+  row with garbage and asserting nothing observable changes, and by
+  checking the gradient w.r.t. the initial scratch row is exactly zero
+  (naive unroll and rollback BPTT);
+* the scratch row is a fixed point of every mutating op;
+* micro-regression guard: the compiled `sparse_write_update` on the
+  scratch-row layout contains no O(N·W) pad or slice of the memory — the
+  exact copy the layout was introduced to remove (asserted on the lowered
+  HLO text, with the legacy layout as the positive control that the
+  pattern detector works).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sam as sam_lib
+from repro.core.bptt import sam_unroll_sparse_bptt
+from repro.core.types import (LA_SCRATCH, ControllerConfig, MemoryConfig,
+                              SAMState)
+from repro.kernels import ops
+
+BACKENDS = ["ref", "pallas-interpret"]
+CTL = ControllerConfig(input_size=8, hidden_size=24, output_size=6)
+
+
+def _cfg(backend, ann="exact", num_slots=64):
+    mem = MemoryConfig(num_slots=num_slots, word_size=8, num_heads=2, k=2,
+                       ann=ann, lsh_tables=2, lsh_bits=4, lsh_bucket_size=8,
+                       backend=backend)
+    return sam_lib.SAMConfig(mem, CTL)
+
+
+def _tamper(state: SAMState, key) -> SAMState:
+    """Overwrite the scratch row (content + usage) with garbage."""
+    garbage = 100.0 * jax.random.normal(key, state.memory[:, -1].shape)
+    return state._replace(
+        memory=state.memory.at[:, -1].set(garbage),
+        last_access=state.last_access.at[:, -1].set(-12345))
+
+
+def _observables(cfg, state, xs):
+    params = sam_lib.init_params(jax.random.PRNGKey(0), cfg)
+    stateT, ys = sam_lib.sam_unroll(params, cfg, state, xs)
+    return (np.asarray(ys), np.asarray(stateT.memory[:, :-1]),
+            np.asarray(stateT.last_access[:, :-1]),
+            np.asarray(stateT.read.indices), np.asarray(stateT.read.weights))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("ann", ["exact", "lsh"])
+def test_scratch_row_never_influences_outputs(backend, ann):
+    """Garbage in the scratch row must not change outputs, logical memory,
+    usage, or read selection."""
+    cfg = _cfg(backend, ann)
+    state = sam_lib.init_state(2, cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 2, 8))
+    clean = _observables(cfg, state, xs)
+    dirty = _observables(cfg, _tamper(state, jax.random.PRNGKey(2)), xs)
+    for c, d in zip(clean, dirty):
+        assert np.array_equal(c, d)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scratch_usage_entry_is_invariant(backend):
+    """last_access[:, N] stays pinned at LA_SCRATCH through an unroll."""
+    cfg = _cfg(backend)
+    params = sam_lib.init_params(jax.random.PRNGKey(0), cfg)
+    state = sam_lib.init_state(2, cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 8))
+    stateT, _ = sam_lib.sam_unroll(params, cfg, state, xs)
+    assert np.all(np.asarray(stateT.last_access[:, -1]) == LA_SCRATCH)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scratch_memory_row_is_fixed_point(backend):
+    """The write ops rewrite the scratch row with its own value: garbage put
+    there survives an unroll bit-exactly (nothing is accumulated into it)."""
+    cfg = _cfg(backend)
+    params = sam_lib.init_params(jax.random.PRNGKey(0), cfg)
+    state = _tamper(sam_lib.init_state(2, cfg), jax.random.PRNGKey(3))
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 8))
+    stateT, _ = sam_lib.sam_unroll(params, cfg, state, xs)
+    assert np.array_equal(np.asarray(stateT.memory[:, -1]),
+                          np.asarray(state.memory[:, -1]))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("unroll", ["naive", "bptt"])
+def test_scratch_row_gradient_is_zero(backend, unroll):
+    """d loss / d (initial scratch row) == 0 exactly — gradients never leak
+    through the scratch row, through either unroll."""
+    cfg = _cfg(backend)
+    params = sam_lib.init_params(jax.random.PRNGKey(0), cfg)
+    state = sam_lib.init_state(2, cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 8))
+    fn = sam_lib.sam_unroll if unroll == "naive" else sam_unroll_sparse_bptt
+
+    def loss(mem0):
+        _, ys = fn(params, cfg, state._replace(memory=mem0), xs)
+        return (ys ** 2).sum()
+
+    g = np.asarray(jax.grad(loss)(state.memory))
+    assert np.all(g[:, -1] == 0.0)
+    assert np.abs(g[:, :-1]).sum() > 0.0   # the logical rows do get gradient
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ops_scratch_fixed_point_under_duplicates(backend):
+    """Direct op-level check: duplicate-heavy writes on the padded layout
+    leave the scratch row bit-identical and match the legacy layout on the
+    logical rows."""
+    B, N, W, H, K = 2, 32, 8, 2, 3
+    J = H * (K + 1)
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    mem = jax.random.normal(ks[0], (B, N + 1, W))
+    last = jax.random.randint(ks[1], (B, N + 1), -10, 5).astype(jnp.int32)
+    widx = jax.random.randint(ks[2], (B, J), 0, N)
+    widx = widx.at[:, 1].set(widx[:, 0]).at[:, 2].set(widx[:, 0])  # dups
+    lra = widx.reshape(B, H, K + 1)[..., -1]
+    ww = jax.random.uniform(ks[3], (B, J), minval=0.0, maxval=0.2)
+    a = jax.random.normal(ks[4], (B, H, W))
+    step = jnp.int32(7)
+
+    m_pad, la_pad = ops.sparse_write_update(
+        mem, last, widx, ww, a, lra, step, delta=0.005, backend=backend,
+        scratch_row=N)
+    m_leg, la_leg = ops.sparse_write_update(
+        mem[:, :N], last[:, :N], widx, ww, a, lra, step, delta=0.005,
+        backend=backend)
+    np.testing.assert_allclose(np.asarray(m_pad[:, :N]), np.asarray(m_leg),
+                               atol=1e-6)
+    assert np.array_equal(np.asarray(la_pad[:, :N]), np.asarray(la_leg))
+    assert np.array_equal(np.asarray(m_pad[:, N]), np.asarray(mem[:, N]))
+    assert np.array_equal(np.asarray(la_pad[:, N]), np.asarray(last[:, N]))
+
+    s_pad = ops.scatter_rows(mem, widx, a.repeat(K + 1, axis=1), "add",
+                             backend=backend, scratch_row=N)
+    s_leg = ops.scatter_rows(mem[:, :N], widx, a.repeat(K + 1, axis=1),
+                             "add", backend=backend)
+    np.testing.assert_allclose(np.asarray(s_pad[:, :N]), np.asarray(s_leg),
+                               atol=1e-6)
+    assert np.array_equal(np.asarray(s_pad[:, N]), np.asarray(mem[:, N]))
+
+
+# ----------------------- HLO micro-regression guard ------------------------
+
+def _lowered_write_hlo(scratch: bool, backend: str, n: int = 4096):
+    B, W, H, K = 1, 32, 2, 2
+    J = H * (K + 1)
+    rows = n + 1 if scratch else n
+    mem = jnp.zeros((B, rows, W))
+    last = jnp.zeros((B, rows), jnp.int32)
+    widx = jnp.arange(J, dtype=jnp.int32)[None] * 3 % n
+    lra = widx.reshape(B, H, K + 1)[..., -1]
+    ww = jnp.full((B, J), 0.1)
+    a = jnp.ones((B, H, W))
+
+    def f(mem, last, ww, a):
+        return ops.sparse_write_update(mem, last, widx, ww, a, lra,
+                                       jnp.int32(1), delta=0.005,
+                                       backend=backend,
+                                       scratch_row=n if scratch else None)
+
+    return jax.jit(f).lower(mem, last, ww, a).as_text(), n
+
+
+def _memory_copy_lines(text: str, n: int, w: int = 32):
+    """Lines that pad the (B, N, W) memory to N+1 rows or slice it back —
+    the O(N·W) copies the scratch-row layout removes."""
+    big, small = f"{n + 1}x{w}xf32", f"{n}x{w}xf32"
+    bad = []
+    for line in text.splitlines():
+        if "pad" in line and big in line:
+            bad.append(line.strip())
+        elif "slice" in line and big in line and small in line:
+            bad.append(line.strip())
+    return bad
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_compiled_write_has_no_full_memory_copy(backend):
+    """Acceptance guard: the compiled `sparse_write_update` on the
+    scratch-row layout contains no O(N·W) pad/slice of the memory."""
+    text, n = _lowered_write_hlo(scratch=True, backend=backend)
+    assert _memory_copy_lines(text, n) == []
+
+
+def test_legacy_write_pad_is_detected():
+    """Positive control: the legacy pallas path *does* pad/slice the memory,
+    so the pattern detector above is actually capable of failing."""
+    text, n = _lowered_write_hlo(scratch=False, backend="pallas-interpret")
+    assert _memory_copy_lines(text, n) != []

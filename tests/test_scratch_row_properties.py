@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) for the scratch-row invariant: after
+*arbitrary* interleavings of reads and writes — duplicate indices included —
+row N of the padded state buffer never influences read outputs, usage, or
+gradients, on any backend.
+
+Hypothesis drives the interleaving (op sequence, indices, weights, scratch
+garbage); the oracle is differential: the same sequence applied to a state
+with a clean scratch row and to one with a garbage scratch row must be
+observationally identical everywhere except the scratch row itself.
+
+Example budget: default 20 examples per property (CI tier-1 lane); the
+nightly CI job raises it via ``REPRO_HYPOTHESIS_PROFILE=nightly`` (200).
+The module is skipped when hypothesis is not installed (same convention as
+`tests/test_data_properties.py`); the deterministic counterparts in
+`tests/test_scratch_row.py` always run.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.types import LA_SCRATCH  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.register_profile("nightly", max_examples=200, deadline=None)
+settings.load_profile(os.environ.get("REPRO_HYPOTHESIS_PROFILE", "ci"))
+
+pytestmark = pytest.mark.slow
+
+BACKENDS = ["ref", "pallas-interpret"]
+B, N, W, H, K = 2, 16, 8, 2, 2
+J = H * (K + 1)
+DELTA = 0.005
+
+
+def _state(seed, garbage: bool):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    mem = jax.random.normal(ks[0], (B, N + 1, W))
+    last = jax.random.randint(ks[1], (B, N + 1), -10, 5).astype(jnp.int32)
+    if garbage:
+        mem = mem.at[:, N].set(1e4 * jax.random.normal(ks[2], (B, W)))
+        last = last.at[:, N].set(-99999)
+    else:
+        mem = mem.at[:, N].set(0.0)
+        last = last.at[:, N].set(LA_SCRATCH)
+    return mem, last
+
+
+# One op of an interleaving: ("write", J indices, J weights) | ("read", —).
+_op = st.one_of(
+    st.tuples(st.just("write"),
+              st.lists(st.integers(0, N - 1), min_size=J, max_size=J),
+              st.lists(st.floats(0.0, 0.3), min_size=J, max_size=J)),
+    st.tuples(st.just("read"), st.just(None), st.just(None)),
+)
+
+
+def _apply_sequence(backend, seq, mem, last):
+    """Run an op interleaving; returns observables that must not depend on
+    the scratch row: read values/indices, logical memory, logical usage."""
+    observed = []
+    step = 0
+    for kind, idx, w in seq:
+        step += 1
+        if kind == "write":
+            widx = jnp.array(idx, jnp.int32).reshape(1, J) \
+                .repeat(B, axis=0)
+            ww = jnp.array(w).reshape(1, J).repeat(B, axis=0)
+            lra = widx.reshape(B, H, K + 1)[..., -1]
+            a = jax.random.normal(jax.random.PRNGKey(step), (B, H, W))
+            mem, last = ops.sparse_write_update(
+                mem, last, widx, ww, a, lra, jnp.int32(step), delta=DELTA,
+                backend=backend, scratch_row=N)
+        else:
+            q = jax.random.normal(jax.random.PRNGKey(1000 + step), (B, H, W))
+            vals, ridx = ops.topk_read(q, mem, K, backend=backend, valid_n=N)
+            lra_n = ops.lra_topn(last, H, backend=backend, valid_n=N)
+            am = ops.usage_argmin(last, backend=backend, valid_n=N)
+            observed.append((np.asarray(vals), np.asarray(ridx),
+                             np.asarray(lra_n), np.asarray(am)))
+    observed.append((np.asarray(mem[:, :N]), np.asarray(last[:, :N])))
+    return observed
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@given(seq=st.lists(_op, min_size=1, max_size=6), seed=st.integers(0, 2 ** 16))
+def test_scratch_row_invariant_under_interleavings(backend, seq, seed):
+    """Differential oracle: clean vs garbage scratch row, identical
+    observables after any read/write interleaving with duplicates."""
+    clean = _apply_sequence(backend, seq, *_state(seed, garbage=False))
+    dirty = _apply_sequence(backend, seq, *_state(seed, garbage=True))
+    for c, d in zip(clean, dirty):
+        for ca, da in zip(c, d):
+            np.testing.assert_array_equal(ca, da)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@given(idx=st.lists(st.integers(0, N - 1), min_size=J, max_size=J),
+       w=st.lists(st.floats(0.0, 0.3), min_size=J, max_size=J),
+       seed=st.integers(0, 2 ** 16))
+def test_write_gradient_never_touches_scratch(backend, idx, w, seed):
+    """For any single write (arbitrary duplicate pattern), the gradient of a
+    logical-rows-only loss w.r.t. the input memory is zero at row N."""
+    mem, last = _state(seed, garbage=True)
+    widx = jnp.array(idx, jnp.int32).reshape(1, J).repeat(B, axis=0)
+    ww = jnp.array(w).reshape(1, J).repeat(B, axis=0)
+    lra = widx.reshape(B, H, K + 1)[..., -1]
+    a = jax.random.normal(jax.random.PRNGKey(seed), (B, H, W))
+
+    def loss(m):
+        m2, _ = ops.sparse_write_update(m, last, widx, ww, a, lra,
+                                        jnp.int32(3), delta=DELTA,
+                                        backend=backend, scratch_row=N)
+        return (m2[:, :N] ** 2).sum()
+
+    g = np.asarray(jax.grad(loss)(mem))
+    assert np.all(g[:, N] == 0.0)
