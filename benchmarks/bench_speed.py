@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from benchmarks.common import row, timed
 from repro.core import dense as dense_lib
 from repro.core import sam as sam_lib
-from repro.core.bptt import sam_unroll_sparse_bptt
+from repro.core.unroll import sam_unroll_sparse_bptt
 from repro.core.types import ControllerConfig, MemoryConfig
 
 CTL = ControllerConfig(input_size=10, hidden_size=100, output_size=8)

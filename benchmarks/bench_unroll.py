@@ -1,0 +1,133 @@
+"""Unroll-engine residual memory + train-step time: naive scan vs
+whole-sequence sparse rollback vs the chunked engine, on SAM and SDNC, at
+T ∈ {1k, 10k, 100k} (paper §3.4 / the 100k-step horizon claim).
+
+Two kinds of rows go to ``experiments/bench/BENCH_unroll.json``:
+
+  * ``residual_bytes`` — the engine's analytic accounting
+    (`unroll.residual_accounting`; see docs/unroll.md): what the backward
+    pass holds live beyond the unroll's own inputs/outputs. Deterministic
+    and device-independent, so the 100k-row exists even on CPU where a
+    naive 100k unroll would not run. The acceptance claim — chunked
+    strictly below whole-sequence sparse at T=10k — is asserted here.
+  * ``us_per_grad`` — measured wall-clock for one jitted
+    value_and_grad(unroll) call, on the sizes that actually run
+    (``--quick``: T ≤ 1024; full: T ≤ 10k for every mode, 100k for the
+    chunked engine only — the mode built for that regime).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_unroll [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import dnc as dnc_lib
+from repro.core import sam as sam_lib
+from repro.core import unroll as unroll_lib
+from repro.core.cell import SAMCell, SDNCCell
+from repro.core.types import ControllerConfig, MemoryConfig
+
+OUT_DIR = "experiments/bench"
+OUT_PATH = os.path.join(OUT_DIR, "BENCH_unroll.json")
+
+# Smoke-scale shapes: the scaling story is in T, not N.
+B, D = 1, 8
+MEM = MemoryConfig(num_slots=16, word_size=8, num_heads=1, k=2)
+CTL = ControllerConfig(input_size=D, hidden_size=16, output_size=D)
+MODES = ("naive", "sparse", "chunked")
+
+
+def make_cell(model: str):
+    if model == "sam":
+        return SAMCell(sam_lib.SAMConfig(MEM, CTL))
+    return SDNCCell(dnc_lib.DNCConfig(MEM, CTL, k_l=4, sparse=True))
+
+
+def bench_grad(cell, params, state, T: int, mode: str):
+    xs = jax.random.normal(jax.random.PRNGKey(T), (T, B, D))
+
+    @jax.jit
+    def g(p):
+        return jax.grad(lambda q: (unroll_lib.unroll(
+            cell, q, state, xs, mode=mode, chunk="auto")[1] ** 2).sum())(p)
+
+    return timed(lambda: g(params)["iface"])
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="tiny timed sizes only (CI smoke)")
+    p.add_argument("--horizons", type=int, nargs="*", default=None)
+    args = p.parse_args(argv)
+
+    horizons = args.horizons or [1_000, 10_000, 100_000]
+    if args.quick:
+        timed_sizes = {m: [256] for m in MODES}
+    else:
+        timed_sizes = {"naive": [1_000, 10_000],
+                       "sparse": [1_000, 10_000],
+                       "chunked": [1_000, 10_000, 100_000]}
+
+    results = []
+    for model in ("sam", "sdnc"):
+        cell = make_cell(model)
+        params = cell.init_params(jax.random.PRNGKey(0))
+        state = cell.init_state(B)
+
+        for T in sorted(set(horizons) | {t for v in timed_sizes.values()
+                                         for t in v}):
+            xs_shape = jax.ShapeDtypeStruct((T, B, D), jnp.float32)
+            for mode in MODES:
+                acc = unroll_lib.residual_accounting(cell, params, state,
+                                                     xs_shape, mode=mode,
+                                                     chunk="auto")
+                rec = {"model": model, "mode": mode, "T": T,
+                       "chunk": acc["chunk"],
+                       "state_bytes": acc["state_bytes"],
+                       "res_step_bytes": acc["res_step_bytes"],
+                       "residual_bytes": acc["residual_bytes"]}
+                if T in timed_sizes.get(mode, []):
+                    us = bench_grad(cell, params, state, T, mode)
+                    rec["us_per_grad"] = us
+                    row(f"unroll/{model}/{mode}/T={T}", us,
+                        f"{acc['residual_bytes']}B")
+                else:
+                    row(f"unroll/{model}/{mode}/T={T}", 0.0,
+                        f"{acc['residual_bytes']}B (analytic only)")
+                results.append(rec)
+
+        # Acceptance: chunked strictly below whole-sequence sparse at T=10k.
+        pick = {(r["mode"], r["T"]): r["residual_bytes"]
+                for r in results if r["model"] == model}
+        for T in horizons:
+            if ("sparse", T) in pick:
+                ratio = pick[("sparse", T)] / pick[("chunked", T)]
+                row(f"unroll/{model}/residual_ratio/T={T}",
+                    pick[("chunked", T)], f"{ratio:.1f}x below sparse")
+                assert pick[("chunked", T)] < pick[("sparse", T)], \
+                    f"chunked residuals not below sparse at T={T}"
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    record = {
+        "bench": "unroll",
+        "device": jax.devices()[0].platform,
+        "jax": jax.__version__,
+        "shapes": {"B": B, "D": D, "N": MEM.num_slots, "W": MEM.word_size,
+                   "H": MEM.num_heads, "K": MEM.k},
+        "results": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {OUT_PATH} ({len(results)} rows)")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core.training import ModelSpec, train_task
 from repro.core.types import ControllerConfig, MemoryConfig
 from repro.core import sam as sam_lib, dense as dense_lib
-from repro.core.bptt import sam_unroll_sparse_bptt
+from repro.core.unroll import sam_unroll_sparse_bptt
 
 CTL = ControllerConfig(input_size=10, hidden_size=64, output_size=8)
 

@@ -119,11 +119,19 @@ def _migrate_scratch_row(arr: np.ndarray, want_shape) -> np.ndarray:
 
 
 def restore_checkpoint(directory: str, template, step: int = None,
-                       shardings=None):
+                       shardings=None, fill_missing: bool = False):
     """Restore into the structure of `template`. `shardings` (optional pytree
     of NamedShardings) re-shards each leaf — this is how elastic re-scaling
     restores onto a different mesh. Legacy pre-scratch-row checkpoints are
-    migrated leaf-by-leaf (`_migrate_scratch_row`)."""
+    migrated leaf-by-leaf (`_migrate_scratch_row`).
+
+    ``fill_missing=True`` matches checkpoint leaves to template leaves *by
+    manifest path* and keeps the template's value for any path absent from
+    the checkpoint — how legacy checkpoints (saved before the train-loop
+    state rode along, e.g. params/opt-only trees) load unchanged into the
+    extended {params, opt, carry, loop} template. Every leaf the checkpoint
+    *does* carry must still match a template path — an unknown leaf raises,
+    so a renamed field cannot be silently dropped."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -131,14 +139,28 @@ def restore_checkpoint(directory: str, template, step: int = None,
     path = os.path.join(directory, f"step_{step}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    _, t_leaves, treedef = _flatten_with_paths(template)
-    assert len(t_leaves) == len(manifest["leaves"]), \
-        "checkpoint/template structure mismatch"
+    t_paths, t_leaves, treedef = _flatten_with_paths(template)
+    if fill_missing:
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        unknown = set(by_path) - set(t_paths)
+        if unknown:
+            raise ValueError(
+                f"checkpoint leaves {sorted(unknown)} have no counterpart "
+                f"in the template — not a pure leaf-subset checkpoint")
+        entries = [by_path.get(p) for p in t_paths]
+    else:
+        assert len(t_leaves) == len(manifest["leaves"]), \
+            "checkpoint/template structure mismatch"
+        entries = manifest["leaves"]
     leaves = []
     s_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
                 if shardings is not None else [None] * len(t_leaves))
     migratable = manifest.get("format", 1) < MANIFEST_FORMAT
-    for entry, tmpl, sh in zip(manifest["leaves"], t_leaves, s_leaves):
+    for entry, tmpl, sh in zip(entries, t_leaves, s_leaves):
+        if entry is None:            # fill_missing: keep the template value
+            leaves.append(jax.device_put(tmpl, sh) if sh is not None
+                          else jax.numpy.asarray(tmpl))
+            continue
         arr = np.load(os.path.join(path, entry["file"]))
         if hasattr(tmpl, "shape") and arr.shape != tuple(tmpl.shape):
             # Path components render as ".memory" (GetAttrKey) or "memory"

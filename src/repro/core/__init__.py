@@ -1,18 +1,24 @@
 """Core memory-augmented cells: SAM (the paper), DAM/NTM/LSTM baselines,
-DNC/SDNC (Suppl. D), plus the sparse-rollback BPTT unroll."""
+DNC/SDNC (Suppl. D), the `MemoryCell` protocol, and the chunked
+sparse-rollback BPTT engine (core/unroll.py)."""
 from repro.core.types import (ANNState, ControllerConfig, DenseState,
                               MemoryConfig, SAMState, SparseRead, StepDeltas,
                               tree_bytes)
 from repro.core.sam import SAMConfig, init_params as sam_init_params, \
     init_state as sam_init_state, sam_step, sam_unroll
-from repro.core.bptt import sam_unroll_sparse_bptt
 from repro.core.dense import (DenseConfig, dense_step, dense_unroll,
                               init_params as dense_init_params,
                               init_state as dense_init_state,
                               lstm_baseline_init, lstm_baseline_unroll)
-from repro.core.dnc import (DNCConfig, DNCState, dnc_step, dnc_unroll,
-                            init_params as dnc_init_params,
+from repro.core.dnc import (DNCConfig, DNCState, SDNCDeltas, dnc_step,
+                            dnc_unroll, init_params as dnc_init_params,
                             init_state as dnc_init_state)
+from repro.core.cell import MemoryCell, SAMCell, SDNCCell
+# Re-exported as `cell_unroll` so the package attribute `repro.core.unroll`
+# keeps naming the engine module, not the function.
+from repro.core.unroll import (residual_accounting, sam_unroll_sparse_bptt,
+                               suggest_chunk, unroll as cell_unroll,
+                               unroll_naive)
 
 __all__ = [
     "ANNState", "ControllerConfig", "DenseState", "MemoryConfig", "SAMState",
@@ -20,6 +26,8 @@ __all__ = [
     "sam_init_state", "sam_step", "sam_unroll", "sam_unroll_sparse_bptt",
     "DenseConfig", "dense_step", "dense_unroll", "dense_init_params",
     "dense_init_state", "lstm_baseline_init", "lstm_baseline_unroll",
-    "DNCConfig", "DNCState", "dnc_step", "dnc_unroll", "dnc_init_params",
-    "dnc_init_state",
+    "DNCConfig", "DNCState", "SDNCDeltas", "dnc_step", "dnc_unroll",
+    "dnc_init_params", "dnc_init_state",
+    "MemoryCell", "SAMCell", "SDNCCell",
+    "cell_unroll", "unroll_naive", "suggest_chunk", "residual_accounting",
 ]

@@ -53,40 +53,63 @@ def ann_init(batch: int, cfg: MemoryConfig) -> ANNState:
     )
 
 
-def ann_build(planes: jax.Array, memory: jax.Array, cfg: MemoryConfig) -> ANNState:
+def ann_build(planes: jax.Array, memory: jax.Array, cfg: MemoryConfig,
+              *, chunk: int = None) -> ANNState:
     """Bulk-build the index from a full memory (the paper rebuilds every N
     insertions; we expose the same rebuild primitive). Only the logical rows
     of a scratch-row buffer are indexed — the scratch row is never readable,
-    so it must never enter the candidate set."""
-    B, N, _ = memory.shape
-    if has_scratch_row(cfg.num_slots, N):
-        N = cfg.num_slots
+    so it must never enter the candidate set.
+
+    Vectorized: slots are inserted in batched `ann_insert` calls of J =
+    `chunk` rows, so a rebuild runs N/J hash+scatter rounds instead of
+    serializing N of them. J is clamped to `lsh_bucket_size` — the largest
+    value for which a batched call is *exactly* equivalent to J sequential
+    single-slot inserts (see `ann_insert`; beyond it, a chunk could land
+    more rows in one bucket than the ring holds, making the duplicate-
+    position scatter winner unspecified)."""
+    B, rows, _ = memory.shape
+    N = cfg.num_slots if has_scratch_row(cfg.num_slots, rows) else rows
+    J = max(1, min(chunk or cfg.lsh_bucket_size, N, cfg.lsh_bucket_size))
     state = ann_init(B, cfg)
 
-    def insert_one(state: ANNState, i: jax.Array) -> tuple[ANNState, None]:
-        rows = memory[:, i]                                   # (B, W)
-        state = ann_insert(planes, state, jnp.full((B, 1), i, jnp.int32),
-                           rows[:, None], cfg)
-        return state, None
+    def insert_chunk(state: ANNState, idx: jax.Array):        # idx: (J,)
+        rows_j = jnp.take(memory, idx, axis=1)                # (B, J, W)
+        bidx = jnp.broadcast_to(idx[None], (B, idx.shape[0]))
+        return ann_insert(planes, state, bidx, rows_j, cfg), None
 
-    state, _ = jax.lax.scan(insert_one, state, jnp.arange(N, dtype=jnp.int32))
+    n_full = N // J
+    main = jnp.arange(n_full * J, dtype=jnp.int32).reshape(n_full, J)
+    state, _ = jax.lax.scan(insert_chunk, state, main)
+    if N % J:
+        state, _ = insert_chunk(state,
+                                jnp.arange(n_full * J, N, dtype=jnp.int32))
     return state
 
 
 def ann_insert(planes: jax.Array, state: ANNState, idx: jax.Array,
                rows: jax.Array, cfg: MemoryConfig) -> ANNState:
     """Insert slots `idx` (B, J) with contents `rows` (B, J, W) into every
-    table (ring overwrite within the bucket)."""
+    table (ring overwrite within the bucket).
+
+    Entries of one call that hash to the same bucket are sequenced by rank:
+    entry j lands at ``cursor + #{j' < j in the same bucket}`` and the
+    cursor advances by the full per-bucket count — so one batched call is
+    exactly equivalent to J sequential single-slot inserts whenever no
+    bucket receives more than `lsh_bucket_size` entries in the call (the
+    vectorized `ann_build` relies on this)."""
     B, J = idx.shape
-    T = cfg.lsh_tables
+    T, S = cfg.lsh_tables, cfg.lsh_bucket_size
     bucket_ids = lsh_hash(planes, rows, backend=cfg.backend)  # (B, J, T)
     b = jnp.arange(B)[:, None, None]                          # (B,1,1)
     t = jnp.arange(T)[None, None, :]                          # (1,1,T)
+    same = bucket_ids[:, :, None, :] == bucket_ids[:, None, :, :]  # (B,J,J,T)
+    before = jnp.arange(J)[:, None] > jnp.arange(J)[None, :]       # j' < j
+    rank = jnp.sum(same & before[None, :, :, None], axis=2)   # (B, J, T)
+    count = jnp.sum(same, axis=2)                             # (B, J, T)
     cur = state.cursor[b, t, bucket_ids]                      # (B, J, T)
-    buckets = state.buckets.at[b, t, bucket_ids, cur].set(
+    buckets = state.buckets.at[b, t, bucket_ids, (cur + rank) % S].set(
         jnp.broadcast_to(idx[:, :, None], (B, J, T)))
-    cursor = state.cursor.at[b, t, bucket_ids].set(
-        (cur + 1) % cfg.lsh_bucket_size)
+    cursor = state.cursor.at[b, t, bucket_ids].set((cur + count) % S)
     return ANNState(buckets=buckets, cursor=cursor)
 
 

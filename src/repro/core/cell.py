@@ -1,0 +1,175 @@
+"""The `MemoryCell` protocol: the contract between a sparse memory cell and
+the chunked sparse-rollback unroll engine (`core/unroll.py`).
+
+A cell packages one recurrent memory model behind five methods:
+
+  * ``init_params(key)`` / ``init_state(batch)`` — construction;
+  * ``step(params, state, x, collect_deltas=)`` — one forward step. With
+    ``collect_deltas=True`` it additionally returns a *deltas* pytree: the
+    sparse modifications of the step (touched row indices + their
+    pre-update contents) plus the index selections the step committed to —
+    everything the backward pass needs, O(K·W) per step, independent of N;
+  * ``residual_state(state)`` — the small per-step-recordable projection of
+    the state (previous read, controller state, …) that ``rollback``
+    restores directly instead of inverting;
+  * ``rollback(state, prev_small, deltas)`` — invert one step: restore the
+    dense buffers by scatter-setting the recorded rows, splice the recorded
+    small leaves back in. Gradient-free auxiliaries (usage tables, the ANN
+    index) ride along *stale* — the backward pass never consumes them;
+  * ``replay_step(params, state, x, deltas)`` — differentiable
+    recomputation of the step with the recorded index selections as fixed
+    integer inputs. Must match ``step`` numerically on every float state
+    leaf; because index *selection* is under ``stop_gradient`` in the
+    forward pass, the replay needs neither the usage table nor the ANN
+    index, and never runs an O(N·W) sweep.
+
+The engine (`core/unroll.py`) is cell-agnostic: it discovers the
+differentiable state leaves by dtype (floating leaves carry cotangents,
+integer leaves get ``float0``), so a new memory variant only has to
+implement this protocol to train through the same chunked engine.
+
+Cells are frozen dataclasses wrapping their (static, hashable) config, so
+they can key jit caches and close over `jax.custom_vjp` definitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addressing as addr
+from repro.core import dnc as dnc_lib
+from repro.core import sam as sam_lib
+from repro.core.controller import linear, lstm_step
+from repro.core.sam import SAMConfig, _interface, apply_write
+from repro.core.types import SAMState, SparseRead, StepDeltas
+
+
+@runtime_checkable
+class MemoryCell(Protocol):
+    """Structural type for the unroll engine's cell contract."""
+
+    def init_params(self, key): ...
+
+    def init_state(self, batch: int): ...
+
+    def step(self, params, state, x, *, collect_deltas: bool = False): ...
+
+    def residual_state(self, state): ...
+
+    def rollback(self, state, prev_small, deltas): ...
+
+    def replay_step(self, params, state, x, deltas): ...
+
+
+# --------------------------------------------------------------------------
+# SAM
+# --------------------------------------------------------------------------
+
+def sam_replay_step(params, cfg: SAMConfig, s: SAMState, x: jax.Array,
+                    deltas: StepDeltas):
+    """Differentiable recomputation of one SAM step given fixed indices.
+
+    Must match `sam_step` numerically (tested in tests/test_core_sam.py /
+    tests/test_unroll.py). The usage table and ANN index pass through
+    stale — neither carries gradient nor is consumed here."""
+    B = x.shape[0]
+    H, K = cfg.memory.num_heads, cfg.memory.k
+    ctrl_in = jnp.concatenate([x, s.read.words.reshape(B, -1)], axis=-1)
+    ctrl, h = lstm_step(params["lstm"], s.ctrl, ctrl_in)
+    q, a, beta, alpha, gamma = _interface(params, cfg, h)
+
+    # Write weights (eq. 5) from the recorded touched rows.
+    w_read = alpha[..., None] * gamma[..., None] * s.read.weights   # (B,H,K)
+    w_lra = (alpha * (1.0 - gamma))[..., None]                      # (B,H,1)
+    ww = jnp.concatenate([w_read, w_lra], axis=-1).reshape(B, -1)
+    lra_idx = deltas.write_idx.reshape(B, H, K + 1)[..., -1]
+    memory = apply_write(s.memory, deltas.write_idx, ww, a, lra_idx, cfg,
+                         backend=cfg.memory.backend)
+
+    # Read at the recorded indices.
+    words = addr.gather_rows(memory, deltas.read_idx)               # (B,H,K,W)
+    sel = addr._rerank(q, words) * beta[..., None]
+    rw = jax.nn.softmax(sel, axis=-1)
+    r = jnp.einsum("bhk,bhkw->bhw", rw, words)
+    y = linear(params["out"], jnp.concatenate([h, r.reshape(B, -1)], axis=-1))
+    new_state = SAMState(
+        memory=memory, last_access=s.last_access,
+        read=SparseRead(indices=deltas.read_idx, weights=rw, words=r),
+        ctrl=ctrl, step=s.step + 1, ann=s.ann)
+    return new_state, y
+
+
+@dataclasses.dataclass(frozen=True)
+class SAMCell:
+    """SAM (paper §3) behind the MemoryCell protocol."""
+
+    cfg: SAMConfig
+
+    def init_params(self, key):
+        return sam_lib.init_params(key, self.cfg)
+
+    def init_state(self, batch: int):
+        return sam_lib.init_state(batch, self.cfg)
+
+    def step(self, params, state, x, *, collect_deltas: bool = False):
+        return sam_lib.sam_step(params, self.cfg, state, x,
+                                collect_deltas=collect_deltas)
+
+    def residual_state(self, state: SAMState):
+        return (state.read, state.ctrl)
+
+    def rollback(self, state: SAMState, prev_small, deltas: StepDeltas):
+        read, ctrl = prev_small
+        # Roll the memory back: restore the touched rows (§3.4). write_idx
+        # only ever names logical rows, so the scratch row stays untouched.
+        memory = addr.scatter_set_rows(state.memory, deltas.write_idx,
+                                       deltas.old_rows,
+                                       backend=self.cfg.memory.backend)
+        return SAMState(memory=memory, last_access=state.last_access,
+                        read=read, ctrl=ctrl, step=state.step - 1,
+                        ann=state.ann)
+
+    def replay_step(self, params, state, x, deltas: StepDeltas):
+        return sam_replay_step(params, self.cfg, state, x, deltas)
+
+
+# --------------------------------------------------------------------------
+# Sparse DNC
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SDNCCell:
+    """Sparse DNC (paper Suppl. D) behind the MemoryCell protocol. The
+    temporal link matrices N_t/P_t and the precedence vector get their own
+    sparse deltas (`SDNCDeltas`), extending the §3.4 rollback scheme to the
+    DNC's link state."""
+
+    cfg: dnc_lib.DNCConfig
+
+    def __post_init__(self):
+        if not self.cfg.sparse:
+            raise ValueError("SDNCCell requires DNCConfig.sparse=True; the "
+                             "dense DNC checkpoints O(N) state per step and "
+                             "has no sparse rollback contract")
+
+    def init_params(self, key):
+        return dnc_lib.init_params(key, self.cfg)
+
+    def init_state(self, batch: int):
+        return dnc_lib.init_state(batch, self.cfg)
+
+    def step(self, params, state, x, *, collect_deltas: bool = False):
+        return dnc_lib.dnc_step(params, self.cfg, state, x,
+                                collect_deltas=collect_deltas)
+
+    def residual_state(self, state: dnc_lib.DNCState):
+        return (state.read, state.write_w, state.prec_sp, state.ctrl)
+
+    def rollback(self, state, prev_small, deltas):
+        return dnc_lib.sdnc_rollback(self.cfg, state, prev_small, deltas)
+
+    def replay_step(self, params, state, x, deltas):
+        return dnc_lib.sdnc_replay_step(params, self.cfg, state, x, deltas)

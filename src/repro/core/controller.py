@@ -17,8 +17,11 @@ def lstm_init(key, input_size: int, hidden_size: int):
 
 
 def lstm_zero_state(batch: int, hidden_size: int, dtype=jnp.float32) -> LSTMState:
-    z = jnp.zeros((batch, hidden_size), dtype)
-    return LSTMState(h=z, c=z)
+    # h and c must be distinct buffers: a zero state that crosses a jit
+    # boundary as a donated argument (the streaming trainer's carry) would
+    # otherwise donate the same buffer twice.
+    return LSTMState(h=jnp.zeros((batch, hidden_size), dtype),
+                     c=jnp.zeros((batch, hidden_size), dtype))
 
 
 def lstm_step(params, state: LSTMState, x: jax.Array) -> tuple[LSTMState, jax.Array]:

@@ -45,6 +45,23 @@ class SparseVec(NamedTuple):
     val: jax.Array    # (B, K_L)
 
 
+class SDNCDeltas(NamedTuple):
+    """Sparse modifications recorded by one SDNC step — the §3.4 rollback
+    contract extended to the sparse DNC's temporal link state (Suppl. D).
+    Everything the backward pass needs to restore the previous step's dense
+    buffers (memory, N_t, P_t) and to replay the step with fixed index
+    selections. All O(J·W + J·K_L + K_L²) per step — independent of N."""
+
+    write_idx: jax.Array   # (B, J) int32 rows touched by the write
+    old_rows: jax.Array    # (B, J, W) their pre-write memory contents
+    lra: jax.Array         # (B, 1) int32 LRA row erased by the write
+    cont_idx: jax.Array    # (B, R, K) int32 content-read selection
+    n_cols: jax.Array      # (B, J, K_L) pre-update N_t rows at write_idx
+    n_vals: jax.Array      # (B, J, K_L)
+    p_cols: jax.Array      # (B, K_L, K_L) pre-update P_t rows at the
+    p_vals: jax.Array      # (B, K_L, K_L) previous precedence support
+
+
 class DNCState(NamedTuple):
     memory: jax.Array
     usage: jax.Array            # DNC freeness u_t / SDNC last-access (int32)
@@ -232,7 +249,8 @@ def _dnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
 # Sparse DNC
 # --------------------------------------------------------------------------
 
-def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
+def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array,
+               *, collect_deltas: bool = False):
     mem = cfg.memory
     R, W, K, KL = mem.num_heads, mem.word_size, mem.k, cfg.k_l
     B = x.shape[0]
@@ -258,6 +276,17 @@ def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
         write_g[:, None] * alloc_g[:, None] * 0.0 + write_g[:, None]
         * (1 - alloc_g[:, None]) * prev_w,
         write_g[:, None] * alloc_g[:, None] * jnp.ones((B, 1))], axis=-1)
+
+    old = None
+    if collect_deltas:
+        # Pre-update contents of every dense row this step touches: memory
+        # rows at widx, N_t rows at widx, P_t rows at supp(p_{t-1}).
+        p_rows = jnp.maximum(s.prec_sp.idx, 0)
+        old = (addr.gather_rows(s.memory, widx),
+               jnp.take_along_axis(s.n_mat.cols, widx[..., None], axis=1),
+               jnp.take_along_axis(s.n_mat.vals, widx[..., None], axis=1),
+               jnp.take_along_axis(s.p_mat.cols, p_rows[..., None], axis=1),
+               jnp.take_along_axis(s.p_mat.vals, p_rows[..., None], axis=1))
 
     # Erase LRA then scatter-add write vector.
     memory = addr.scatter_set_rows(s.memory, lra, jnp.zeros((B, 1, W)),
@@ -292,10 +321,15 @@ def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
     usage = addr.update_last_access(usage, top_idx.reshape(B, -1),
                                     top_w.reshape(B, -1), step, mem.delta)
     y = linear(params["out"], jnp.concatenate([h, read_words.reshape(B, -1)], -1))
-    return DNCState(memory=memory, usage=usage, read_w=s.read_w, read=read,
-                    read_words=read_words, write_w=ww, write_idx=widx,
-                    prec=s.prec, prec_sp=prec_sp, link=s.link,
-                    n_mat=n_mat, p_mat=p_mat, ctrl=ctrl, step=step), y
+    new_state = DNCState(memory=memory, usage=usage, read_w=s.read_w, read=read,
+                         read_words=read_words, write_w=ww, write_idx=widx,
+                         prec=s.prec, prec_sp=prec_sp, link=s.link,
+                         n_mat=n_mat, p_mat=p_mat, ctrl=ctrl, step=step)
+    if collect_deltas:
+        return new_state, y, SDNCDeltas(
+            write_idx=widx, old_rows=old[0], lra=lra, cont_idx=cont.indices,
+            n_cols=old[1], n_vals=old[2], p_cols=old[3], p_vals=old[4])
+    return new_state, y
 
 
 def _update_linkage(s: DNCState, widx, ww, k_l: int):
@@ -358,9 +392,100 @@ def _link_read(mat: SparseMat, read: SparseRead, k: int):
             jnp.where(ok, top_v, 0.0))
 
 
-def dnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array):
+def sdnc_rollback(cfg: DNCConfig, state: DNCState, prev_small,
+                  deltas: SDNCDeltas) -> DNCState:
+    """Restore the previous step's state from the recorded sparse deltas
+    (§3.4 extended to the SDNC's link state). Dense buffers (memory, N_t,
+    P_t) are restored exactly by scatter-set of the recorded rows —
+    duplicate indices carry identical pre-update contents, so last-wins
+    ordering is safe. The usage table is *not* restored (it carries no
+    gradient and the replay never consumes it); it rides along stale."""
+    read, write_w, prec_sp, ctrl = prev_small
+    B = deltas.write_idx.shape[0]
+    b = jnp.arange(B)[:, None]
+    memory = addr.scatter_set_rows(state.memory, deltas.write_idx,
+                                   deltas.old_rows, backend=cfg.memory.backend)
+    n_mat = SparseMat(
+        cols=state.n_mat.cols.at[b, deltas.write_idx].set(deltas.n_cols),
+        vals=state.n_mat.vals.at[b, deltas.write_idx].set(deltas.n_vals))
+    p_rows = jnp.maximum(prec_sp.idx, 0)
+    p_mat = SparseMat(
+        cols=state.p_mat.cols.at[b, p_rows].set(deltas.p_cols),
+        vals=state.p_mat.vals.at[b, p_rows].set(deltas.p_vals))
+    return state._replace(memory=memory, read=read, read_words=read.words,
+                          write_w=write_w, prec_sp=prec_sp, n_mat=n_mat,
+                          p_mat=p_mat, ctrl=ctrl, step=state.step - 1)
+
+
+def sdnc_replay_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array,
+                     deltas: SDNCDeltas):
+    """Differentiable recomputation of one SDNC step with the recorded
+    index selections (LRA row, content-read rows) as fixed inputs — the
+    backward pass never touches the usage table and never runs an O(N·W)
+    similarity sweep. Must match `_sdnc_step` numerically on every float
+    state leaf (tested in tests/test_unroll.py)."""
+    mem = cfg.memory
+    R, W, K, KL = mem.num_heads, mem.word_size, mem.k, cfg.k_l
+    B = x.shape[0]
+    be = mem.backend
+    N = mem.num_slots
+    scratch = N if has_scratch_row(N, s.memory.shape[1]) else None
+
+    ctrl, h = lstm_step(params["lstm"], s.ctrl,
+                        jnp.concatenate([x, s.read_words.reshape(B, -1)], -1))
+    rk, rb, modes, wk, wb, er, wv, free, alloc_g, write_g = _parse_iface(
+        cfg, linear(params["iface"], h))
+
+    # ---- write at the recorded rows (same expression as the forward) ----
+    prev_w = s.read.weights.reshape(B, -1)
+    prev_w = prev_w / (prev_w.sum(-1, keepdims=True) + 1e-8)
+    widx = deltas.write_idx
+    ww = jnp.concatenate([
+        write_g[:, None] * alloc_g[:, None] * 0.0 + write_g[:, None]
+        * (1 - alloc_g[:, None]) * prev_w,
+        write_g[:, None] * alloc_g[:, None] * jnp.ones((B, 1))], axis=-1)
+    memory = addr.scatter_set_rows(s.memory, deltas.lra,
+                                   jnp.zeros((B, 1, W)), backend=be)
+    memory = addr.scatter_add_rows(memory, widx,
+                                   ww[..., None] * wv[:, None, :], backend=be,
+                                   scratch_row=scratch)
+
+    ww_sg = jax.lax.stop_gradient(ww)
+    n_mat, p_mat, prec_sp = _update_linkage(s, widx, ww_sg, KL)
+
+    # ---- reads: content read at the recorded rows + link reads ----
+    words_c = addr.gather_rows(memory, deltas.cont_idx)
+    sel = addr._rerank(rk, words_c) * rb[..., None]
+    cont_w = jax.nn.softmax(sel, axis=-1)
+    fwd_idx, fwd_w = _link_read(s.n_mat, s.read, K)
+    bwd_idx, bwd_w = _link_read(s.p_mat, s.read, K)
+
+    idx = jnp.concatenate([bwd_idx, deltas.cont_idx, fwd_idx], axis=-1)
+    wts = jnp.concatenate([modes[..., 0:1] * bwd_w,
+                           modes[..., 1:2] * cont_w,
+                           modes[..., 2:3] * fwd_w], axis=-1)
+    top_w, pos = jax.lax.top_k(wts, K)
+    top_idx = jnp.take_along_axis(idx, pos, axis=-1)
+    top_w = top_w / (top_w.sum(-1, keepdims=True) + 1e-8)
+    words = addr.gather_rows(memory, top_idx)
+    read_words = jnp.einsum("brk,brkw->brw", top_w, words)
+    read = SparseRead(indices=top_idx, weights=top_w, words=read_words)
+
+    y = linear(params["out"], jnp.concatenate([h, read_words.reshape(B, -1)], -1))
+    return DNCState(memory=memory, usage=s.usage, read_w=s.read_w, read=read,
+                    read_words=read_words, write_w=ww, write_idx=widx,
+                    prec=s.prec, prec_sp=prec_sp, link=s.link,
+                    n_mat=n_mat, p_mat=p_mat, ctrl=ctrl, step=s.step + 1), y
+
+
+def dnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array,
+             *, collect_deltas: bool = False):
     if cfg.sparse:
-        return _sdnc_step(params, cfg, s, x)
+        return _sdnc_step(params, cfg, s, x, collect_deltas=collect_deltas)
+    if collect_deltas:
+        raise ValueError("collect_deltas requires the sparse DNC "
+                         "(DNCConfig.sparse=True); the dense DNC has no "
+                         "sparse rollback contract")
     return _dnc_step(params, cfg, s, x)
 
 

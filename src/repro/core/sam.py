@@ -6,8 +6,9 @@ A recurrent cell `(params, state, x_t) -> (state, y_t, deltas)` with:
   * usage tracking with the δ-threshold "steps since last access" statistic,
   * fixed-shape LSH index carried as non-differentiable state.
 
-`deltas` records the sparse memory modifications so the unroll in
-`core/bptt.py` can roll the memory back during the backward pass (§3.4).
+`deltas` records the sparse memory modifications so the unroll engine in
+`core/unroll.py` (through the `SAMCell` adapter in `core/cell.py`) can roll
+the memory back during the backward pass (§3.4).
 """
 from __future__ import annotations
 
@@ -153,10 +154,9 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
                                            valid_n=valid_n)
     widx_flat, ww_flat, widx, ww = write_plan(cfg, state.read, lra_idx,
                                               alpha, gamma)
-    deltas = None
+    old_rows = None
     if collect_deltas:
-        deltas = StepDeltas(write_idx=widx_flat,
-                            old_rows=addr.gather_rows(state.memory, widx_flat))
+        old_rows = addr.gather_rows(state.memory, widx_flat)
     # Fused: LRA erase + w^W a^T scatter-add + write-side usage stamp.
     memory, la = addr.sparse_write_update(state.memory, state.last_access,
                                           widx_flat, ww_flat, a, lra_idx,
@@ -189,7 +189,9 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
     new_state = SAMState(memory=memory, last_access=la, read=read, ctrl=ctrl,
                          step=step, ann=ann_state)
     if collect_deltas:
-        return new_state, y, deltas
+        return new_state, y, StepDeltas(write_idx=widx_flat,
+                                        old_rows=old_rows,
+                                        read_idx=read.indices)
     return new_state, y
 
 

@@ -6,7 +6,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Callable
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +15,8 @@ import numpy as np
 from repro.core import dense as dense_lib
 from repro.core import dnc as dnc_lib
 from repro.core import sam as sam_lib
-from repro.core.bptt import sam_unroll_sparse_bptt
+from repro.core import unroll as unroll_lib
+from repro.core.cell import SAMCell, SDNCCell
 from repro.core.types import ControllerConfig, MemoryConfig
 from repro.data.curriculum import Curriculum
 from repro.data.tasks import TASK_REGISTRY
@@ -27,30 +28,46 @@ class ModelSpec:
     kind: str                     # sam | sam_ann | dam | ntm | dnc | sdnc | lstm
     memory: MemoryConfig
     controller: ControllerConfig
-    sparse_bptt: bool = True      # SAM: use the O(T·K·W) unroll
+    # Sparse cells (sam/sam_ann/sdnc): train through the sparse-rollback
+    # engine (False -> the naive O(T·state) scan).
+    sparse_bptt: bool = True
+    # Segment length C for the chunked engine: None -> whole-sequence
+    # sparse, an int or "auto" -> chunked with O(T/C·state + C·K·W)
+    # residuals (core/unroll.py).
+    bptt_chunk: Optional[Union[int, str]] = None
 
 
 def build_model(spec: ModelSpec):
-    """Returns (init_params(key), init_state(batch), unroll(params, state, xs))."""
+    """Returns (init_params(key), init_state(batch), unroll(params, state, xs)).
+
+    Every sparse memory variant (sam, sam_ann, sdnc) trains through the one
+    chunked sparse-rollback engine behind its MemoryCell adapter; the dense
+    baselines keep their plain scans."""
     kind = spec.kind
-    if kind in ("sam", "sam_ann"):
-        mem = dataclasses.replace(spec.memory,
-                                  ann="lsh" if kind == "sam_ann" else "exact")
-        cfg = sam_lib.SAMConfig(mem, spec.controller)
-        unroll = (sam_unroll_sparse_bptt if spec.sparse_bptt
-                  else sam_lib.sam_unroll)
-        return (lambda key: sam_lib.init_params(key, cfg),
-                lambda b: sam_lib.init_state(b, cfg),
-                lambda p, s, xs: unroll(p, cfg, s, xs)
-                if spec.sparse_bptt else sam_lib.sam_unroll(p, cfg, s, xs))
+    if kind in ("sam", "sam_ann", "sdnc"):
+        if kind == "sdnc":
+            cell = SDNCCell(dnc_lib.DNCConfig(spec.memory, spec.controller,
+                                              sparse=True))
+        else:
+            mem = dataclasses.replace(
+                spec.memory, ann="lsh" if kind == "sam_ann" else "exact")
+            cell = SAMCell(sam_lib.SAMConfig(mem, spec.controller))
+        if not spec.sparse_bptt:
+            mode, chunk = "naive", None
+        elif spec.bptt_chunk is None:
+            mode, chunk = "sparse", None
+        else:
+            mode, chunk = "chunked", spec.bptt_chunk
+        return (cell.init_params, cell.init_state,
+                functools.partial(unroll_lib.unroll, cell,
+                                  mode=mode, chunk=chunk))
     if kind in ("dam", "ntm"):
         cfg = dense_lib.DenseConfig(spec.memory, spec.controller, model=kind)
         return (lambda key: dense_lib.init_params(key, cfg),
                 lambda b: dense_lib.init_state(b, cfg),
                 lambda p, s, xs: dense_lib.dense_unroll(p, cfg, s, xs))
-    if kind in ("dnc", "sdnc"):
-        cfg = dnc_lib.DNCConfig(spec.memory, spec.controller,
-                                sparse=(kind == "sdnc"))
+    if kind == "dnc":
+        cfg = dnc_lib.DNCConfig(spec.memory, spec.controller, sparse=False)
         return (lambda key: dnc_lib.init_params(key, cfg),
                 lambda b: dnc_lib.init_state(b, cfg),
                 lambda p, s, xs: dnc_lib.dnc_unroll(p, cfg, s, xs))
@@ -130,4 +147,168 @@ def train_task(spec: ModelSpec, task: str, *, steps: int = 200,
         if verbose and i % log_every == 0:
             print(f"  [{spec.kind}/{task}] step {i} loss={lf:.4f} "
                   f"err={ef:.3f} ({time.time()-t0:.0f}s)")
+    return params, history
+
+
+# --------------------------------------------------------------------------
+# Streaming trainer: truncated BPTT over 100k-step episodes with
+# mid-episode checkpoint/resume (segment-boundary training state).
+# --------------------------------------------------------------------------
+
+class TrainLoopState(NamedTuple):
+    """Segment-boundary training state checkpointed alongside params/opt:
+    where in the curriculum and where *inside the current episode* training
+    stands, so a job killed mid-episode resumes at the exact chunk cursor.
+    The running episode error (sum + count) rides along so the curriculum
+    update at the episode boundary sees every chunk's error even across a
+    crash/resume — a resumed run follows the same curriculum trajectory as
+    an uninterrupted one. All leaves are scalar arrays."""
+
+    episode: jax.Array   # () int32 — episodes fully consumed
+    cursor: jax.Array    # () int32 — chunks consumed within current episode
+    level: jax.Array     # () int32 — curriculum difficulty level
+    streak: jax.Array    # () int32 — curriculum patience streak
+    err_sum: jax.Array   # () float32 — Σ finite chunk errors this episode
+    err_cnt: jax.Array   # () int32 — number of finite chunk errors
+
+
+def init_loop_state(level: int) -> TrainLoopState:
+    return TrainLoopState(episode=jnp.zeros((), jnp.int32),
+                          cursor=jnp.zeros((), jnp.int32),
+                          level=jnp.asarray(level, jnp.int32),
+                          streak=jnp.zeros((), jnp.int32),
+                          err_sum=jnp.zeros((), jnp.float32),
+                          err_cnt=jnp.zeros((), jnp.int32))
+
+
+def make_streaming_train_step(spec: ModelSpec, lr: float = 1e-4):
+    """One optimizer update per C-step chunk of a long episode. The
+    recurrent state is carried (detached) across chunks — truncated BPTT —
+    so a T=100k episode trains as a stream of O(C)-cost updates; within a
+    chunk the engine selected by `spec` (naive/sparse/chunked) applies."""
+    init_p, init_s, unroll_fn = build_model(spec)
+
+    def chunk_step(params, opt_state, carry, xs, ts, ms):
+        def loss_fn(p):
+            state, ys = unroll_fn(p, carry, xs)
+            return bits_loss(ys, ts, ms), (state, bits_error(ys, ts, ms))
+
+        (l, (state, err)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads, _ = opt.clip_by_global_norm(grads, 10.0)
+        params, opt_state = opt.rmsprop_update(params, grads, opt_state, lr=lr)
+        return params, opt_state, jax.lax.stop_gradient(state), l, err
+
+    return init_p, init_s, chunk_step
+
+
+def _episode_level(seed: int, episode: int, level_cap: int) -> int:
+    """Deterministic per-episode level draw from U(1, cap) — resumable: the
+    same (seed, episode) always yields the same difficulty and data."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, episode]))
+    return int(rng.integers(1, level_cap + 1))
+
+
+def train_task_streaming(spec: ModelSpec, task: str, *, episodes: int = 4,
+                         chunk: int = 32, batch: int = 4, level: int = 4,
+                         max_level: int = 8, bits: int = 8, lr: float = 1e-4,
+                         seed: int = 0, curriculum: Curriculum = None,
+                         ckpt_dir: str = None, ckpt_every: int = 0,
+                         stop_after_chunks: int = None, verbose: bool = False):
+    """Stream long episodes through `make_streaming_train_step`, one
+    optimizer update per `chunk` time steps, checkpointing
+    {params, opt, carry, loop} at chunk boundaries.
+
+    Episode data is regenerated deterministically from (seed, episode), so
+    restoring a mid-episode checkpoint replays nothing: training resumes at
+    `loop.cursor` with the restored recurrent carry. Legacy checkpoints
+    (params/opt only, no loop state) load unchanged — the missing leaves
+    fall back to the template via `restore_checkpoint(fill_missing=True)`.
+    `stop_after_chunks` kills the loop mid-episode (crash injection for
+    tests)."""
+    from repro.checkpoint import ckpt as ckpt_lib
+
+    task_fn = TASK_REGISTRY[task]
+    init_p, init_s, chunk_step = make_streaming_train_step(spec, lr)
+    params = init_p(jax.random.PRNGKey(seed))
+    opt_state = opt.rmsprop_init(params)
+    carry = init_s(batch)
+    loop = init_loop_state(curriculum.level if curriculum else level)
+    jstep = jax.jit(chunk_step, donate_argnums=(0, 1, 2))
+
+    if ckpt_dir:
+        template = {"params": params, "opt": opt_state, "carry": carry,
+                    "loop": loop}
+        restored, at = ckpt_lib.restore_checkpoint(ckpt_dir, template,
+                                                   fill_missing=True)
+        if restored is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            carry, loop = restored["carry"], restored["loop"]
+            if verbose:
+                print(f"  [resume] step {at} episode={int(loop.episode)} "
+                      f"cursor={int(loop.cursor)}")
+    if curriculum:
+        curriculum.level = int(loop.level)
+        curriculum._streak = int(loop.streak)
+
+    history = []
+    # Continue the checkpoint step numbering where the restored run left
+    # off — restarting at 0 would park newer state under smaller step ids
+    # and a later crash would resume from the stale higher-id directory.
+    total = at if (ckpt_dir and restored is not None) else 0
+    while int(loop.episode) < episodes:
+        ep = int(loop.episode)
+        cap = curriculum.level if curriculum else level
+        lvl = _episode_level(seed, ep, cap)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), ep)
+        inputs, targets, mask = task_fn(key, batch, lvl, max_level, bits)
+        xs = jnp.moveaxis(inputs, 1, 0)
+        ts = jnp.moveaxis(targets, 1, 0)
+        ms = jnp.moveaxis(mask, 1, 0)
+        T = xs.shape[0]
+        n_chunks = -(-T // chunk)
+        while int(loop.cursor) < n_chunks:
+            c = int(loop.cursor)
+            sl = slice(c * chunk, min((c + 1) * chunk, T))
+            params, opt_state, carry, l, err = jstep(
+                params, opt_state, carry, xs[sl], ts[sl], ms[sl])
+            ef = float(err)
+            history.append({"episode": ep, "chunk": c, "level": lvl,
+                            "loss": float(l), "err": ef})
+            loop = loop._replace(
+                cursor=loop.cursor + 1,
+                err_sum=loop.err_sum + (ef if ef == ef else 0.0),
+                err_cnt=loop.err_cnt + (1 if ef == ef else 0))
+            total += 1
+            if ckpt_dir and ckpt_every and total % ckpt_every == 0:
+                ckpt_lib.save_checkpoint(
+                    ckpt_dir, total, {"params": params, "opt": opt_state,
+                                      "carry": carry, "loop": loop})
+            if stop_after_chunks is not None and total >= stop_after_chunks:
+                return params, history
+        # Episode boundary: advance the curriculum from the checkpointed
+        # running episode error (covers every chunk, resume or not), then
+        # reset carry + cursor. (If no finite error was recorded — e.g. a
+        # resume that landed exactly on the boundary after the update was
+        # already taken — skip rather than feed the curriculum a bogus
+        # value.)
+        ep_err = (float(loop.err_sum) / int(loop.err_cnt)
+                  if int(loop.err_cnt) else None)
+        if curriculum and ep_err is not None:
+            curriculum.update(ep_err)
+        loop = init_loop_state(curriculum.level if curriculum else level)
+        loop = loop._replace(
+            episode=jnp.asarray(ep + 1, jnp.int32),
+            streak=jnp.asarray(curriculum._streak if curriculum else 0,
+                               jnp.int32))
+        carry = init_s(batch)
+        if ckpt_dir and ckpt_every:
+            # Persist the boundary too — the curriculum advance above must
+            # survive a crash between episodes.
+            ckpt_lib.save_checkpoint(
+                ckpt_dir, total, {"params": params, "opt": opt_state,
+                                  "carry": carry, "loop": loop})
+        if verbose:
+            print(f"  [{spec.kind}/{task}] episode {ep} done "
+                  f"(err={ep_err if ep_err is not None else float('nan'):.3f})")
     return params, history

@@ -144,10 +144,15 @@ class DenseState(NamedTuple):
 
 class StepDeltas(NamedTuple):
     """Sparse modifications recorded by one SAM step — everything needed to
-    roll the memory back during the backward pass (paper §3.4 / Suppl. Fig 5)."""
+    roll the memory back *and* replay the step with fixed index selections
+    during the backward pass (paper §3.4 / Suppl. Fig 5). This is SAM's
+    delta type for the `MemoryCell` protocol (core/cell.py); the sparse DNC
+    records the richer `SDNCDeltas` (core/dnc.py) covering its temporal
+    link state as well."""
 
     write_idx: jax.Array     # (B, Hw) int32 rows touched by the write
     old_rows: jax.Array      # (B, Hw, W) their pre-write contents
+    read_idx: jax.Array      # (B, H, K) int32 rows selected by the read
 
 
 def tree_bytes(tree) -> int:

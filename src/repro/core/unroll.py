@@ -1,0 +1,320 @@
+"""Chunked sparse-rollback BPTT engine (paper §3.4, Suppl. Fig. 5) for any
+`MemoryCell` (core/cell.py) — SAM, the sparse DNC, and the LM memory layer
+all train through this one engine.
+
+A naive `lax.scan` checkpoints the full memory `M_t` per step — O(T·N·W)
+residual space. The *whole-sequence sparse* mode (the original SAM scheme)
+stores only the sparse per-step modifications (touched row indices + their
+overwritten contents, O(T·K·W)) plus the small controller residuals, and
+rolls the memory back step by step during the backward pass. That still
+holds all T steps' residuals live at once, which caps horizons well short
+of the paper's 100k-step regime.
+
+The *chunked* mode splits the sequence into C-step segments:
+
+  * forward: a dense checkpoint of the full state at each segment boundary
+    — O(T/C · state) — and nothing else;
+  * backward: per segment (in reverse), the forward is recomputed from the
+    boundary checkpoint while collecting the O(C·K·W) sparse deltas, then
+    the rollback streams backward through the segment. Segments are
+    processed one at a time inside a `lax.scan`, whose while-loop carries
+    are donated/reused in place — so peak residual memory is
+    O(T/C·state + C·K·W), never O(T·anything) beyond the unavoidable
+    inputs/outputs/cotangents of the unroll itself.
+
+The engine is cell-agnostic: differentiable state leaves are discovered by
+dtype (floating leaves carry cotangents; integer leaves — indices, usage
+tables, ANN buckets — get `float0`), and the cell's `rollback`/`replay_step`
+pair supplies the §3.4 inversion. Because index selection is
+non-differentiable (stop-gradient top-K / LRA argmin), the replay takes the
+recorded indices as fixed inputs — the backward pass never needs the usage
+table or the ANN index, and never runs an O(N·W) sweep.
+
+Scratch-row layout: the memory carried through the scans is the persistent
+(B, N+1, W) buffer (core/types.py). Recorded write indices only ever name
+logical rows (< N), so the rollback `scatter_set_rows` and the replay's
+write leave row N untouched — a cotangent entering through the final
+state's scratch row passes straight back to the initial state without
+mixing into any logical row.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cell import SAMCell
+from repro.core.types import tree_bytes
+
+
+# --------------------------------------------------------------------------
+# Float-leaf bookkeeping: which state leaves carry cotangents.
+# --------------------------------------------------------------------------
+
+def _float_mask(tree):
+    """Per-leaf "carries a cotangent" mask, computed from a *primal*
+    template (cotangent trees may hold float0 leaves, whose dtype lies)."""
+    return [jnp.issubdtype(leaf.dtype, jnp.floating)
+            for leaf in jax.tree.leaves(tree)]
+
+
+def _floats(tree, mask):
+    return [leaf for leaf, m in zip(jax.tree.leaves(tree), mask) if m]
+
+
+def _merge_floats(tree, floats, mask):
+    """Rebuild `tree` with its float leaves replaced by `floats` (in order)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    it = iter(floats)
+    return jax.tree.unflatten(
+        treedef, [next(it) if m else leaf for leaf, m in zip(leaves, mask)])
+
+
+def _full_state_ct(template, floats, mask):
+    """State-shaped cotangent: `floats` in order, float0 for integer leaves
+    (the dtype JAX expects for non-differentiable inputs)."""
+    leaves, treedef = jax.tree.flatten(template)
+    it = iter(floats)
+    return jax.tree.unflatten(
+        treedef, [next(it) if m else np.zeros(leaf.shape, jax.dtypes.float0)
+                  for leaf, m in zip(leaves, mask)])
+
+
+# --------------------------------------------------------------------------
+# Forward scans
+# --------------------------------------------------------------------------
+
+def unroll_naive(cell, params, state, xs):
+    """Plain scan through `cell.step` — the O(T·state) residual baseline."""
+    def body(s, x):
+        ns, y = cell.step(params, s, x)
+        return ns, y
+    return jax.lax.scan(body, state, xs)
+
+
+def _collect_scan(cell, params, state, xs):
+    """Forward scan that also emits the per-step rollback residuals:
+    (residual_state(s_{t-1}), deltas_t) — O(K·W) per step."""
+    def body(s, x):
+        ns, y, deltas = cell.step(params, s, x, collect_deltas=True)
+        return ns, (y, (cell.residual_state(s), deltas))
+    state, (ys, res) = jax.lax.scan(body, state, xs)
+    return state, ys, res
+
+
+# --------------------------------------------------------------------------
+# Backward: stream one segment in reverse (rollback + replay per step)
+# --------------------------------------------------------------------------
+
+def _segment_bwd(cell, params, state_end, res, xs, cts_end, ct_ys, mask):
+    """Run the §3.4 rollback backward through one segment.
+
+    Carries the full state backward (rolling it back step by step), the
+    cotangent of its float leaves, and the parameter-gradient accumulator.
+    Returns (state_start, ct_floats_start, g_params, g_xs)."""
+    g_params0 = jax.tree.map(jnp.zeros_like, params)
+
+    def body(carry, step_in):
+        state_t, cts, g_params = carry
+        (prev_small, deltas), x, ct_y = step_in
+        state_prev = cell.rollback(state_t, prev_small, deltas)
+
+        def f(p, diff, xx):
+            st = _merge_floats(state_prev, diff, mask)
+            ns, y = cell.replay_step(p, st, xx, deltas)
+            return _floats(ns, mask), y
+
+        _, vjp_fn = jax.vjp(f, params, _floats(state_prev, mask), x)
+        gp, gdiff, gx = vjp_fn((cts, ct_y))
+        g_params = jax.tree.map(jnp.add, g_params, gp)
+        return (state_prev, gdiff, g_params), gx
+
+    (state0, cts0, g_params), g_xs = jax.lax.scan(
+        body, (state_end, cts_end, g_params0), (res, xs, ct_ys), reverse=True)
+    return state0, cts0, g_params, g_xs
+
+
+# --------------------------------------------------------------------------
+# Whole-sequence sparse unroll (original §3.4 scheme, O(T·K·W) residuals)
+# --------------------------------------------------------------------------
+
+def make_sparse_unroll(cell):
+    """Custom-VJP unroll storing sparse residuals for the full sequence."""
+
+    @jax.custom_vjp
+    def unroll_fn(params, state0, xs):
+        return unroll_naive(cell, params, state0, xs)
+
+    def fwd(params, state0, xs):
+        stateT, ys, res = _collect_scan(cell, params, state0, xs)
+        # One dense copy of the final state seeds the rollback (the paper
+        # restores the start state by rolling M_T back); everything else is
+        # O(T·K·W) sparse residuals. NOT O(T·N·W).
+        return (stateT, ys), (params, stateT, res, xs)
+
+    def bwd(residuals, ct):
+        params, stateT, res, xs = residuals
+        ct_state, ct_ys = ct
+        mask = _float_mask(stateT)
+        _, cts0, g_params, g_xs = _segment_bwd(
+            cell, params, stateT, res, xs, _floats(ct_state, mask), ct_ys,
+            mask)
+        return g_params, _full_state_ct(stateT, cts0, mask), g_xs
+
+    unroll_fn.defvjp(fwd, bwd)
+    return unroll_fn
+
+
+# --------------------------------------------------------------------------
+# Chunked unroll: boundary checkpoints + per-segment recompute/rollback
+# --------------------------------------------------------------------------
+
+def make_chunked_unroll(cell):
+    """Custom-VJP unroll over pre-segmented inputs xs: (S, C, B, ...)."""
+
+    @jax.custom_vjp
+    def unroll_fn(params, state0, xs):
+        def seg(s, xseg):
+            return unroll_naive(cell, params, s, xseg)
+        return jax.lax.scan(seg, state0, xs)
+
+    def fwd(params, state0, xs):
+        def seg(s, xseg):
+            ns, ys = unroll_naive(cell, params, s, xseg)
+            return ns, (ys, s)          # s = dense boundary checkpoint
+        stateT, (ys, boundaries) = jax.lax.scan(seg, state0, xs)
+        return (stateT, ys), (params, boundaries, xs)
+
+    def bwd(residuals, ct):
+        params, boundaries, xs = residuals
+        ct_state, ct_ys = ct
+        template = jax.tree.map(lambda leaf: leaf[0], boundaries)
+        mask = _float_mask(template)
+        g_params0 = jax.tree.map(jnp.zeros_like, params)
+
+        def seg(carry, step_in):
+            cts, g_params = carry
+            boundary, xseg, ct_yseg = step_in
+            # Recompute the segment forward from its dense checkpoint,
+            # collecting the O(C·K·W) sparse residuals, then stream the
+            # rollback backward through it. Only one segment's residuals
+            # are ever live.
+            state_end, _, res = _collect_scan(cell, params, boundary, xseg)
+            _, cts0, gp, g_xseg = _segment_bwd(
+                cell, params, state_end, res, xseg, cts, ct_yseg, mask)
+            return (cts0, jax.tree.map(jnp.add, g_params, gp)), g_xseg
+
+        (cts0, g_params), g_xs = jax.lax.scan(
+            seg, (_floats(ct_state, mask), g_params0),
+            (boundaries, xs, ct_ys), reverse=True)
+        return g_params, _full_state_ct(template, cts0, mask), g_xs
+
+    unroll_fn.defvjp(fwd, bwd)
+    return unroll_fn
+
+
+# --------------------------------------------------------------------------
+# Public dispatcher
+# --------------------------------------------------------------------------
+
+def _step_residual_bytes(cell, params, state0, xs):
+    """Bytes of one step's rollback residuals, via eval_shape (no compute)."""
+    x0 = jax.eval_shape(lambda x: x[0], xs)
+
+    def one(p, s, x):
+        _, _, deltas = cell.step(p, s, x, collect_deltas=True)
+        return cell.residual_state(s), deltas
+
+    return tree_bytes(jax.tree.leaves(jax.eval_shape(one, params, state0, x0)))
+
+
+def suggest_chunk(cell, params, state0, xs) -> int:
+    """C* ≈ √(T · state_bytes / residual_bytes_per_step) — the minimizer of
+    the chunked engine's residual footprint T/C·state + C·res."""
+    T = xs.shape[0]
+    sb = tree_bytes(state0)
+    rb = _step_residual_bytes(cell, params, state0, xs)
+    return max(1, min(int(round(math.sqrt(max(T, 1) * sb / max(rb, 1)))), T))
+
+
+def unroll(cell, params, state0, xs, *, mode: str = "sparse", chunk=None):
+    """Unroll a MemoryCell over xs (T, B, ...) -> (stateT, ys).
+
+    mode:
+      * "naive"   — plain scan, O(T·state) residuals (baseline / eval);
+      * "sparse"  — whole-sequence sparse rollback, O(T·K·W) residuals;
+      * "chunked" — boundary checkpoints + per-segment recompute,
+                    O(T/C·state + C·K·W) residuals. `chunk` is the segment
+                    length C (None/"auto" → the √-rule `suggest_chunk`).
+                    A T % C remainder runs as a whole-sequence-sparse tail.
+    """
+    if mode == "naive":
+        return unroll_naive(cell, params, state0, xs)
+    if mode == "sparse":
+        return make_sparse_unroll(cell)(params, state0, xs)
+    if mode != "chunked":
+        raise ValueError(f"unknown unroll mode {mode!r}")
+    T = xs.shape[0]
+    C = (suggest_chunk(cell, params, state0, xs)
+         if chunk in (None, "auto") else int(chunk))
+    C = max(1, min(C, T))
+    S, R = divmod(T, C)
+    if S == 0:
+        return make_sparse_unroll(cell)(params, state0, xs)
+    head = xs[:S * C].reshape((S, C) + xs.shape[1:])
+    state, ys = make_chunked_unroll(cell)(params, state0, head)
+    ys = ys.reshape((S * C,) + ys.shape[2:])
+    if R:
+        state, ys_tail = make_sparse_unroll(cell)(params, state, xs[S * C:])
+        ys = jnp.concatenate([ys, ys_tail], axis=0)
+    return state, ys
+
+
+def residual_accounting(cell, params, state0, xs, *, mode: str,
+                        chunk=None) -> dict:
+    """Analytic peak-residual bytes of one unroll mode (benchmarks; see
+    docs/unroll.md for the accounting). Counts what the backward pass holds
+    live beyond the unroll's own inputs/outputs/cotangents:
+
+      * naive:   T · state            (the scan checkpoints the carry)
+      * sparse:  state + T · res      (M_T copy + all steps' sparse deltas)
+      * chunked: T/C · state + C · res  (boundary checkpoints + one live
+                                         segment's deltas)
+
+    xs may be a concrete array or a ShapeDtypeStruct."""
+    T = xs.shape[0]
+    sb = tree_bytes(state0)
+    rb = _step_residual_bytes(cell, params, state0, xs)
+    if mode == "naive":
+        total = T * sb
+        C = None
+    elif mode == "sparse":
+        total = sb + T * rb
+        C = None
+    elif mode == "chunked":
+        C = (suggest_chunk(cell, params, state0, xs)
+             if chunk in (None, "auto") else int(chunk))
+        C = max(1, min(C, T))
+        total = -(-T // C) * sb + C * rb
+    else:
+        raise ValueError(f"unknown unroll mode {mode!r}")
+    return {"mode": mode, "T": T, "chunk": C, "state_bytes": sb,
+            "res_step_bytes": rb, "residual_bytes": int(total)}
+
+
+# --------------------------------------------------------------------------
+# Compatibility entry point (previously core/bptt.py)
+# --------------------------------------------------------------------------
+
+def sam_unroll_sparse_bptt(params, cfg, state0, xs, *, chunk=None):
+    """Public entry point mirroring `sam.sam_unroll` but with sparse-rollback
+    residuals: O(T·K·W) (whole-sequence, the default) or
+    O(T/C·state + C·K·W) when `chunk` is given. New code should prefer
+    `unroll(SAMCell(cfg), ...)`."""
+    cell = SAMCell(cfg)
+    if chunk is None:
+        return make_sparse_unroll(cell)(params, state0, xs)
+    return unroll(cell, params, state0, xs, mode="chunked", chunk=chunk)

@@ -65,6 +65,12 @@ class MemoryLayerConfig:
     # Kernel backend for the memory ops ('ref' | 'pallas' |
     # 'pallas-interpret' | registered custom; None -> env default).
     backend: "str | None" = None
+    # How the segment loop backpropagates (core/unroll.py): 'naive' scans
+    # and checkpoints the (B, N+1, W) memory per segment; 'sparse' stores
+    # only the per-segment rollback deltas; 'chunked' adds boundary
+    # checkpoints every `unroll_chunk` segments (None -> auto √-rule).
+    unroll_mode: str = "sparse"
+    unroll_chunk: "int | None" = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -134,8 +134,9 @@ def _scan_blocks(params, cfg: ModelConfig, x, positions):
         x, aux = run_stack(x, sl, None)
         aux_total += aux
         mp = jax.tree.map(lambda t: t[g], mem_params)
-        x, mem_state = sam_layer.memory_layer_seq(mp, cfg, x, mem_state,
-                                                  cfg.memory.segment)
+        # Segment length + unroll mode come from cfg.memory: the group loop
+        # trains through the sparse-rollback engine (core/unroll.py).
+        x, mem_state = sam_layer.memory_layer_seq(mp, cfg, x, mem_state)
     return x, aux_total
 
 

@@ -9,20 +9,27 @@ training/prefill the sequence is processed in segments (one read+write per
 segment); during decode each token performs one read and writes on segment
 boundaries. Memory slots shard over the `model` mesh axis ("mem_slots" rule)
 so a 65k×128 memory adds only N·W/|model| bytes per device.
+
+The segment loop trains through the generic sparse-rollback engine
+(`core/unroll.py`): `LMMemoryCell` implements the MemoryCell protocol, so
+long-context training does not checkpoint the (B, N+1, W) memory per
+segment — `MemoryLayerConfig.unroll_mode` selects naive / sparse / chunked.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import addressing as addr
+from repro.core import unroll as unroll_lib
 from repro.core.types import (SCRATCH_ROWS, has_scratch_row,
                               init_scratch_last_access, init_scratch_memory)
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
-from repro.models.layers import pdef
+from repro.models.layers import init_from_defs, pdef
 
 
 class MemoryState(NamedTuple):
@@ -34,6 +41,16 @@ class MemoryState(NamedTuple):
     read_idx: jax.Array      # (B, H, K) previous read locations
     read_w: jax.Array        # (B, H, K)
     step: jax.Array          # () int32
+
+
+class MemDeltas(NamedTuple):
+    """Sparse per-segment modifications: the §3.4 rollback contract for the
+    LM memory layer (indices recorded, touched rows' pre-write contents)."""
+
+    write_idx: jax.Array     # (B, H·(K+1)) int32
+    old_rows: jax.Array      # (B, H·(K+1), W)
+    lra: jax.Array           # (B, H) int32
+    read_idx: jax.Array      # (B, H, K) int32
 
 
 def memory_defs(cfg: ModelConfig):
@@ -68,18 +85,34 @@ def init_memory_state(cfg: ModelConfig, batch: int) -> MemoryState:
     )
 
 
-def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState):
-    """One SAM read+write for a segment summary `pooled` (B, d).
-
-    Returns (read_out (B, d), new_state)."""
-    m = cfg.memory
-    B = pooled.shape[0]
-    H, K = m.num_heads, m.k
+def _interface(p, cfg: ModelConfig, pooled):
+    """Project a segment summary to (q, a, alpha, gamma, beta)."""
     q = jnp.einsum("bd,dhw->bhw", pooled, p["wq"])
     a = jnp.einsum("bd,dhw->bhw", pooled, p["wa"])
     g = jax.nn.sigmoid(jnp.einsum("bd,dhg->bhg", pooled, p["gates"]))
     alpha, gamma, beta_g = g[..., 0], g[..., 1], g[..., 2]
-    beta = 1.0 + 9.0 * beta_g                                 # key strength
+    return q, a, alpha, gamma, 1.0 + 9.0 * beta_g            # key strength
+
+
+def _write_weights(cfg: ModelConfig, state: MemoryState, lra, alpha, gamma):
+    """Eq. (5): w^W = α (γ w^R_{t-1} + (1-γ) I^U), flattened to (B, H·(K+1))."""
+    B = alpha.shape[0]
+    w_read = alpha[..., None] * gamma[..., None] * state.read_w
+    w_lra = (alpha * (1.0 - gamma))[..., None]
+    widx = jnp.concatenate([state.read_idx, lra[..., None]], -1)  # (B,H,K+1)
+    ww = jnp.concatenate([w_read, w_lra], -1)
+    return widx.reshape(B, -1), ww.reshape(B, -1)
+
+
+def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState,
+                  *, collect_deltas: bool = False):
+    """One SAM read+write for a segment summary `pooled` (B, d).
+
+    Returns (read_out (B, d), new_state[, deltas])."""
+    m = cfg.memory
+    B = pooled.shape[0]
+    H, K = m.num_heads, m.k
+    q, a, alpha, gamma, beta = _interface(p, cfg, pooled)
 
     # ---- write (eq. 5): previously-read ∪ least-recently-accessed ----
     be = m.backend
@@ -89,14 +122,13 @@ def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState):
     step = state.step + 1
     lra = addr.least_recently_accessed(state.last_access, H, backend=be,
                                        valid_n=valid_n)
-    w_read = alpha[..., None] * gamma[..., None] * state.read_w
-    w_lra = (alpha * (1.0 - gamma))[..., None]
-    widx = jnp.concatenate([state.read_idx, lra[..., None]], -1)  # (B,H,K+1)
-    ww = jnp.concatenate([w_read, w_lra], -1)
+    widx_flat, ww_flat = _write_weights(cfg, state, lra, alpha, gamma)
+    old_rows = None
+    if collect_deltas:
+        old_rows = addr.gather_rows(state.memory, widx_flat)
     memory, la = addr.sparse_write_update(
-        state.memory, state.last_access, widx.reshape(B, -1),
-        ww.reshape(B, -1), a, lra, step, m.delta, backend=be,
-        scratch_row=N if padded else None)
+        state.memory, state.last_access, widx_flat, ww_flat, a, lra, step,
+        m.delta, backend=be, scratch_row=N if padded else None)
     # Soft GSPMD constraint; with the scratch-row layout the slot dim is
     # N+1, which no longer divides the model axis — GSPMD pads the odd
     # scratch row onto the last shard (a one-row imbalance, not an error).
@@ -114,26 +146,100 @@ def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState):
     new_state = MemoryState(memory=memory, last_access=la,
                             read_idx=read.indices, read_w=read.weights,
                             step=step)
-    return out, new_state
+    if collect_deltas:
+        return new_state, out, MemDeltas(write_idx=widx_flat,
+                                         old_rows=old_rows, lra=lra,
+                                         read_idx=read.indices)
+    return new_state, out
+
+
+def memory_replay(p, cfg: ModelConfig, pooled, state: MemoryState,
+                  deltas: MemDeltas):
+    """Differentiable recomputation of one segment access with the recorded
+    indices fixed — the memory-only write (erase LRA + scatter-add w^W a^T)
+    matches the fused kernel's memory effect; usage stays stale."""
+    m = cfg.memory
+    B = pooled.shape[0]
+    q, a, alpha, gamma, beta = _interface(p, cfg, pooled)
+    _, ww_flat = _write_weights(cfg, state, deltas.lra, alpha, gamma)
+
+    be = m.backend
+    N = m.num_slots
+    scratch = N if has_scratch_row(N, state.memory.shape[1]) else None
+    Kp1 = m.k + 1
+    zeros = jnp.zeros((B, m.num_heads, state.memory.shape[-1]),
+                      state.memory.dtype)
+    memory = addr.scatter_set_rows(state.memory, deltas.lra, zeros, backend=be)
+    add_rows = ww_flat.reshape(B, m.num_heads, Kp1)[..., None] \
+        * a[:, :, None, :]
+    memory = addr.scatter_add_rows(memory, deltas.write_idx,
+                                   add_rows.reshape(B, -1, a.shape[-1]),
+                                   backend=be, scratch_row=scratch)
+    memory = shard(memory, "batch", "mem_slots", "mem_word")
+
+    words = addr.gather_rows(memory, deltas.read_idx)            # (B,H,K,W)
+    sel = addr._rerank(q, words) * beta[..., None]
+    rw = jax.nn.softmax(sel, axis=-1)
+    r = jnp.einsum("bhk,bhkw->bhw", rw, words)
+    out = jnp.einsum("bhw,hwd->bd", r, p["wr"])
+    new_state = MemoryState(memory=memory, last_access=state.last_access,
+                            read_idx=deltas.read_idx, read_w=rw,
+                            step=state.step + 1)
+    return new_state, out
+
+
+@dataclasses.dataclass(frozen=True)
+class LMMemoryCell:
+    """The LM memory layer behind the MemoryCell protocol: one engine
+    "step" = one segment's read+write (`memory_access`)."""
+
+    cfg: ModelConfig
+
+    def init_params(self, key):
+        return init_from_defs(key, memory_defs(self.cfg), jnp.float32)
+
+    def init_state(self, batch: int):
+        return init_memory_state(self.cfg, batch)
+
+    def step(self, params, state, pooled, *, collect_deltas: bool = False):
+        return memory_access(params, self.cfg, pooled, state,
+                             collect_deltas=collect_deltas)
+
+    def residual_state(self, state: MemoryState):
+        return (state.read_idx, state.read_w)
+
+    def rollback(self, state: MemoryState, prev_small, deltas: MemDeltas):
+        read_idx, read_w = prev_small
+        memory = addr.scatter_set_rows(state.memory, deltas.write_idx,
+                                       deltas.old_rows,
+                                       backend=self.cfg.memory.backend)
+        return MemoryState(memory=memory, last_access=state.last_access,
+                           read_idx=read_idx, read_w=read_w,
+                           step=state.step - 1)
+
+    def replay_step(self, params, state, pooled, deltas: MemDeltas):
+        return memory_replay(params, self.cfg, pooled, state, deltas)
 
 
 def memory_layer_seq(p, cfg: ModelConfig, x, state: MemoryState,
-                     segment: int = 512):
+                     segment: int = None):
     """Apply SAM memory over a full sequence in segments.
 
     x: (B, S, d). Each segment mean-pools to a query/write summary; the read
-    vector is broadcast-added to the segment's tokens."""
+    vector is broadcast-added to the segment's tokens. The segment loop runs
+    through the sparse-rollback engine (`MemoryLayerConfig.unroll_mode`), so
+    backprop through long contexts does not checkpoint the memory buffer
+    per segment."""
+    m = cfg.memory
     B, S, d = x.shape
-    seg = min(segment, S)
+    seg = min(segment if segment is not None else m.segment, S)
     n = S // seg
-    xs = x.reshape(B, n, seg, d)
+    pooled = x.reshape(B, n, seg, d).mean(axis=2)           # (B, n, d)
 
-    def body(st, xc):                        # xc: (B, seg, d)
-        pooled = xc.mean(axis=1)
-        out, st = memory_access(p, cfg, pooled, st)
-        return st, out
-
-    state, outs = jax.lax.scan(body, state, jnp.moveaxis(xs, 1, 0))
+    cell = LMMemoryCell(cfg)
+    state, outs = unroll_lib.unroll(
+        cell, p, state, jnp.moveaxis(pooled, 1, 0),
+        mode=m.unroll_mode, chunk=m.unroll_chunk)
     outs = jnp.moveaxis(outs, 0, 1)          # (B, n, d)
     y = x + jnp.repeat(outs, seg, axis=1).reshape(B, S, d)
     return y, state

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import sam as sam_lib
-from repro.core.bptt import sam_unroll_sparse_bptt
+from repro.core.unroll import sam_unroll_sparse_bptt
 from repro.core.types import ControllerConfig, MemoryConfig
 from repro.kernels import ops, ref, registry
 

@@ -18,7 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core import sam as sam_lib
-from repro.core.bptt import sam_unroll_sparse_bptt
+from repro.core.unroll import sam_unroll_sparse_bptt
 from repro.core.types import (LA_SCRATCH, ControllerConfig, MemoryConfig,
                               SAMState)
 from repro.kernels import ops

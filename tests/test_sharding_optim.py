@@ -90,6 +90,23 @@ def test_ann_insert_query_recall(rng_key):
     assert hits >= 14, f"recall too low: {hits}/16"
 
 
+def test_ann_build_chunked_matches_sequential(rng_key):
+    """The vectorized (batched-insert) rebuild is exactly equivalent to
+    N sequential single-slot inserts, including when the chunk size does
+    not divide N (the remainder call)."""
+    cfg = MemoryConfig(num_slots=10, word_size=8, lsh_tables=2, lsh_bits=3,
+                       lsh_bucket_size=4, ann="lsh")
+    planes = ann_lib.lsh_planes(rng_key, cfg)
+    mem = jax.random.normal(jax.random.PRNGKey(2), (2, 10, 8))
+    ref = ann_lib.ann_build(planes, mem, cfg, chunk=1)    # sequential
+    # 3 → remainder call; 10 > bucket_size → clamped to 4 (exactness
+    # precondition), still equivalent.
+    for chunk in (3, 4, 10, None):
+        got = ann_lib.ann_build(planes, mem, cfg, chunk=chunk)
+        assert np.array_equal(np.asarray(ref.buckets), np.asarray(got.buckets))
+        assert np.array_equal(np.asarray(ref.cursor), np.asarray(got.cursor))
+
+
 def test_ann_insert_updates_bucket(rng_key):
     cfg = MemoryConfig(num_slots=8, word_size=8, lsh_tables=2, lsh_bits=3,
                        lsh_bucket_size=4, ann="lsh")

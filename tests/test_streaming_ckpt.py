@@ -1,0 +1,118 @@
+"""Streaming trainer + segment-boundary checkpoint state: the train-loop
+state (curriculum level + chunk cursor) round-trips through ckpt.py, a job
+killed mid-episode resumes at the exact chunk cursor with identical
+results, and legacy (params/opt-only) checkpoints load unchanged via
+`restore_checkpoint(fill_missing=True)`."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
+from repro.core.training import (ModelSpec, TrainLoopState, init_loop_state,
+                                 train_task_streaming)
+from repro.core.types import ControllerConfig, MemoryConfig
+from repro.data.curriculum import Curriculum
+
+MEM = MemoryConfig(num_slots=16, word_size=8, num_heads=1, k=2)
+CTL = ControllerConfig(input_size=10, hidden_size=16, output_size=8)
+
+
+def spec(**kw):
+    return ModelSpec("sam", MEM, CTL, **kw)
+
+
+def test_loop_state_roundtrips(tmp_path):
+    loop = init_loop_state(8)._replace(episode=jnp.asarray(3, jnp.int32),
+                                       cursor=jnp.asarray(5, jnp.int32),
+                                       streak=jnp.asarray(2, jnp.int32),
+                                       err_sum=jnp.asarray(1.5, jnp.float32),
+                                       err_cnt=jnp.asarray(4, jnp.int32))
+    tree = {"loop": loop, "params": {"w": jnp.ones((3,))}}
+    save_checkpoint(str(tmp_path), 11, tree)
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 11
+    assert int(restored["loop"].cursor) == 5
+    assert int(restored["loop"].level) == 8
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_checkpoint_loads_unchanged(tmp_path):
+    """A params/opt-only tree (saved before the loop state rode along)
+    restores into the extended template: saved leaves bit-exact, missing
+    carry/loop leaves fall back to the template values."""
+    params = {"w": jnp.arange(4.0)}
+    opt = {"ms": jnp.ones((4,))}
+    save_checkpoint(str(tmp_path), 2, {"params": params, "opt": opt})
+
+    template = {"params": jnp.zeros((4,)) * 0, "opt": {"ms": jnp.zeros((4,))},
+                "carry": jnp.zeros((2, 2)), "loop": init_loop_state(4)}
+    template["params"] = {"w": jnp.zeros((4,))}
+    restored, step = restore_checkpoint(str(tmp_path), template,
+                                        fill_missing=True)
+    assert step == 2
+    assert np.array_equal(np.asarray(restored["params"]["w"]),
+                          np.arange(4.0))
+    assert np.array_equal(np.asarray(restored["opt"]["ms"]), np.ones((4,)))
+    assert np.array_equal(np.asarray(restored["carry"]), np.zeros((2, 2)))
+    assert int(restored["loop"].episode) == 0
+    assert int(restored["loop"].level) == 4
+
+
+def test_fill_missing_rejects_unknown_leaves(tmp_path):
+    """fill_missing only tolerates a leaf *subset* — a checkpoint leaf with
+    no template counterpart (e.g. a renamed field) must raise."""
+    save_checkpoint(str(tmp_path), 1, {"params": {"w": jnp.ones((2,))},
+                                       "extra": jnp.zeros((1,))})
+    with pytest.raises(ValueError, match="no counterpart"):
+        restore_checkpoint(str(tmp_path), {"params": {"w": jnp.zeros((2,))}},
+                           fill_missing=True)
+
+
+def test_strict_restore_still_rejects_structure_mismatch(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"params": {"w": jnp.ones((2,))}})
+    with pytest.raises(AssertionError, match="structure"):
+        restore_checkpoint(str(tmp_path), {"params": {"w": jnp.zeros((2,))},
+                                           "loop": init_loop_state(2)})
+
+
+def test_mid_episode_resume_matches_uninterrupted(tmp_path):
+    """Kill the streaming trainer mid-episode, resume from the checkpoint,
+    and get the same parameters as an uninterrupted run — the chunk cursor
+    restores and no data is replayed or skipped (episode data regenerates
+    deterministically from (seed, episode))."""
+    kw = dict(episodes=2, chunk=4, batch=2, level=3, max_level=4, bits=8,
+              lr=1e-3, seed=0)
+
+    p_ref, h_ref = train_task_streaming(spec(), "copy", **kw)
+
+    ckpt_dir = str(tmp_path / "run")
+    p_int, h1 = train_task_streaming(spec(), "copy", ckpt_dir=ckpt_dir,
+                                     ckpt_every=1, stop_after_chunks=3, **kw)
+    assert len(h1) == 3
+
+    p_res, h2 = train_task_streaming(spec(), "copy", ckpt_dir=ckpt_dir,
+                                     ckpt_every=1, **kw)
+    # Resumed history continues at the saved cursor (no replay of chunk 0-2).
+    assert h2[0]["chunk"] == 3 or h2[0]["episode"] > 0
+    assert (len(h1) + len(h2)) == len(h_ref)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_res)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_streaming_curriculum_state_restores(tmp_path):
+    """The curriculum level/streak live in the checkpointed loop state: a
+    resume reconstitutes the Curriculum object."""
+    ckpt_dir = str(tmp_path / "run")
+    cur = Curriculum(start_level=2, threshold=1e9, patience=1)  # dbl each ep
+    kw = dict(episodes=3, chunk=4, batch=2, level=2, max_level=4, bits=8,
+              lr=1e-3, seed=0, ckpt_dir=ckpt_dir, ckpt_every=1)
+    train_task_streaming(spec(), "copy", curriculum=cur, **kw)
+    lvl_end = cur.level
+    assert lvl_end > 2            # threshold=inf → doubles every episode
+
+    cur2 = Curriculum(start_level=2, threshold=1e9, patience=1)
+    train_task_streaming(spec(), "copy", curriculum=cur2, **kw)
+    # Nothing left to train (all episodes consumed) but the level restored.
+    assert cur2.level == lvl_end

@@ -1,0 +1,292 @@
+"""The chunked sparse-rollback unroll engine (core/unroll.py) and the
+MemoryCell protocol: gradient parity with the naive scans for SAM *and* the
+sparse DNC, chunk-size invariance, residual accounting, and the 100k-step
+horizon smoke (nightly)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dnc as dnc_lib
+from repro.core import sam as sam_lib
+from repro.core import unroll as unroll_lib
+from repro.core.cell import MemoryCell, SAMCell, SDNCCell
+from repro.core.training import ModelSpec, make_task_train_step
+from repro.core.types import ControllerConfig, MemoryConfig
+
+
+def mem_cfg(backend=None, **kw):
+    return MemoryConfig(num_slots=kw.pop("num_slots", 32),
+                        word_size=kw.pop("word_size", 16),
+                        num_heads=kw.pop("num_heads", 2),
+                        k=kw.pop("k", 4), backend=backend, **kw)
+
+
+CTL = ControllerConfig(input_size=8, hidden_size=32, output_size=8)
+
+
+def sam_cell(backend=None, **kw):
+    return SAMCell(sam_lib.SAMConfig(mem_cfg(backend, **kw), CTL))
+
+
+def sdnc_cell(backend=None, **kw):
+    return SDNCCell(dnc_lib.DNCConfig(mem_cfg(backend, **kw), CTL,
+                                      k_l=4, sparse=True))
+
+
+def grads(fn, params):
+    return jax.value_and_grad(lambda p: (fn(p)[1] ** 2).sum())(params)
+
+
+def assert_trees_close(a, b, atol=2e-4, rtol=1e-3):
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x), np.asarray(y), atol=atol, rtol=rtol), a, b)
+
+
+# --------------------------------------------------------------------------
+# Protocol
+# --------------------------------------------------------------------------
+
+def test_cells_satisfy_protocol():
+    assert isinstance(sam_cell(), MemoryCell)
+    assert isinstance(sdnc_cell(), MemoryCell)
+    from repro.models.config import ModelConfig  # LM layer cell, same contract
+    from repro.models.sam_layer import LMMemoryCell
+    from repro.configs import get_config, reduced
+    assert isinstance(LMMemoryCell(reduced(get_config("starcoder2_7b_sam"))),
+                      MemoryCell)
+
+
+def test_sdnc_cell_rejects_dense_config():
+    with pytest.raises(ValueError, match="sparse"):
+        SDNCCell(dnc_lib.DNCConfig(mem_cfg(), CTL, sparse=False))
+    with pytest.raises(ValueError, match="sparse"):
+        dnc_lib.dnc_step({}, dnc_lib.DNCConfig(mem_cfg(), CTL, sparse=False),
+                         None, None, collect_deltas=True)
+
+
+# --------------------------------------------------------------------------
+# SDNC gradient parity: engine vs the naive dnc_unroll scan
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "pallas-interpret"])
+def test_sdnc_sparse_bptt_matches_naive(backend, rng_key):
+    """Params/state0/xs gradients of the rollback engine must match the
+    naive O(T·N·W) scan — §3.4 extended to the SDNC's link state."""
+    cell = sdnc_cell(backend)
+    cfg = cell.cfg
+    params = cell.init_params(rng_key)
+    state = cell.init_state(2)
+    xs = jax.random.normal(rng_key, (8, 2, 8))
+
+    v1, g1 = grads(lambda p: dnc_lib.dnc_unroll(p, cfg, state, xs), params)
+    v2, g2 = grads(lambda p: unroll_lib.unroll(cell, p, state, xs,
+                                               mode="sparse"), params)
+    np.testing.assert_allclose(float(v1), float(v2), rtol=1e-5)
+    assert_trees_close(g1, g2)
+
+    gx1 = jax.grad(lambda x: (dnc_lib.dnc_unroll(params, cfg, state, x)[1]
+                              ** 2).sum())(xs)
+    gx2 = jax.grad(lambda x: (unroll_lib.unroll(cell, params, state, x,
+                                                mode="sparse")[1]
+                              ** 2).sum())(xs)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2), atol=2e-4,
+                               rtol=1e-3)
+
+    gm1 = jax.grad(lambda m: (dnc_lib.dnc_unroll(
+        params, cfg, state._replace(memory=m), xs)[1] ** 2).sum())(state.memory)
+    gm2 = jax.grad(lambda m: (unroll_lib.unroll(
+        cell, params, state._replace(memory=m), xs, mode="sparse")[1]
+        ** 2).sum())(state.memory)
+    np.testing.assert_allclose(np.asarray(gm1), np.asarray(gm2), atol=2e-4,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas-interpret"])
+@pytest.mark.parametrize("make_cell,naive", [
+    (sam_cell, lambda cell: lambda p, s, x: sam_lib.sam_unroll(
+        p, cell.cfg, s, x)),
+    (sdnc_cell, lambda cell: lambda p, s, x: dnc_lib.dnc_unroll(
+        p, cell.cfg, s, x)),
+], ids=["sam", "sdnc"])
+def test_chunk_size_invariance(make_cell, naive, backend, rng_key):
+    """Gradients are identical (to tolerance) across chunk sizes
+    C ∈ {1, T/2, T} and match the naive scan."""
+    T = 8
+    cell = make_cell(backend)
+    params = cell.init_params(rng_key)
+    state = cell.init_state(2)
+    xs = jax.random.normal(rng_key, (T, 2, 8))
+
+    v0, g0 = grads(lambda p: naive(cell)(p, state, xs), params)
+    for C in (1, T // 2, T):
+        v, g = grads(lambda p: unroll_lib.unroll(cell, p, state, xs,
+                                                 mode="chunked", chunk=C),
+                     params)
+        np.testing.assert_allclose(float(v), float(v0), rtol=1e-5)
+        assert_trees_close(g0, g)
+
+
+def test_chunked_tail_segment(rng_key):
+    """T % C != 0: the remainder runs as a whole-sequence-sparse tail with
+    the same gradients."""
+    cell = sam_cell()
+    params = cell.init_params(rng_key)
+    state = cell.init_state(2)
+    xs = jax.random.normal(rng_key, (7, 2, 8))
+    v0, g0 = grads(lambda p: sam_lib.sam_unroll(p, cell.cfg, state, xs),
+                   params)
+    v, g = grads(lambda p: unroll_lib.unroll(cell, p, state, xs,
+                                             mode="chunked", chunk=3), params)
+    np.testing.assert_allclose(float(v), float(v0), rtol=1e-5)
+    assert_trees_close(g0, g)
+
+
+def test_forward_only_matches_naive(rng_key):
+    """The custom-VJP primal paths (sparse, chunked) produce the same ys and
+    final state as the plain scan."""
+    cell = sam_cell()
+    params = cell.init_params(rng_key)
+    state = cell.init_state(2)
+    xs = jax.random.normal(rng_key, (6, 2, 8))
+    s0, y0 = sam_lib.sam_unroll(params, cell.cfg, state, xs)
+    for mode, chunk in (("sparse", None), ("chunked", 2), ("chunked", 4)):
+        s, y = unroll_lib.unroll(cell, params, state, xs, mode=mode,
+                                 chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(s.memory),
+                                   np.asarray(s0.memory), atol=1e-6)
+        assert int(s.step) == int(s0.step)
+
+
+def test_lm_memory_cell_modes_agree(rng_key):
+    """The LM memory layer (third MemoryCell implementation) gets the same
+    parity guarantee: naive / sparse / chunked agree on outputs and
+    gradients, and memory_layer_seq routes through the engine."""
+    import dataclasses as dc
+    from repro.configs import get_config, reduced
+    from repro.models import sam_layer
+
+    cfg = reduced(get_config("starcoder2_7b_sam"))
+    cell = sam_layer.LMMemoryCell(cfg)
+    params = cell.init_params(rng_key)
+    state = cell.init_state(2)
+    pooled = jax.random.normal(rng_key, (6, 2, cfg.d_model))
+
+    v0, g0 = grads(lambda p: unroll_lib.unroll(cell, p, state, pooled,
+                                               mode="naive"), params)
+    for mode, chunk in (("sparse", None), ("chunked", 2), ("chunked", 4)):
+        v, g = grads(lambda p: unroll_lib.unroll(cell, p, state, pooled,
+                                                 mode=mode, chunk=chunk),
+                     params)
+        np.testing.assert_allclose(float(v), float(v0), rtol=1e-5)
+        assert_trees_close(g0, g)
+
+    # memory_layer_seq end-to-end: identical outputs across configured modes.
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model))
+    outs = {}
+    for mode in ("naive", "sparse", "chunked"):
+        mcfg = dc.replace(cfg, memory=dc.replace(cfg.memory,
+                                                 unroll_mode=mode,
+                                                 unroll_chunk=2))
+        y, st = sam_layer.memory_layer_seq(params, mcfg, x,
+                                           sam_layer.init_memory_state(mcfg, B),
+                                           segment=8)
+        outs[mode] = y
+        gx = jax.grad(lambda xx: (sam_layer.memory_layer_seq(
+            params, mcfg, xx, sam_layer.init_memory_state(mcfg, B),
+            segment=8)[0] ** 2).sum())(x)
+        outs[mode + "_g"] = gx
+    for mode in ("sparse", "chunked"):
+        np.testing.assert_allclose(np.asarray(outs[mode]),
+                                   np.asarray(outs["naive"]), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(outs[mode + "_g"]),
+                                   np.asarray(outs["naive_g"]), atol=2e-4,
+                                   rtol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# Residual accounting
+# --------------------------------------------------------------------------
+
+def test_residual_accounting_orders():
+    """chunked < sparse < naive at a 10k horizon (the BENCH_unroll claim,
+    checked analytically — no 10k unroll in tier-1)."""
+    cell = sam_cell()
+    params = cell.init_params(jax.random.PRNGKey(0))
+    state = cell.init_state(1)
+    xs = jax.ShapeDtypeStruct((10_000, 1, 8), jnp.float32)
+    acc = {m: unroll_lib.residual_accounting(cell, params, state, xs, mode=m)
+           for m in ("naive", "sparse", "chunked")}
+    assert acc["chunked"]["residual_bytes"] < acc["sparse"]["residual_bytes"]
+    assert acc["sparse"]["residual_bytes"] < acc["naive"]["residual_bytes"]
+    # the auto √-rule picks an interior chunk
+    assert 1 < acc["chunked"]["chunk"] < 10_000
+
+
+def test_suggest_chunk_bounds():
+    cell = sam_cell()
+    params = cell.init_params(jax.random.PRNGKey(0))
+    state = cell.init_state(1)
+    for T in (1, 4, 1000):
+        C = unroll_lib.suggest_chunk(cell, params, state,
+                                     jax.ShapeDtypeStruct((T, 1, 8),
+                                                          jnp.float32))
+        assert 1 <= C <= T
+
+
+# --------------------------------------------------------------------------
+# End-to-end smoke: the chunked engine inside the task trainer (tier-1)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["sam", "sdnc"])
+def test_train_step_chunked_t64(kind, rng_key):
+    """Tier-1 smoke: one jitted training step at T=64 through the chunked
+    engine updates params to finite values."""
+    spec = ModelSpec(kind=kind, memory=mem_cfg(num_slots=16, word_size=8,
+                                               num_heads=2, k=2),
+                     controller=ControllerConfig(input_size=8, hidden_size=16,
+                                                 output_size=8),
+                     bptt_chunk=16)
+    init_p, init_s, step = make_task_train_step(spec, lr=1e-3)
+    params = init_p(rng_key)
+    from repro.optim import optimizers as opt
+    opt_state = opt.rmsprop_init(params)
+    B, T = 2, 64
+    xs = jax.random.normal(rng_key, (B, T, 8))
+    ts = (jax.random.uniform(jax.random.PRNGKey(1), (B, T, 8)) > 0.5
+          ).astype(jnp.float32)
+    ms = jnp.ones((B, T))
+    params, opt_state, l, err = jax.jit(step)(params, opt_state, xs, ts, ms)
+    assert np.isfinite(float(l)) and np.isfinite(float(err))
+    assert all(bool(jnp.isfinite(x).all())
+               for x in jax.tree.leaves(params))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["sam", "sdnc"])
+def test_train_step_chunked_100k_horizon(kind):
+    """Acceptance (nightly): a full value_and_grad training step at
+    T=100_000 through the chunked engine, under jit, at smoke-scale N —
+    the paper's '100,000s of time steps' regime. The naive scan at this T
+    would checkpoint ~T·N·W floats; the chunked engine holds
+    O(T/C·state + C·K·W)."""
+    T = 100_000
+    spec = ModelSpec(kind=kind,
+                     memory=mem_cfg(num_slots=16, word_size=8, num_heads=1,
+                                    k=2),
+                     controller=ControllerConfig(input_size=4, hidden_size=8,
+                                                 output_size=4),
+                     bptt_chunk="auto")
+    init_p, init_s, step = make_task_train_step(spec, lr=1e-3)
+    key = jax.random.PRNGKey(0)
+    params = init_p(key)
+    from repro.optim import optimizers as opt
+    opt_state = opt.rmsprop_init(params)
+    xs = jax.random.normal(key, (1, T, 4))
+    ts = (jax.random.uniform(jax.random.PRNGKey(1), (1, T, 4)) > 0.5
+          ).astype(jnp.float32)
+    ms = jnp.ones((1, T))
+    params, opt_state, l, err = jax.jit(step)(params, opt_state, xs, ts, ms)
+    assert np.isfinite(float(l)), f"loss not finite at T={T}"
