@@ -1,0 +1,151 @@
+"""Per-step collective traffic of the mesh-native sparse memory path vs the
+GSPMD slot-sharded control, from the compiled HLO (launch/hlo_cost.py), on a
+forced 8-device host-platform mesh.
+
+The claim under test (docs/sharding.md, the paper's O(K·W) asymptotics at
+scale-out): a compiled `sam_step` on the mesh-native path moves O(B·K·W)
+collective bytes per step — the (B, H, K) score+index all-gather of the
+K-merge plus the (B, H, K, W) winner-row psum — **independent of N**. The
+positive control is the pre-mesh-native route (a slot-sharded legacy state
+handed to GSPMD, whose dynamically-indexed sweep/gather forces O(N)
+collective terms); its bytes must grow with N, or the guard itself is dead.
+
+Both properties are asserted here and recorded to
+``experiments/bench/BENCH_shard.json``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_shard [--quick]
+"""
+from __future__ import annotations
+
+# CLI runs force the 8-device host platform; this MUST precede any jax
+# import (jax locks the device count on first init) and MUST NOT fire for
+# mere importers (tests/test_mesh_parity.py borrows the compile helpers
+# under its own externally-set XLA_FLAGS — mutating the env at import time
+# would silently flip the whole importing process to 8 fake devices).
+import os
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks.common import row
+from repro.core import sam as sam_lib
+from repro.core.types import ControllerConfig, MemoryConfig
+from repro.distributed import mem_shard
+from repro.launch.hlo_cost import HloCostModel
+
+OUT_DIR = "experiments/bench"
+OUT_PATH = os.path.join(OUT_DIR, "BENCH_shard.json")
+
+B, W, H, K, D = 2, 16, 2, 4, 6
+CTL = ControllerConfig(D, 16, D)
+
+
+def _cfg(num_slots: int) -> sam_lib.SAMConfig:
+    return sam_lib.SAMConfig(
+        MemoryConfig(num_slots=num_slots, word_size=W, num_heads=H, k=K),
+        CTL)
+
+
+def _collective_record(hlo_text: str) -> dict:
+    cost = HloCostModel(hlo_text).cost()
+    return {
+        "collectives": cost.coll,
+        "bytes_total": sum(v["bytes"] for v in cost.coll.values()),
+        "moved_total": cost.coll_moved,
+    }
+
+
+def compile_mesh_step(mesh, num_slots: int) -> dict:
+    cfg = _cfg(num_slots)
+    with mem_shard.memory_mesh(mesh, num_slots):
+        params = sam_lib.init_params(jax.random.PRNGKey(0), cfg)
+        state = mem_shard.place_state(sam_lib.init_state(B, cfg))
+        step = jax.jit(lambda p, s, x: sam_lib.sam_step(p, cfg, s, x))
+        hlo = step.lower(params, state, jnp.zeros((B, D))).compile().as_text()
+    rec = _collective_record(hlo)
+    rec.update(path="mesh", N=num_slots)
+    return rec
+
+
+def compile_gspmd_control(mesh, num_slots: int) -> dict:
+    """The retired route: legacy (B, N, W) state slot-sharded through
+    GSPMD. Kept compilable on purpose — it is this bench's positive
+    control for O(N) collective traffic."""
+    cfg = _cfg(num_slots)
+    params = sam_lib.init_params(jax.random.PRNGKey(0), cfg)
+    s = sam_lib.init_state(B, cfg)
+    s = s._replace(memory=s.memory[:, :num_slots],
+                   last_access=s.last_access[:, :num_slots])
+    sh = jax.tree.map(lambda l: NamedSharding(mesh, P()), s)
+    sh = sh._replace(memory=NamedSharding(mesh, P(None, "model", None)),
+                     last_access=NamedSharding(mesh, P(None, "model")))
+    step = jax.jit(lambda p, st, x: sam_lib.sam_step(p, cfg, st, x))
+    hlo = step.lower(params, jax.device_put(s, sh),
+                     jnp.zeros((B, D))).compile().as_text()
+    rec = _collective_record(hlo)
+    rec.update(path="gspmd_control", N=num_slots)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller N sweep (CI smoke)")
+    args = ap.parse_args(argv)
+    sizes = [256, 1024] if args.quick else [256, 1024, 4096]
+
+    mesh = jax.make_mesh((8,), ("model",))
+    results = []
+    for n in sizes:
+        for rec in (compile_mesh_step(mesh, n),
+                    compile_gspmd_control(mesh, n)):
+            results.append(rec)
+            row(f"shard/{rec['path']}/N={n}", 0.0,
+                f"{rec['bytes_total']:.0f}B collective")
+
+    by = {(r["path"], r["N"]): r["bytes_total"] for r in results}
+    n_lo, n_hi = sizes[0], sizes[-1]
+    mesh_lo, mesh_hi = by[("mesh", n_lo)], by[("mesh", n_hi)]
+    ctrl_lo, ctrl_hi = by[("gspmd_control", n_lo)], by[("gspmd_control", n_hi)]
+    row("shard/mesh/N_scaling", 0.0, f"{mesh_hi / max(mesh_lo, 1):.2f}x "
+        f"over {n_hi // n_lo}x slots")
+    row("shard/control/N_scaling", 0.0, f"{ctrl_hi / max(ctrl_lo, 1):.2f}x "
+        f"over {n_hi // n_lo}x slots")
+    # O(B·K·W): mesh-native traffic flat in N, far below the O(N) control,
+    # and no single collective anywhere near the full memory buffer.
+    assert mesh_hi <= mesh_lo * 1.25, \
+        f"mesh collective bytes grew with N: {mesh_lo} -> {mesh_hi}"
+    assert ctrl_hi >= ctrl_lo * 2, \
+        f"positive control did not scale with N: {ctrl_lo} -> {ctrl_hi}"
+    assert mesh_hi < ctrl_hi / 4, (mesh_hi, ctrl_hi)
+    full_buffer = B * n_hi * W * 4
+    biggest = max((v["bytes"] / max(v["count"], 1)
+                   for r in results if r["path"] == "mesh"
+                   for v in r["collectives"].values()), default=0.0)
+    assert biggest < full_buffer / 8, \
+        f"a mesh-path collective moves {biggest}B (~full buffer {full_buffer}B)"
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    record = {
+        "bench": "shard",
+        "device": jax.devices()[0].platform,
+        "devices": jax.device_count(),
+        "jax": jax.__version__,
+        "shapes": {"B": B, "W": W, "H": H, "K": K},
+        "results": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {OUT_PATH} ({len(results)} rows)")
+    return record
+
+
+if __name__ == "__main__":
+    main()

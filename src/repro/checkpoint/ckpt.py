@@ -12,6 +12,15 @@ Fault-tolerance contract (DESIGN.md §5):
   * arrays are stored per-leaf as ``.npy`` plus a JSON manifest of the tree
     structure — on restore with a *different mesh*, leaves are re-sharded by
     ``distributed/elastic.py`` (elastic scaling);
+  * mem-shard layout (docs/sharding.md): a state saved under a
+    ``mem_shard.memory_mesh`` context carries its memory/usage leaves in
+    the slot-sharded layout (N + shards rows, one scratch row per shard).
+    ``save_checkpoint(..., mem_layout=(num_slots, shards))`` records that
+    layout in the manifest; on restore, a migratable leaf whose row count
+    differs from the template is re-laid-out on the host
+    (``mem_shard.np_relayout``) to the template's shard count (derived as
+    ``template_rows - num_slots``) — so save-on-mesh-A / restore-on-mesh-B
+    (or on a single device) round-trips bit-exactly on the logical rows;
   * scratch-row migration shim: checkpoints written before the persistent
     (B, N+1, W) memory layout (core/types.py) predate the manifest
     ``format`` field (now 2) and hold (B, N, W)/(B, N) memory and usage
@@ -52,8 +61,19 @@ def _flatten_with_paths(tree):
 MANIFEST_FORMAT = 2
 
 
-def save_checkpoint(directory: str, step: int, tree) -> str:
-    """Blocking atomic save. Returns the committed path."""
+def save_checkpoint(directory: str, step: int, tree,
+                    mem_layout: tuple = None) -> str:
+    """Blocking atomic save. Returns the committed path.
+
+    ``mem_layout=(num_slots, shards)`` records the mem-shard layout of the
+    tree's memory/usage leaves (module docstring) so a restore on a
+    different mesh can re-lay them out. When omitted, the active
+    `mem_shard.memory_mesh` context (if any, on the *calling* thread) is
+    recorded automatically — so every save made under the mesh-native path
+    stays cross-mesh restorable, whichever code path wrote it."""
+    if mem_layout is None:
+        from repro.distributed import mem_shard
+        mem_layout = mem_shard.ckpt_layout()
     os.makedirs(directory, exist_ok=True)
     tmp = os.path.join(directory, f"tmp_{step}")
     final = os.path.join(directory, f"step_{step}")
@@ -62,6 +82,10 @@ def save_checkpoint(directory: str, step: int, tree) -> str:
     os.makedirs(tmp)
     paths, leaves, _ = _flatten_with_paths(tree)
     manifest = {"step": step, "format": MANIFEST_FORMAT, "leaves": []}
+    if mem_layout is not None:
+        num_slots, shards = mem_layout
+        manifest["mem_layout"] = {"num_slots": int(num_slots),
+                                  "shards": int(shards)}
     for i, (p, leaf) in enumerate(zip(paths, leaves)):
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
@@ -87,11 +111,15 @@ def latest_step(directory: str):
     return max(steps) if steps else None
 
 
-# Leaves the scratch-row migration shim may pad: the memory buffer and the
-# usage table, addressed by their field name (the last component of the
-# manifest path). Any other leaf with a shape mismatch still raises — a
-# head-count or slot-count config change must not be silently "migrated".
-_MIGRATABLE_LEAVES = frozenset({"memory", "last_access", "usage"})
+# Leaves the scratch-row migration / mem-shard re-layout shims may touch:
+# the memory buffer and the usage table, addressed by their field name (the
+# last component of the manifest path). The set is `core.types.SLOT_LEAVES`
+# — the same single source the live layout transforms in
+# distributed/mem_shard.py key on, so the checkpoint path and the in-memory
+# path cannot drift apart. Any other leaf with a shape mismatch still
+# raises — a head-count or slot-count config change must not be silently
+# "migrated".
+from repro.core.types import SLOT_LEAVES as _MIGRATABLE_LEAVES
 
 
 def _migrate_scratch_row(arr: np.ndarray, want_shape) -> np.ndarray:
@@ -118,8 +146,34 @@ def _migrate_scratch_row(arr: np.ndarray, want_shape) -> np.ndarray:
     return np.pad(arr, pad, constant_values=fill)
 
 
+def _relayout_mem_shard(arr: np.ndarray, want_shape, layout: dict,
+                        path: str) -> np.ndarray:
+    """Mem-shard layout shim: re-lay-out a slot-sharded memory/usage leaf
+    (manifest-recorded ``mem_layout``) to the shard count the template's
+    row dimension implies (``template_rows - num_slots``; 1 = canonical
+    single-device layout). Only the recorded layout is trusted — shapes
+    alone cannot distinguish a mesh change from a slot-count config change,
+    which must keep raising."""
+    from repro.distributed.mem_shard import np_relayout
+    want = tuple(want_shape)
+    N, s_from = int(layout["num_slots"]), int(layout["shards"])
+    s_to = want[1] - N if len(want) >= 2 else 0
+    ok = (arr.ndim == len(want) and arr.ndim >= 2
+          and want[0] == arr.shape[0] and want[2:] == arr.shape[2:]
+          and arr.shape[1] == N + s_from
+          and s_to >= 1 and N % s_to == 0)
+    if not ok:
+        raise ValueError(
+            f"checkpoint leaf {path!r} has shape {arr.shape} under recorded "
+            f"mem_layout (num_slots={N}, shards={s_from}); template shape "
+            f"{want} is not a valid re-layout target (rows must be "
+            f"num_slots + shards for some shard count dividing num_slots)")
+    return np_relayout(arr, N, s_from, s_to)
+
+
 def restore_checkpoint(directory: str, template, step: int = None,
-                       shardings=None, fill_missing: bool = False):
+                       shardings=None, fill_missing: bool = False,
+                       expect_num_slots: int = None):
     """Restore into the structure of `template`. `shardings` (optional pytree
     of NamedShardings) re-shards each leaf — this is how elastic re-scaling
     restores onto a different mesh. Legacy pre-scratch-row checkpoints are
@@ -131,7 +185,15 @@ def restore_checkpoint(directory: str, template, step: int = None,
     state rode along, e.g. params/opt-only trees) load unchanged into the
     extended {params, opt, carry, loop} template. Every leaf the checkpoint
     *does* carry must still match a template path — an unknown leaf raises,
-    so a renamed field cannot be silently dropped."""
+    so a renamed field cannot be silently dropped.
+
+    ``expect_num_slots`` pins the memory size the caller's config declares:
+    a checkpoint whose recorded ``mem_layout`` disagrees raises instead of
+    re-laying-out. Without it, a slot-count config change whose new row
+    count *happens* to parse as a valid re-layout of the recorded
+    num_slots (e.g. N: 64 → 65 reads as 64 + 2 shards) cannot be told
+    apart from a mesh change by shapes alone — callers that know their
+    config (the streaming trainer does) should always pass it."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -156,6 +218,14 @@ def restore_checkpoint(directory: str, template, step: int = None,
     s_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
                 if shardings is not None else [None] * len(t_leaves))
     migratable = manifest.get("format", 1) < MANIFEST_FORMAT
+    mem_layout = manifest.get("mem_layout")
+    if (expect_num_slots is not None and mem_layout is not None
+            and int(mem_layout["num_slots"]) != int(expect_num_slots)):
+        raise ValueError(
+            f"checkpoint was saved with num_slots="
+            f"{mem_layout['num_slots']}, caller expects {expect_num_slots} "
+            f"— a slot-count config change cannot be restored as a mesh "
+            f"re-layout")
     for entry, tmpl, sh in zip(entries, t_leaves, s_leaves):
         if entry is None:            # fill_missing: keep the template value
             leaves.append(jax.device_put(tmpl, sh) if sh is not None
@@ -166,14 +236,34 @@ def restore_checkpoint(directory: str, template, step: int = None,
             # Path components render as ".memory" (GetAttrKey) or "memory"
             # (dict key) depending on the container — compare field names.
             leaf_name = entry["path"].rsplit("/", 1)[-1].lstrip(".")
-            if not migratable or leaf_name not in _MIGRATABLE_LEAVES:
+            if leaf_name in _MIGRATABLE_LEAVES and mem_layout is not None:
+                # Cross-mesh restore: re-layout to the template's shard
+                # count (manifest records the saved layout).
+                arr = _relayout_mem_shard(arr, tmpl.shape, mem_layout,
+                                          entry["path"])
+            elif (leaf_name in _MIGRATABLE_LEAVES
+                  and expect_num_slots is not None and arr.ndim >= 2
+                  and arr.shape[1] == int(expect_num_slots) + 1):
+                # Pre-mem-layout checkpoint upgrading onto a mesh: the
+                # manifest records no layout, but the caller's declared
+                # num_slots pins it — rows == N+1 is unambiguously the
+                # canonical (1-shard) layout for that config, so the
+                # re-layout to the template's shard count is safe. Without
+                # expect_num_slots the mismatch keeps raising below.
+                arr = _relayout_mem_shard(
+                    arr, tmpl.shape,
+                    {"num_slots": int(expect_num_slots), "shards": 1},
+                    entry["path"])
+            elif migratable and leaf_name in _MIGRATABLE_LEAVES:
+                arr = _migrate_scratch_row(arr, tmpl.shape)
+            else:
                 raise ValueError(
                     f"checkpoint leaf {entry['path']!r} has shape "
                     f"{arr.shape}, template expects {tuple(tmpl.shape)} — "
                     f"scratch-row migration applies only to pre-format-"
-                    f"{MANIFEST_FORMAT} checkpoints and to "
-                    f"{sorted(_MIGRATABLE_LEAVES)} leaves")
-            arr = _migrate_scratch_row(arr, tmpl.shape)
+                    f"{MANIFEST_FORMAT} checkpoints, mem-shard re-layout "
+                    f"only to checkpoints with a recorded mem_layout, and "
+                    f"both only to {sorted(_MIGRATABLE_LEAVES)} leaves")
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:
@@ -184,9 +274,10 @@ def restore_checkpoint(directory: str, template, step: int = None,
 class AsyncCheckpointer:
     """Background-thread checkpoint writer (non-blocking step loop)."""
 
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, mem_layout: tuple = None):
         self.directory = directory
         self.keep = keep
+        self.mem_layout = mem_layout
         self._q: queue.Queue = queue.Queue(maxsize=2)
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
@@ -194,18 +285,28 @@ class AsyncCheckpointer:
 
     def save(self, step: int, tree):
         # Device→host copy happens here (synchronous, cheap vs step time);
-        # file I/O happens on the worker.
+        # file I/O happens on the worker. The memory_mesh layout is
+        # captured HERE, on the calling thread, at every save — the worker
+        # thread has no thread-local context, and a checkpointer is often
+        # constructed before the mesh context is entered; capturing at
+        # construction (or not at all) would silently drop the layout and
+        # leave the checkpoint unrestorable onto any other mesh shape.
+        mem_layout = self.mem_layout
+        if mem_layout is None:
+            from repro.distributed import mem_shard
+            mem_layout = mem_shard.ckpt_layout()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-        self._q.put((step, host_tree))
+        self._q.put((step, host_tree, mem_layout))
 
     def _run(self):
         while True:
             item = self._q.get()
             if item is None:
                 return
-            step, tree = item
+            step, tree, mem_layout = item
             try:
-                save_checkpoint(self.directory, step, tree)
+                save_checkpoint(self.directory, step, tree,
+                                mem_layout=mem_layout)
                 self._gc()
             except Exception as e:  # noqa: BLE001
                 self.errors.append(e)

@@ -64,6 +64,15 @@ def sparse_read_exact(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
                                jax.lax.stop_gradient(m), k, backend=backend,
                                valid_n=valid_n)
     else:
+        from repro.distributed import mem_shard
+        if mem_shard.route_ctx(m.shape[1]) is not None:
+            # A custom similarity has no shard-local/K-merge decomposition
+            # here; sweeping the sharded layout directly would score the
+            # per-shard scratch rows and emit layout-local positions that
+            # downstream gathers would misread as global indices.
+            raise NotImplementedError(
+                "sparse_read_exact with a custom sims_fn is not supported "
+                "on a slot-sharded memory buffer (mem_shard.memory_mesh)")
         mv = m if valid_n is None else m[:, :valid_n]
         sims = sims_fn(jax.lax.stop_gradient(q), jax.lax.stop_gradient(mv))
         _, idx = topk_from_sims(sims, k)                    # (B, H, K), no grads
@@ -94,10 +103,19 @@ def sparse_read_candidates(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
 
 
 def gather_rows(m: jax.Array, idx: jax.Array) -> jax.Array:
-    """m: (B, N, W), idx: (B, ...) -> (B, ..., W)."""
+    """m: (B, N, W), idx: (B, ...) -> (B, ..., W).
+
+    Under an active `mem_shard.memory_mesh` context a slot-sharded buffer
+    routes through the shard_map gather (owned-rows mask + psum, O(J·W)
+    collective) — a plain take_along_axis on a GSPMD-sharded buffer would
+    all-gather the full memory instead."""
+    from repro.distributed import mem_shard
     B = m.shape[0]
     flat = idx.reshape(B, -1)
-    rows = jnp.take_along_axis(m, flat[..., None], axis=1)
+    if (ctx := mem_shard.route_ctx(m.shape[1])) is not None:
+        rows = mem_shard.gather_rows_sharded(ctx, m, flat)
+    else:
+        rows = jnp.take_along_axis(m, flat[..., None], axis=1)
     return rows.reshape(idx.shape + (m.shape[-1],))
 
 
@@ -140,7 +158,12 @@ def update_last_access(last_access: jax.Array, idx: jax.Array, w: jax.Array,
                        step: jax.Array, delta: float) -> jax.Array:
     """SAM usage U^(2): record `step` for slots accessed with weight > δ.
 
-    last_access: (B, N) int32; idx: (B, J); w: (B, J)."""
+    last_access: (B, N) int32; idx: (B, J); w: (B, J). Slot-sharded usage
+    tables (mem_shard layout) stamp shard-locally under shard_map."""
+    from repro.distributed import mem_shard
+    if (ctx := mem_shard.route_ctx(last_access.shape[1])) is not None:
+        return mem_shard.update_last_access_sharded(ctx, last_access, idx,
+                                                    w, step, delta)
     B = last_access.shape[0]
     b = jnp.arange(B)[:, None]
     upd = jnp.where(w > delta, step, last_access[b, idx])

@@ -67,7 +67,14 @@ def ann_build(planes: jax.Array, memory: jax.Array, cfg: MemoryConfig,
     single-slot inserts (see `ann_insert`; beyond it, a chunk could land
     more rows in one bucket than the ring holds, making the duplicate-
     position scatter winner unspecified)."""
+    from repro.distributed import mem_shard
     B, rows, _ = memory.shape
+    if (ctx := mem_shard.route_ctx(rows)) is not None:
+        # Slot-sharded buffer: rebuild from the canonical view (the bulk
+        # rebuild is an offline/rare path; the per-step inserts stay sparse).
+        memory = mem_shard.from_shard_layout(memory, ctx.num_slots,
+                                             ctx.shards)
+        rows = memory.shape[1]
     N = cfg.num_slots if has_scratch_row(cfg.num_slots, rows) else rows
     J = max(1, min(chunk or cfg.lsh_bucket_size, N, cfg.lsh_bucket_size))
     state = ann_init(B, cfg)

@@ -30,6 +30,14 @@ implement this protocol to train through the same chunked engine.
 
 Cells are frozen dataclasses wrapping their (static, hashable) config, so
 they can key jit caches and close over `jax.custom_vjp` definitions.
+
+Mesh-native execution (docs/sharding.md): under a
+`mem_shard.memory_mesh` context, ``init_state`` builds the memory/usage
+buffers in the slot-sharded layout and every memory op inside ``step`` /
+``rollback`` / ``replay_step`` routes through the shard_map path
+automatically. ``state_sharding(state)`` returns the matching
+NamedSharding pytree (sharded slot rows, everything else replicated) for
+jit in/out shardings and device placement.
 """
 from __future__ import annotations
 
@@ -45,6 +53,7 @@ from repro.core import sam as sam_lib
 from repro.core.controller import linear, lstm_step
 from repro.core.sam import SAMConfig, _interface, apply_write
 from repro.core.types import SAMState, SparseRead, StepDeltas
+from repro.distributed import mem_shard
 
 
 @runtime_checkable
@@ -62,6 +71,14 @@ class MemoryCell(Protocol):
     def rollback(self, state, prev_small, deltas): ...
 
     def replay_step(self, params, state, x, deltas): ...
+
+
+def state_sharding(state):
+    """Shard-consistent NamedSharding pytree for a cell state: slot-sharded
+    memory/usage leaves on the active `mem_shard` context's mesh axis,
+    everything else replicated. None without an active distributed
+    context (single-device / replicated execution)."""
+    return mem_shard.state_shardings(state)
 
 
 # --------------------------------------------------------------------------
@@ -111,8 +128,11 @@ class SAMCell:
     def init_params(self, key):
         return sam_lib.init_params(key, self.cfg)
 
-    def init_state(self, batch: int):
-        return sam_lib.init_state(batch, self.cfg)
+    def init_state(self, batch: int, *, mem_shards=None):
+        return sam_lib.init_state(batch, self.cfg, mem_shards=mem_shards)
+
+    def state_sharding(self, state):
+        return state_sharding(state)
 
     def step(self, params, state, x, *, collect_deltas: bool = False):
         return sam_lib.sam_step(params, self.cfg, state, x,
@@ -158,8 +178,11 @@ class SDNCCell:
     def init_params(self, key):
         return dnc_lib.init_params(key, self.cfg)
 
-    def init_state(self, batch: int):
-        return dnc_lib.init_state(batch, self.cfg)
+    def init_state(self, batch: int, *, mem_shards=None):
+        return dnc_lib.init_state(batch, self.cfg, mem_shards=mem_shards)
+
+    def state_sharding(self, state):
+        return state_sharding(state)
 
     def step(self, params, state, x, *, collect_deltas: bool = False):
         return dnc_lib.dnc_step(params, self.cfg, state, x,

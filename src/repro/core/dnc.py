@@ -22,8 +22,9 @@ import jax.numpy as jnp
 from repro.core import addressing as addr
 from repro.core.controller import linear, linear_init, lstm_init, lstm_step, lstm_zero_state
 from repro.core.types import (ControllerConfig, LSTMState, MemoryConfig,
-                              SparseRead, has_scratch_row,
-                              init_scratch_last_access, init_scratch_memory)
+                              SparseRead, init_scratch_last_access,
+                              init_scratch_memory)
+from repro.distributed import mem_shard
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,7 +133,8 @@ def init_params(key, cfg: DNCConfig):
     }
 
 
-def init_state(batch: int, cfg: DNCConfig) -> DNCState:
+def init_state(batch: int, cfg: DNCConfig, *,
+               mem_shards: Optional[int] = None) -> DNCState:
     mem, ctl = cfg.memory, cfg.controller
     R, W, N, KL = mem.num_heads, mem.word_size, mem.num_slots, cfg.k_l
     J = R * mem.k + 1
@@ -143,10 +145,16 @@ def init_state(batch: int, cfg: DNCConfig) -> DNCState:
     if cfg.sparse:
         # SDNC carries the persistent scratch-row layout, like SAM: row N is
         # the kernels' duplicate-parking scratch row, its usage entry pinned
-        # so LRA selection can never pick it.
+        # so LRA selection can never pick it. Under a mem_shard context the
+        # memory and usage table are built slot-sharded (one scratch row per
+        # shard); the O(N·K_L) link matrices N_t/P_t stay replicated — slots
+        # are the O(N·W) scaling axis, the links ride along whole.
+        memory, usage = mem_shard.init_layout(
+            N, mem_shards, init_scratch_memory(batch, N, W),
+            init_scratch_last_access(batch, N))
         return DNCState(
-            memory=init_scratch_memory(batch, N, W),
-            usage=init_scratch_last_access(batch, N),
+            memory=memory,
+            usage=usage,
             read_w=jnp.zeros((batch,)),
             read=SparseRead(indices=jnp.zeros((batch, R, mem.k), jnp.int32),
                             weights=jnp.zeros((batch, R, mem.k)),
@@ -261,9 +269,8 @@ def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array,
 
     be = mem.backend
     N = mem.num_slots
-    padded = has_scratch_row(N, s.memory.shape[1])
-    valid_n = N if padded else None
-    scratch = N if padded else None
+    lay = mem_shard.memory_layout(N, s.memory.shape[1])
+    valid_n, scratch = lay.valid_n, lay.scratch_row
     # ---- sparse write, identical mechanism to SAM (Suppl. D.1) ----
     lra = addr.least_recently_accessed(s.usage, 1, backend=be,
                                        valid_n=valid_n)             # (B,1)
@@ -429,7 +436,7 @@ def sdnc_replay_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array,
     B = x.shape[0]
     be = mem.backend
     N = mem.num_slots
-    scratch = N if has_scratch_row(N, s.memory.shape[1]) else None
+    scratch = mem_shard.memory_layout(N, s.memory.shape[1]).scratch_row
 
     ctrl, h = lstm_step(params["lstm"], s.ctrl,
                         jnp.concatenate([x, s.read_words.reshape(B, -1)], -1))

@@ -23,8 +23,8 @@ from repro.core import ann as ann_lib
 from repro.core.controller import linear, linear_init, lstm_init, lstm_step, lstm_zero_state
 from repro.core.types import (ANNState, ControllerConfig, MemoryConfig,
                               SAMState, SparseRead, StepDeltas,
-                              has_scratch_row, init_scratch_last_access,
-                              init_scratch_memory)
+                              init_scratch_last_access, init_scratch_memory)
+from repro.distributed import mem_shard
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,13 +58,18 @@ def init_params(key, cfg: SAMConfig):
     return params
 
 
-def init_state(batch: int, cfg: SAMConfig, params=None) -> SAMState:
+def init_state(batch: int, cfg: SAMConfig, params=None, *,
+               mem_shards: Optional[int] = None) -> SAMState:
     mem, ctl = cfg.memory, cfg.controller
     H, K, W, N = mem.num_heads, mem.k, mem.word_size, mem.num_slots
     # Persistent scratch-row layout: row N is the kernels' write-scratch row
     # (never read; its last-access entry is pinned so LRA never picks it).
-    memory = init_scratch_memory(batch, N, W)
-    last_access = init_scratch_last_access(batch, N)
+    # Under a `mem_shard.memory_mesh` context (or explicit `mem_shards`) the
+    # buffers are built in the slot-sharded layout instead: one scratch row
+    # per shard, N + shards rows total (docs/sharding.md).
+    memory, last_access = mem_shard.init_layout(
+        N, mem_shards, init_scratch_memory(batch, N, W),
+        init_scratch_last_access(batch, N))
     read = SparseRead(
         indices=jnp.zeros((batch, H, K), jnp.int32),
         weights=jnp.zeros((batch, H, K)),
@@ -116,7 +121,7 @@ def apply_write(memory: jax.Array, write_idx_flat: jax.Array,
     B, H, _ = a.shape
     Kp1 = cfg.write_rows_per_head
     N = cfg.memory.num_slots
-    scratch = N if has_scratch_row(N, memory.shape[1]) else None
+    scratch = mem_shard.memory_layout(N, memory.shape[1]).scratch_row
     # Erase: zero LRA rows.
     zeros = jnp.zeros((B, H, memory.shape[-1]), memory.dtype)
     memory = addr.scatter_set_rows(memory, lra_idx, zeros, backend=backend)
@@ -136,13 +141,14 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
     H, K, N = mem.num_heads, mem.k, mem.num_slots
     B = x.shape[0]
     be = mem.backend
-    # Scratch-row layout detection: padded states (the default from
+    # Layout detection: canonical scratch-row states (the default from
     # `init_state`) sweep only the logical N rows and park scatter
-    # duplicates on row N in place; legacy (B, N, W) states still work via
-    # the transient-pad kernel path.
-    padded = has_scratch_row(N, state.memory.shape[1])
-    valid_n = N if padded else None
-    scratch = N if padded else None
+    # duplicates on row N in place; slot-sharded states (an active
+    # `mem_shard.memory_mesh` context) route every memory op through the
+    # shard_map path, which derives its own shard-local valid_n/scratch;
+    # legacy (B, N, W) states still work via the transient-pad kernel path.
+    lay = mem_shard.memory_layout(N, state.memory.shape[1])
+    valid_n, scratch = lay.valid_n, lay.scratch_row
 
     ctrl_in = jnp.concatenate([x, state.read.words.reshape(B, -1)], axis=-1)
     ctrl, h = lstm_step(params["lstm"], state.ctrl, ctrl_in)

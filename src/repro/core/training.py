@@ -214,7 +214,8 @@ def train_task_streaming(spec: ModelSpec, task: str, *, episodes: int = 4,
                          max_level: int = 8, bits: int = 8, lr: float = 1e-4,
                          seed: int = 0, curriculum: Curriculum = None,
                          ckpt_dir: str = None, ckpt_every: int = 0,
-                         stop_after_chunks: int = None, verbose: bool = False):
+                         stop_after_chunks: int = None, verbose: bool = False,
+                         mesh=None):
     """Stream long episodes through `make_streaming_train_step`, one
     optimizer update per `chunk` time steps, checkpointing
     {params, opt, carry, loop} at chunk boundaries.
@@ -225,25 +226,50 @@ def train_task_streaming(spec: ModelSpec, task: str, *, episodes: int = 4,
     (params/opt only, no loop state) load unchanged — the missing leaves
     fall back to the template via `restore_checkpoint(fill_missing=True)`.
     `stop_after_chunks` kills the loop mid-episode (crash injection for
-    tests)."""
+    tests).
+
+    ``mesh`` (e.g. from `launch.mesh.make_mesh_for`) runs the whole loop
+    under the mesh-native sparse memory path (docs/sharding.md): the
+    recurrent carry's memory/usage buffers are built and placed in the
+    slot-sharded layout over the mesh's "model" axis, every memory op in
+    the jitted chunk step runs through shard_map, and checkpoints record
+    the layout so a restore on a different mesh (or a single device)
+    re-lays the carry out automatically."""
     from repro.checkpoint import ckpt as ckpt_lib
+    from repro.distributed import mem_shard
+
+    if mesh is not None:
+        # Re-enter under the trace-time memory_mesh context: everything
+        # below — state init, jit tracing, checkpoint io — then sees the
+        # slot-sharded layout.
+        with mem_shard.memory_mesh(mesh, spec.memory.num_slots):
+            return train_task_streaming(
+                spec, task, episodes=episodes, chunk=chunk, batch=batch,
+                level=level, max_level=max_level, bits=bits, lr=lr,
+                seed=seed, curriculum=curriculum, ckpt_dir=ckpt_dir,
+                ckpt_every=ckpt_every, stop_after_chunks=stop_after_chunks,
+                verbose=verbose, mesh=None)
 
     task_fn = TASK_REGISTRY[task]
     init_p, init_s, chunk_step = make_streaming_train_step(spec, lr)
     params = init_p(jax.random.PRNGKey(seed))
     opt_state = opt.rmsprop_init(params)
-    carry = init_s(batch)
+    carry = mem_shard.place_state(init_s(batch))
+    mem_layout = (spec.memory.num_slots,
+                  mem_shard.default_shards(spec.memory.num_slots))
     loop = init_loop_state(curriculum.level if curriculum else level)
     jstep = jax.jit(chunk_step, donate_argnums=(0, 1, 2))
 
     if ckpt_dir:
         template = {"params": params, "opt": opt_state, "carry": carry,
                     "loop": loop}
-        restored, at = ckpt_lib.restore_checkpoint(ckpt_dir, template,
-                                                   fill_missing=True)
+        restored, at = ckpt_lib.restore_checkpoint(
+            ckpt_dir, template, fill_missing=True,
+            expect_num_slots=spec.memory.num_slots)
         if restored is not None:
             params, opt_state = restored["params"], restored["opt"]
             carry, loop = restored["carry"], restored["loop"]
+            carry = mem_shard.place_state(carry)
             if verbose:
                 print(f"  [resume] step {at} episode={int(loop.episode)} "
                       f"cursor={int(loop.cursor)}")
@@ -283,7 +309,8 @@ def train_task_streaming(spec: ModelSpec, task: str, *, episodes: int = 4,
             if ckpt_dir and ckpt_every and total % ckpt_every == 0:
                 ckpt_lib.save_checkpoint(
                     ckpt_dir, total, {"params": params, "opt": opt_state,
-                                      "carry": carry, "loop": loop})
+                                      "carry": carry, "loop": loop},
+                    mem_layout=mem_layout)
             if stop_after_chunks is not None and total >= stop_after_chunks:
                 return params, history
         # Episode boundary: advance the curriculum from the checkpointed
@@ -301,13 +328,14 @@ def train_task_streaming(spec: ModelSpec, task: str, *, episodes: int = 4,
             episode=jnp.asarray(ep + 1, jnp.int32),
             streak=jnp.asarray(curriculum._streak if curriculum else 0,
                                jnp.int32))
-        carry = init_s(batch)
+        carry = mem_shard.place_state(init_s(batch))
         if ckpt_dir and ckpt_every:
             # Persist the boundary too — the curriculum advance above must
             # survive a crash between episodes.
             ckpt_lib.save_checkpoint(
                 ckpt_dir, total, {"params": params, "opt": opt_state,
-                                  "carry": carry, "loop": loop})
+                                  "carry": carry, "loop": loop},
+                mem_layout=mem_layout)
         if verbose:
             print(f"  [{spec.kind}/{task}] episode {ep} done "
                   f"(err={ep_err if ep_err is not None else float('nan'):.3f})")

@@ -32,6 +32,13 @@ SCRATCH_ROWS = 1
 # `last_access` value pinned on the scratch row: int32 max, so the scratch
 # row can never win an LRA argmin even if a sweep forgets to exclude it.
 LA_SCRATCH = 2 ** 31 - 1
+# Field names of the slot-dimension state leaves — the single source for
+# every consumer that must recognize a memory/usage buffer structurally:
+# the mem-shard layout transforms and sharding specs (distributed/
+# mem_shard.py) and the checkpoint migration/re-layout shims
+# (checkpoint/ckpt.py). A new slot-sharded state field must be added HERE
+# so the live transforms and the checkpoint path cannot drift apart.
+SLOT_LEAVES = frozenset({"memory", "last_access", "usage"})
 
 
 def has_scratch_row(num_slots: int, buf_rows: int) -> bool:

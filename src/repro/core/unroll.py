@@ -36,6 +36,18 @@ logical rows (< N), so the rollback `scatter_set_rows` and the replay's
 write leave row N untouched — a cotangent entering through the final
 state's scratch row passes straight back to the initial state without
 mixing into any logical row.
+
+Mesh-native execution (docs/sharding.md): under a
+`mem_shard.memory_mesh` context the carried memory is the slot-sharded
+(B, N+S, W) buffer and every memory op inside the cell routes through
+shard_map; the engine itself only has to keep its *residual stacks* laid
+out consistently, which `mem_shard.constrain_state` does — the dense
+boundary-checkpoint stack of the chunked mode (one full state every C
+steps) is sharded exactly like the live state (its memory leaves put the
+slot-row dimension on the mesh axis), while the O(C·K·W) sparse delta
+stacks are explicitly replicated (they are index/row records every shard
+needs during rollback). This closes the multi-host remainder of the
+chunked engine: per-device checkpoint-stack memory is O(T/C · state/S).
 """
 from __future__ import annotations
 
@@ -48,6 +60,7 @@ import jax.numpy as jnp
 
 from repro.core.cell import SAMCell
 from repro.core.types import tree_bytes
+from repro.distributed import mem_shard
 
 
 # --------------------------------------------------------------------------
@@ -97,12 +110,14 @@ def unroll_naive(cell, params, state, xs):
 
 def _collect_scan(cell, params, state, xs):
     """Forward scan that also emits the per-step rollback residuals:
-    (residual_state(s_{t-1}), deltas_t) — O(K·W) per step."""
+    (residual_state(s_{t-1}), deltas_t) — O(K·W) per step. The stacked
+    residuals are explicitly replicated under a mem_shard context (sparse
+    index/row records every shard consumes during the rollback)."""
     def body(s, x):
         ns, y, deltas = cell.step(params, s, x, collect_deltas=True)
         return ns, (y, (cell.residual_state(s), deltas))
     state, (ys, res) = jax.lax.scan(body, state, xs)
-    return state, ys, res
+    return state, ys, mem_shard.constrain_state(res)
 
 
 # --------------------------------------------------------------------------
@@ -186,6 +201,11 @@ def make_chunked_unroll(cell):
             ns, ys = unroll_naive(cell, params, s, xseg)
             return ns, (ys, s)          # s = dense boundary checkpoint
         stateT, (ys, boundaries) = jax.lax.scan(seg, state0, xs)
+        # Shard the boundary-checkpoint stack like the live state: under a
+        # mem_shard context the stacked memory leaves (S_seg, B, N+S, W)
+        # put the slot-row dimension on the mesh axis, so the checkpoint
+        # stack costs O(T/C · state/S) per device, not O(T/C · state).
+        boundaries = mem_shard.constrain_state(boundaries)
         return (stateT, ys), (params, boundaries, xs)
 
     def bwd(residuals, ct):

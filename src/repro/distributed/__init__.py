@@ -1,2 +1,4 @@
-"""Distribution substrate: logical-axis sharding rules, collective helpers,
+"""Distribution substrate: logical-axis sharding rules, mesh-native
+slot-sharded sparse memory (`mem_shard` — shard_map read/write with
+O(K·W) per-step collectives, docs/sharding.md), collective helpers,
 fault tolerance, gradient compression, elastic re-sharding."""

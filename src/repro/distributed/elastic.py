@@ -3,7 +3,15 @@
 Checkpoints store plain host arrays (checkpoint/ckpt.py), so scaling a job
 up or down is: build the new mesh, derive new NamedShardings from the same
 logical-axis tree, and `device_put` each restored leaf with its new
-sharding. Batch sizes re-derive from the new data-parallel degree."""
+sharding. Batch sizes re-derive from the new data-parallel degree.
+
+Memory-carrying states need one extra move: the sparse memory's slot-
+sharded layout (distributed/mem_shard.py) bakes the shard count into the
+row dimension (N + S rows, one scratch row per shard), so changing the
+model-parallel degree means *re-laying-out* the memory/usage leaves, not
+just re-placing them — `relayout_memory_state` does that, and the
+checkpoint restore path (checkpoint/ckpt.py) applies the same conversion
+from the manifest's recorded layout."""
 from __future__ import annotations
 
 import jax
@@ -23,8 +31,34 @@ def reshard_tree(tree, axes_tree, new_mesh):
         return jax.tree.map(place, axes_tree, tree, is_leaf=is_axes)
 
 
+def relayout_memory_state(tree, num_slots: int, new_shards: int):
+    """Convert every slot-dimension leaf of a recurrent-state tree between
+    mem-shard layouts (current shard count inferred from the row dimension;
+    `new_shards=1` is the canonical single-device layout). Use together
+    with `reshard_tree`/`mem_shard.place_state` when a scale event changes
+    the model-parallel degree."""
+    from repro.distributed import mem_shard
+    return mem_shard.relayout_state(tree, num_slots, new_shards)
+
+
 def rescale_batch(global_batch: int, old_data_degree: int,
                   new_data_degree: int) -> int:
-    """Keep per-device batch constant across a scale event."""
-    per_dev = max(1, global_batch // old_data_degree)
+    """Keep per-device batch constant across a scale event.
+
+    Refuses a `global_batch` that does not actually divide across
+    `old_data_degree` devices: the old "best-effort" floor-division result
+    silently changed the global batch on a scale event, which desyncs the
+    streaming trainer's chunk cursor (episode data is keyed on batch
+    shape) — a scale event must be loud, not lossy."""
+    if old_data_degree < 1 or new_data_degree < 1:
+        raise ValueError(
+            f"data-parallel degrees must be >= 1, got "
+            f"{old_data_degree} -> {new_data_degree}")
+    if global_batch % old_data_degree:
+        raise ValueError(
+            f"global batch {global_batch} does not divide the old "
+            f"{old_data_degree}-way data-parallel layout — refusing to "
+            f"rescale (per-device batch would change and desync the "
+            f"streaming trainer's chunk cursor)")
+    per_dev = global_batch // old_data_degree
     return per_dev * new_data_degree

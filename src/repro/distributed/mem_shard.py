@@ -1,0 +1,547 @@
+"""Mesh-native sparse memory: `shard_map` read/write over slot-sharded memory.
+
+The GSPMD route for the sparse memory ops is a trap at scale: a dynamically
+indexed gather/scatter on a memory sharded over slots lowers to a per-step
+all-gather of the full (B, N, W) buffer — O(B·N·W) collective traffic that
+silently erases the paper's O(K·W) asymptotics. This module provides the
+mesh-native alternative: the memory shards over a mesh axis ("model") *by
+slots*, every O(N) sweep runs shard-locally through the ordinary kernel
+backend dispatch (`repro.kernels.ops` — ref/pallas stay untouched inside
+each shard), and the only cross-shard traffic is
+
+  * top-K / LRA selection: shard-local top-K over the local rows, then an
+    all-gather of (B, K) scores+indices and a replicated K-merge —
+    O(B·H·K) per step;
+  * reads of the K winning rows: each shard contributes the rows it owns
+    (others masked to zero) and a psum assembles the full (B, H, K, W)
+    words on every shard — O(B·H·K·W) per step;
+  * writes: none. (index, value) pairs route to their owning shard by
+    masking — each shard scatters only what it owns; non-owned entries
+    land on the shard's scratch row with zero weight.
+
+Per-step collective traffic is therefore O(B·K·W), never O(B·N·W)
+(asserted against the compiled HLO by benchmarks/bench_shard.py).
+
+Sharded scratch-row layout
+--------------------------
+The canonical single-device layout is a (B, N+1, W) buffer with one
+write-scratch row at N (core/types.py). N+1 is indivisible by any useful
+mesh axis, so the sharded layout gives **every shard its own scratch row**:
+
+    (B, N + S, W)  =  S blocks of (local_n + 1) rows,
+    block s = [rows s·local_n .. (s+1)·local_n) , shard-s scratch row]
+
+with local_n = N/S. Total rows N+S = S·(local_n+1) divide the S-way axis
+exactly, each shard-local block is itself a valid (B, local_n+1, W)
+scratch-row buffer, and the existing kernels run on it unchanged with
+``valid_n=local_n`` / ``scratch_row=local_n``. The canonical layout is the
+S=1 special case. Indices stay *global* (in [0, N)) everywhere outside the
+shard bodies; row g lives on shard g // local_n at local row g % local_n.
+
+Activation
+----------
+    with mem_shard.memory_mesh(mesh, num_slots=N):
+        state = cell.init_state(batch)          # built in the sharded layout
+        ...jit / grad / scan as usual...
+
+The context is trace-time static. `repro.kernels.ops` and
+`repro.core.addressing` detect a buffer in the active context's sharded
+layout by shape and route through the `shard_map` paths below; everything
+else (canonical or legacy buffers, no context) takes the ordinary path.
+See docs/sharding.md.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.types import LA_SCRATCH, SCRATCH_ROWS, SLOT_LEAVES
+from repro.kernels import ops as _ops
+
+
+# --------------------------------------------------------------------------
+# Context
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MemShardCtx:
+    """Active slot-sharding of the sparse memory: N logical slots split into
+    `shards` contiguous blocks over mesh axis `axis`, one scratch row per
+    shard (module docstring)."""
+
+    mesh: Mesh
+    axis: str
+    num_slots: int
+    shards: int
+
+    @property
+    def local_n(self) -> int:
+        return self.num_slots // self.shards
+
+    @property
+    def sharded_rows(self) -> int:
+        """Row count of a buffer in this context's sharded layout."""
+        return self.num_slots + self.shards * SCRATCH_ROWS
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.ctx: Optional[MemShardCtx] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def memory_mesh(mesh: Mesh, num_slots: int, axis: str = "model"):
+    """Activate mesh-native sparse memory for `num_slots` slots sharded over
+    `axis` (falling back to 1 shard when the mesh lacks the axis — the S=1
+    layout is the canonical single-scratch-row buffer, so everything keeps
+    working, just unsharded)."""
+    shards = int(mesh.shape[axis]) if axis in mesh.axis_names else 1
+    if num_slots % shards:
+        raise ValueError(
+            f"num_slots={num_slots} not divisible by the {shards}-way "
+            f"{axis!r} mesh axis — slot sharding needs equal blocks")
+    ctx = MemShardCtx(mesh=mesh, axis=axis, num_slots=num_slots,
+                      shards=shards)
+    old = _CTX.ctx
+    _CTX.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _CTX.ctx = old
+
+
+def current() -> Optional[MemShardCtx]:
+    return _CTX.ctx
+
+
+def route_ctx(buf_rows: int) -> Optional[MemShardCtx]:
+    """The active context, iff a buffer with `buf_rows` rows is in its
+    sharded layout and the layout is actually distributed (S > 1; the S=1
+    layout is canonical and takes the ordinary kernel path)."""
+    ctx = _CTX.ctx
+    if ctx is not None and ctx.shards > 1 and buf_rows == ctx.sharded_rows:
+        return ctx
+    return None
+
+
+def default_shards(num_slots: int) -> int:
+    """Shard count `init_state` should build for: the active context's,
+    when it matches this memory size."""
+    ctx = _CTX.ctx
+    if ctx is not None and ctx.num_slots == num_slots:
+        return ctx.shards
+    return 1
+
+
+def init_layout(num_slots: int, mem_shards: Optional[int], *bufs):
+    """Apply the shard layout to freshly-initialized canonical buffers —
+    the single `init_state` helper shared by SAM, the SDNC, and the LM
+    memory layer. Resolves the shard count (explicit ``mem_shards`` beats
+    the active context's default) and re-layouts each buffer when actually
+    sharded; S=1 returns the canonical buffers unchanged."""
+    shards = default_shards(num_slots) if mem_shards is None else mem_shards
+    if shards > 1:
+        bufs = tuple(to_shard_layout(b, num_slots, shards) for b in bufs)
+    return bufs if len(bufs) != 1 else bufs[0]
+
+
+class MemLayout(NamedTuple):
+    """Resolved layout of a memory/usage buffer, as the step functions
+    consume it: `valid_n`/`scratch_row` for the ordinary kernel dispatch
+    (None on the mesh route, which derives its own local values)."""
+
+    kind: str                       # "mesh" | "canonical" | "legacy"
+    valid_n: Optional[int]
+    scratch_row: Optional[int]
+    ctx: Optional[MemShardCtx]
+
+
+def memory_layout(num_slots: int, buf_rows: int) -> MemLayout:
+    """Classify a buffer with `buf_rows` rows for a logical memory of
+    `num_slots` slots. Raises on an unrecognized row count — a sharded
+    buffer used outside its `memory_mesh` context must fail loudly, not
+    sweep the per-shard scratch rows as if they were logical slots."""
+    ctx = route_ctx(buf_rows)
+    if ctx is not None and ctx.num_slots == num_slots:
+        return MemLayout("mesh", None, None, ctx)
+    if buf_rows == num_slots + SCRATCH_ROWS:
+        return MemLayout("canonical", num_slots, num_slots, None)
+    if buf_rows == num_slots:
+        return MemLayout("legacy", None, None, None)
+    raise ValueError(
+        f"memory buffer with {buf_rows} rows matches no known layout for "
+        f"num_slots={num_slots}: expected {num_slots} (legacy), "
+        f"{num_slots + SCRATCH_ROWS} (canonical scratch-row), or an active "
+        f"mem_shard.memory_mesh() context whose sharded layout has "
+        f"N + shards rows")
+
+
+# --------------------------------------------------------------------------
+# Layout conversion (canonical (B, N+1, ...) <-> sharded (B, N+S, ...))
+# --------------------------------------------------------------------------
+
+def _fill_value(dtype) -> int:
+    return LA_SCRATCH if jnp.issubdtype(jnp.dtype(dtype), jnp.integer) else 0
+
+
+def to_shard_layout(x, num_slots: int, shards: int):
+    """Re-layout a canonical (B, N+1, ...) — or legacy (B, N, ...) — buffer
+    into the (B, N+S, ...) sharded layout. Scratch rows are (re)initialized
+    (0 for float memory, `LA_SCRATCH` for integer usage tables): scratch
+    contents are meaningless by contract, so none are preserved."""
+    N, S = num_slots, shards
+    B, tail = x.shape[0], x.shape[2:]
+    blocks = x[:, :N].reshape((B, S, N // S) + tail)
+    fill = jnp.full((B, S, SCRATCH_ROWS) + tail, _fill_value(x.dtype),
+                    x.dtype)
+    return jnp.concatenate([blocks, fill], axis=2).reshape(
+        (B, N + S * SCRATCH_ROWS) + tail)
+
+
+def from_shard_layout(x, num_slots: int, shards: int):
+    """Inverse of `to_shard_layout`: back to the canonical (B, N+1, ...)
+    layout (scratch row freshly initialized)."""
+    N, S = num_slots, shards
+    B, tail = x.shape[0], x.shape[2:]
+    blocks = x.reshape((B, S, N // S + SCRATCH_ROWS) + tail)
+    logical = blocks[:, :, :N // S].reshape((B, N) + tail)
+    fill = jnp.full((B, SCRATCH_ROWS) + tail, _fill_value(x.dtype), x.dtype)
+    return jnp.concatenate([logical, fill], axis=1)
+
+
+def np_relayout(arr: np.ndarray, num_slots: int, from_shards: int,
+                to_shards: int) -> np.ndarray:
+    """Host-side (numpy) layout conversion between shard counts — the
+    checkpoint restore path (checkpoint/ckpt.py) re-layouts saved memory
+    leaves with this, so a checkpoint saved on mesh A restores on mesh B
+    (or on a single device: to_shards=1 is the canonical layout)."""
+    N = num_slots
+    for s in (from_shards, to_shards):
+        if s < 1 or N % s:
+            raise ValueError(f"invalid shard count {s} for num_slots={N}")
+    B, tail = arr.shape[0], arr.shape[2:]
+    fill = LA_SCRATCH if np.issubdtype(arr.dtype, np.integer) else 0
+    blocks = arr.reshape((B, from_shards, N // from_shards + SCRATCH_ROWS)
+                         + tail)
+    logical = blocks[:, :, :N // from_shards].reshape((B, N) + tail)
+    out_blocks = logical.reshape((B, to_shards, N // to_shards) + tail)
+    pad = np.full((B, to_shards, SCRATCH_ROWS) + tail, fill, arr.dtype)
+    return np.concatenate([out_blocks, pad], axis=2).reshape(
+        (B, N + to_shards * SCRATCH_ROWS) + tail)
+
+
+# Layout transforms and sharding specs key on the *field name and dim
+# position* of the slot leaves (`core.types.SLOT_LEAVES` — the same single
+# set the checkpoint migration shims trust), never on a bare size match: a
+# controller hidden width that happens to equal N+1 (or a segment count
+# equal to N+S) must not be mistaken for a memory buffer.
+
+def _leaf_name(path) -> str:
+    if not path:
+        return ""
+    k = path[-1]
+    return str(getattr(k, "name", getattr(k, "key", getattr(k, "idx", k))))
+
+
+def _slot_dim(name: str, leaf) -> Optional[int]:
+    """Dim index of the slot rows for a named state leaf: -2 for the memory
+    buffer ((..., rows, W)), -1 for the usage table ((..., rows)). None for
+    anything that is not a slot-dimension leaf (`SLOT_LEAVES`)."""
+    if name not in SLOT_LEAVES or not hasattr(leaf, "ndim"):
+        return None
+    if name == "memory":
+        return leaf.ndim - 2 if leaf.ndim >= 2 else None
+    return leaf.ndim - 1 if leaf.ndim >= 1 else None
+
+
+def _map_slot_leaves(tree, fn):
+    """tree_map that hands `fn(dim, leaf)` only the named slot leaves (dim =
+    their slot-rows axis); everything else passes through `fn(None, leaf)`."""
+    def visit(path, leaf):
+        return fn(_slot_dim(_leaf_name(path), leaf), leaf)
+    return jax.tree_util.tree_map_with_path(visit, tree)
+
+
+def to_shard_state(tree, ctx: Optional[MemShardCtx] = None):
+    """Re-layout the named slot-dimension leaves (memory / last_access /
+    usage, identified by field name + dim position) of a recurrent-state
+    tree into the active context's sharded layout. Everything else
+    (controller state, indices, the SDNC's (B, N, K_L) link matrices —
+    replicated by design) passes through."""
+    ctx = ctx or current()
+    if ctx is None or ctx.shards == 1:
+        return tree
+    canon = ctx.num_slots + SCRATCH_ROWS
+
+    def conv(dim, leaf):
+        if dim is None or dim != 1 or leaf.shape[dim] != canon:
+            return leaf
+        return to_shard_layout(leaf, ctx.num_slots, ctx.shards)
+    return _map_slot_leaves(tree, conv)
+
+
+def from_shard_state(tree, ctx: Optional[MemShardCtx] = None):
+    """Inverse of `to_shard_state` (back to the canonical layout)."""
+    ctx = ctx or current()
+    if ctx is None or ctx.shards == 1:
+        return tree
+
+    def conv(dim, leaf):
+        if dim is None or dim != 1 or leaf.shape[dim] != ctx.sharded_rows:
+            return leaf
+        return from_shard_layout(leaf, ctx.num_slots, ctx.shards)
+    return _map_slot_leaves(tree, conv)
+
+
+def relayout_state(tree, num_slots: int, new_shards: int):
+    """Convert the named slot-dimension leaves between shard counts,
+    inferring the current count from the row dimension (rows = N + S).
+    Elastic scaling uses this to move a recurrent carry onto a mesh with a
+    different model degree (distributed/elastic.py)."""
+    def conv(dim, leaf):
+        if dim is None or dim != 1:
+            return leaf
+        s_from = leaf.shape[dim] - num_slots
+        if s_from < 1 or num_slots % s_from or s_from == new_shards:
+            return leaf
+        x = from_shard_layout(jnp.asarray(leaf), num_slots, s_from)
+        return to_shard_layout(x, num_slots, new_shards)
+    return _map_slot_leaves(tree, conv)
+
+
+# --------------------------------------------------------------------------
+# State specs ("shard-consistent state specs" for jit/device_put/constraints)
+# --------------------------------------------------------------------------
+
+def leaf_spec(ctx: MemShardCtx, dim: Optional[int], shape) -> P:
+    """PartitionSpec placing the mesh axis on `dim` — the slot-rows axis a
+    named slot leaf resolved to via `_slot_dim` (works for live state
+    leaves and for engine-stacked versions of them, e.g. the chunked
+    unroll's (S_seg, B, N+S, W) boundary-checkpoint stack, whose rows dim
+    is still ndim-2). Anything else — including a slot leaf whose row
+    count does not match the context's layout — is explicitly replicated."""
+    if dim is None or shape[dim] != ctx.sharded_rows:
+        return P()
+    return P(*(ctx.axis if i == dim else None for i in range(len(shape))))
+
+
+def state_shardings(tree, ctx: Optional[MemShardCtx] = None):
+    """NamedSharding pytree for a state tree: slot-sharded memory/usage
+    leaves (by field name + dim position) on the mesh axis, everything
+    else replicated. None without an active (distributed) context."""
+    ctx = ctx or current()
+    if ctx is None or ctx.shards == 1:
+        return None
+    return _map_slot_leaves(tree, lambda dim, leaf: NamedSharding(
+        ctx.mesh, leaf_spec(ctx, dim, leaf.shape)))
+
+
+def constrain_state(tree):
+    """`with_sharding_constraint` every leaf per `leaf_spec` — sharded
+    memory rows on the mesh axis, explicit replication elsewhere (this is
+    what keeps the chunked engine's O(C·K·W) delta stacks replicated and
+    its dense boundary checkpoints sharded like the live state). No-op
+    without an active distributed context."""
+    ctx = current()
+    if ctx is None or ctx.shards == 1:
+        return tree
+    return _map_slot_leaves(tree, lambda dim, leaf:
+                            jax.lax.with_sharding_constraint(
+                                leaf, NamedSharding(
+                                    ctx.mesh, leaf_spec(ctx, dim, leaf.shape))))
+
+
+def place_state(tree, ctx: Optional[MemShardCtx] = None):
+    """`device_put` a state tree with its shard-consistent shardings (no-op
+    without an active distributed context)."""
+    sh = state_shardings(tree, ctx)
+    return tree if sh is None else jax.device_put(tree, sh)
+
+
+def ckpt_layout(ctx: Optional[MemShardCtx] = None):
+    """(num_slots, shards) to record in a checkpoint manifest, or None."""
+    ctx = ctx or current()
+    return None if ctx is None else (ctx.num_slots, ctx.shards)
+
+
+# --------------------------------------------------------------------------
+# shard_map bodies
+# --------------------------------------------------------------------------
+#
+# Conventions: `mem`/`la` enter sharded over ctx.axis on the row dimension;
+# every other operand (queries, indices, weights, step) is replicated.
+# Indices crossing the boundary are global; inside a body, shard s owns
+# global rows [s·local_n, (s+1)·local_n) and its local scratch row is
+# local_n. Inner kernel calls use the caller's ``backend`` untouched, with
+# valid_n/scratch_row = local_n — exactly the canonical dispatch, one shard
+# at a time.
+
+def _smap(ctx, body, in_specs, out_specs):
+    return shard_map(body, mesh=ctx.mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def _mem_spec(ctx) -> P:
+    return P(None, ctx.axis, None)
+
+
+def _vec_spec(ctx) -> P:
+    return P(None, ctx.axis)
+
+
+def _concat_shards(x, axis_name: str):
+    """all_gather a (..., K) per-shard tensor into (..., S·K), shard-major —
+    so position order equals (shard, local rank) order, which is global-
+    index order for ties (each shard owns a contiguous ascending index
+    block and ranks ties by ascending index)."""
+    g = jax.lax.all_gather(x, axis_name)          # (S, ..., K)
+    g = jnp.moveaxis(g, 0, -2)                    # (..., S, K)
+    return g.reshape(g.shape[:-2] + (g.shape[-2] * g.shape[-1],))
+
+
+def _own_local(ctx, idx, s):
+    """(own mask, local index) for global indices on shard s; non-owned
+    entries route to the shard's scratch row."""
+    own = (idx // ctx.local_n) == s
+    lidx = jnp.where(own, idx - s * ctx.local_n, ctx.local_n)
+    return own, lidx
+
+
+def topk_read_sharded(ctx: MemShardCtx, q, mem, k: int, *, backend=None,
+                      block_n: int = 512):
+    """Mesh-native `ops.topk_read`: shard-local top-K over the local rows,
+    then a (B, H, K) score+index all-gather and a replicated K-merge.
+    Exactly matches the global oracle including tie order (see
+    `_concat_shards`). Returns (vals, idx) with *global* indices,
+    replicated."""
+    if k > ctx.local_n:
+        raise ValueError(
+            f"top-{k} read needs K <= N/shards = {ctx.local_n} candidates "
+            f"per shard")
+
+    def body(q, mem_l):
+        vals, lidx = _ops.topk_read(q, mem_l, k, backend=backend,
+                                    block_n=block_n, valid_n=ctx.local_n)
+        s = jax.lax.axis_index(ctx.axis)
+        gidx = lidx + s * ctx.local_n
+        av = _concat_shards(vals, ctx.axis)               # (B, H, S·K)
+        ai = _concat_shards(gidx, ctx.axis)
+        mvals, pos = jax.lax.top_k(av, k)
+        return mvals, jnp.take_along_axis(ai, pos, axis=-1)
+
+    return _smap(ctx, body, (P(), _mem_spec(ctx)), (P(), P()))(q, mem)
+
+
+def lra_topn_sharded(ctx: MemShardCtx, la, n: int, *, backend=None):
+    """Mesh-native `ops.lra_topn`: shard-local LRA top-n (kernel dispatch,
+    scratch entry excluded by valid_n), then an (B, n) staleness+index
+    all-gather and a replicated merge. Global indices, replicated."""
+    if n > ctx.local_n:
+        raise ValueError(
+            f"LRA top-{n} needs n <= N/shards = {ctx.local_n} per shard")
+
+    def body(la_l):
+        lidx = _ops.lra_topn(la_l, n, backend=backend, valid_n=ctx.local_n)
+        lv = jnp.take_along_axis(la_l, lidx, axis=1)
+        s = jax.lax.axis_index(ctx.axis)
+        av = _concat_shards(lv, ctx.axis)                 # (B, S·n)
+        ai = _concat_shards(lidx + s * ctx.local_n, ctx.axis)
+        _, pos = jax.lax.top_k(-av, n)
+        return jnp.take_along_axis(ai, pos, axis=-1)
+
+    return _smap(ctx, body, (_vec_spec(ctx),), P())(la)
+
+
+def usage_argmin_sharded(ctx: MemShardCtx, la, *, backend=None):
+    return lra_topn_sharded(ctx, la, 1, backend=backend)[:, 0]
+
+
+def gather_rows_sharded(ctx: MemShardCtx, mem, idx):
+    """Mesh-native row gather: each shard gathers the rows it owns (others
+    masked to zero) and a psum assembles the replicated (B, J, W) result —
+    O(B·J·W) collective, independent of N. Differentiable: the transpose
+    scatters cotangents back into the owning shard only."""
+
+    def body(mem_l, idx):
+        s = jax.lax.axis_index(ctx.axis)
+        own, lidx = _own_local(ctx, idx, s)
+        b = jnp.arange(mem_l.shape[0])[:, None]
+        rows = mem_l[b, lidx]
+        return jax.lax.psum(jnp.where(own[..., None], rows, 0.0), ctx.axis)
+
+    return _smap(ctx, body, (_mem_spec(ctx), P()), P())(mem, idx)
+
+
+def scatter_rows_sharded(ctx: MemShardCtx, mem, idx, rows, mode: str, *,
+                         backend=None):
+    """Mesh-native `ops.scatter_rows`: no collective at all — each shard
+    scatters the (index, row) pairs it owns through the ordinary kernel
+    dispatch (scratch_row=local_n); non-owned pairs land on the shard's
+    scratch row ('add' with the row masked to zero, so the scratch row and
+    its cotangent stay clean; 'set' values are irrelevant there by the
+    scratch contract)."""
+
+    def body(mem_l, idx, rows):
+        s = jax.lax.axis_index(ctx.axis)
+        own, lidx = _own_local(ctx, idx, s)
+        if mode == "add":
+            rows = jnp.where(own[..., None], rows, 0.0)
+        return _ops.scatter_rows(mem_l, lidx, rows, mode=mode,
+                                 backend=backend, scratch_row=ctx.local_n)
+
+    return _smap(ctx, body, (_mem_spec(ctx), P(), P()),
+                 _mem_spec(ctx))(mem, idx, rows)
+
+
+def sparse_write_update_sharded(ctx: MemShardCtx, mem, la, write_idx,
+                                write_w, a, lra_idx, step, *, delta: float,
+                                backend=None):
+    """Mesh-native fused SAM write: writes route to their owning shard by
+    masking (weight zeroed elsewhere), the LRA erase routes the same way,
+    and each shard runs the ordinary fused kernel on its local block — no
+    collective in the forward pass. The usage stamp is shard-local too
+    (zero-weight non-owned entries never exceed delta; the scratch entry is
+    pinned at LA_SCRATCH and scatter-max can never lower it)."""
+
+    def body(mem_l, la_l, widx, ww, a, lra, step):
+        s = jax.lax.axis_index(ctx.axis)
+        own_w, l_widx = _own_local(ctx, widx, s)
+        l_ww = jnp.where(own_w, ww, 0.0)
+        _, l_lra = _own_local(ctx, lra, s)
+        return _ops.sparse_write_update(
+            mem_l, la_l, l_widx, l_ww, a, l_lra, step, delta=delta,
+            backend=backend, scratch_row=ctx.local_n)
+
+    return _smap(ctx, body,
+                 (_mem_spec(ctx), _vec_spec(ctx), P(), P(), P(), P(), P()),
+                 (_mem_spec(ctx), _vec_spec(ctx)))(
+                     mem, la, write_idx, write_w, a, lra_idx, step)
+
+
+def update_last_access_sharded(ctx: MemShardCtx, la, idx, w, step,
+                               delta: float):
+    """Mesh-native read-side usage stamp (`addressing.update_last_access`):
+    shard-local scatter-max at the owned indices; non-owned entries route to
+    the pinned scratch entry, where max(LA_SCRATCH, step) is a no-op."""
+
+    def body(la_l, idx, w):
+        s = jax.lax.axis_index(ctx.axis)
+        _, lidx = _own_local(ctx, idx, s)
+        b = jnp.arange(la_l.shape[0])[:, None]
+        upd = jnp.where(w > delta, step, la_l[b, lidx])
+        return la_l.at[b, lidx].max(upd)
+
+    return _smap(ctx, body, (_vec_spec(ctx), P(), P()),
+                 _vec_spec(ctx))(la, idx, w)

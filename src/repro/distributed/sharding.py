@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -41,7 +42,15 @@ DEFAULT_RULES: tuple[tuple[str, object], ...] = (
     ("expert_cap", None),
     ("layers", None),                  # scanned layer dim
     ("kv_lora", None),
-    ("mem_slots", "model"),            # SAM memory slots: sharded over model
+    # SAM memory slots: sharded over model ONLY under the mesh-native
+    # shard_map path (distributed/mem_shard.py), whose slot-sharded layout
+    # (N + shards rows, one scratch row per shard) divides the axis exactly
+    # and keeps the sparse gathers/scatters shard-local. Without that
+    # context `_resolve` replicates with a warning: the (B, N+1, W)
+    # scratch-row buffer does not divide the model axis, and the old
+    # dynamically-indexed GSPMD sharding lowered to a full-buffer
+    # all-gather per step anyway (docs/sharding.md).
+    ("mem_slots", "model"),
     ("mem_word", None),
     ("state", None),
 )
@@ -73,10 +82,44 @@ def current_mesh() -> Optional[Mesh]:
     return _CTX.mesh
 
 
+_MEM_SLOTS_WARNED = False
+
+
+def _resolve_mem_slots(mesh: Mesh, dim_size: int):
+    """The "mem_slots" rule is gated on the mesh-native memory path: a dim
+    matching the active `mem_shard` context's slot-sharded layout shards
+    over the context axis (always divisible by construction); anything else
+    — in particular the canonical (B, N+1, W) scratch-row buffer, whose odd
+    row count the old rule handed to GSPMD to error on or pad silently —
+    replicates, with a one-time warning so the fallback is visible."""
+    global _MEM_SLOTS_WARNED
+    from repro.distributed import mem_shard
+    ctx = mem_shard.current()
+    # The resolving mesh must agree with the memory context's axis degree:
+    # a mixed composition (e.g. mesh_rules on a 16-way model mesh around a
+    # memory_mesh built 8-way) would hand GSPMD an N+8-row dim to shard 16
+    # ways — fall back to replication like every other non-dividing case.
+    if (ctx is not None and ctx.shards > 1 and dim_size == ctx.sharded_rows
+            and ctx.axis in mesh.axis_names
+            and int(mesh.shape[ctx.axis]) == ctx.shards):
+        return ctx.axis
+    if not _MEM_SLOTS_WARNED:
+        _MEM_SLOTS_WARNED = True
+        warnings.warn(
+            "mem_slots: replicating the memory-slot dimension — the "
+            "mesh-native sparse memory path (mem_shard.memory_mesh) is not "
+            "active for this buffer, and sharding a scratch-row buffer "
+            "through GSPMD would reintroduce a full-memory all-gather per "
+            "step (docs/sharding.md)", stacklevel=3)
+    return None
+
+
 def _resolve(logical: Optional[str], mesh: Mesh, dim_size: int):
     """Map one logical axis to mesh axes, dropping axes that don't divide."""
     if logical is None:
         return None
+    if logical == "mem_slots":
+        return _resolve_mem_slots(mesh, dim_size)
     phys = None
     for name, p in _CTX.rules:
         if name == logical:

@@ -38,6 +38,17 @@ Gradients: the Pallas kernels have no VJP of their own, so the mutating ops
 BPTT replay differentiate through them. The selection ops (`topk_read`,
 `lra_topn`, `usage_argmin`, `lsh_hash`) return integers or are used under
 `stop_gradient` and need no rule.
+
+Mesh-native route (docs/sharding.md): under an active
+`repro.distributed.mem_shard.memory_mesh` context, a buffer in the
+context's slot-sharded layout (N + shards rows, one scratch row per shard)
+routes through the `shard_map` implementations in `distributed/mem_shard.py`
+*before* any backend dispatch — inside each shard the op re-enters this
+module with the same ``backend`` and the shard-local
+``valid_n``/``scratch_row``, so ref/pallas backends and custom overrides
+run untouched per shard. The route is keyed on the row count, which only
+matches the whole-buffer shape (a shard-local block has N/S + 1 rows, never
+N + S), so the inner dispatch cannot recurse.
 """
 from __future__ import annotations
 
@@ -101,11 +112,27 @@ def _opt_kw(**kw):
     return {k: v for k, v in kw.items() if v is not None}
 
 
+def _mesh_route(buf_rows: int):
+    """The active mem-shard context when `buf_rows` matches its sharded
+    layout (module docstring), else None. Imported lazily: mem_shard
+    imports this module for the shard-local inner dispatch."""
+    from repro.distributed import mem_shard
+    return mem_shard.route_ctx(buf_rows)
+
+
 def topk_read(q, mem, k: int, *, backend: BackendSpec = None,
               block_n: int = 512, valid_n: int = None):
     """q: (B,H,W), mem: (B,N,W) -> (vals, idx) each (B,H,k), cosine
     similarity descending. ``valid_n`` restricts the sweep to the logical
     rows [0, valid_n) (scratch-row layout)."""
+    if (ctx := _mesh_route(mem.shape[1])) is not None:
+        from repro.distributed import mem_shard
+        if valid_n is not None:
+            raise ValueError("valid_n is meaningless on a slot-sharded "
+                             "buffer: the mesh route derives its own "
+                             "shard-local valid_n")
+        return mem_shard.topk_read_sharded(ctx, q, mem, k, backend=backend,
+                                           block_n=block_n)
     be = resolve(backend)
     if (impl := be.impl("topk_read")) is not None:
         if valid_n is not None and not _accepts_kw(impl, "valid_n"):
@@ -137,6 +164,14 @@ def usage_argmin(last_access, *, backend: BackendSpec = None,
                  block_n: int = 1024, valid_n: int = None):
     """last_access: (B, N) -> (B,) int32 argmin (lowest index on ties) over
     the logical rows [0, valid_n) (default: all)."""
+    if (ctx := _mesh_route(last_access.shape[1])) is not None:
+        from repro.distributed import mem_shard
+        if valid_n is not None:
+            raise ValueError("valid_n is meaningless on a slot-sharded "
+                             "buffer: the mesh route derives its own "
+                             "shard-local valid_n")
+        return mem_shard.usage_argmin_sharded(ctx, last_access,
+                                              backend=backend)
     be = resolve(backend)
     if (impl := be.impl("usage_argmin")) is not None:
         if valid_n is not None and not _accepts_kw(impl, "valid_n"):
@@ -156,6 +191,14 @@ def lra_topn(last_access, n: int, *, backend: BackendSpec = None,
     """last_access: (B, N) -> (B, n) int32 least-recently-accessed rows
     among the logical rows [0, valid_n) (default: all), most stale first
     (ties toward the lowest index)."""
+    if (ctx := _mesh_route(last_access.shape[1])) is not None:
+        from repro.distributed import mem_shard
+        if valid_n is not None:
+            raise ValueError("valid_n is meaningless on a slot-sharded "
+                             "buffer: the mesh route derives its own "
+                             "shard-local valid_n")
+        return mem_shard.lra_topn_sharded(ctx, last_access, n,
+                                          backend=backend)
     be = resolve(backend)
     if (impl := be.impl("lra_topn")) is not None:
         if valid_n is not None and not _accepts_kw(impl, "valid_n"):
@@ -186,6 +229,14 @@ def scatter_rows(mem, idx, rows, mode: str = "add", *,
     (sequential semantics, j ascending). ``scratch_row=N`` marks a
     persistent (B, N+1, W) scratch-row buffer: 'add' parks duplicates on
     row N in place instead of padding a transient row."""
+    if (ctx := _mesh_route(mem.shape[1])) is not None:
+        from repro.distributed import mem_shard
+        if scratch_row is not None:
+            raise ValueError("scratch_row is meaningless on a slot-sharded "
+                             "buffer: each shard parks on its own local "
+                             "scratch row")
+        return mem_shard.scatter_rows_sharded(ctx, mem, idx, rows, mode,
+                                              backend=backend)
     be = resolve(backend)
     if (impl := be.impl("scatter_rows")) is not None:
         if scratch_row is not None and not _accepts_kw(impl, "scratch_row"):
@@ -246,6 +297,16 @@ def sparse_write_update(mem, last_access, write_idx, write_w, a, lra_idx,
     The usage output is non-differentiable (the paper passes no gradients
     through U^(2)) and is explicitly detached so downstream integer scatter
     ops never see a tangent tracer."""
+    if (ctx := _mesh_route(mem.shape[1])) is not None:
+        from repro.distributed import mem_shard
+        if scratch_row is not None:
+            raise ValueError("scratch_row is meaningless on a slot-sharded "
+                             "buffer: each shard parks on its own local "
+                             "scratch row")
+        mem_out, la_out = mem_shard.sparse_write_update_sharded(
+            ctx, mem, last_access, write_idx, write_w, a, lra_idx, step,
+            delta=delta, backend=backend)
+        return mem_out, _detach_int(la_out)
     be = resolve(backend)
     if (impl := be.impl("sparse_write_update")) is not None:
         if scratch_row is not None and not _accepts_kw(impl, "scratch_row"):

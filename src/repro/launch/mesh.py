@@ -24,6 +24,27 @@ def make_mesh_for(devices: int, model_parallel: int = 16):
     return jax.make_mesh((devices // model, model), ("data", "model"))
 
 
+def make_memory_mesh(model_parallel: int = None):
+    """Mesh for the mesh-native sparse memory path (docs/sharding.md): all
+    visible devices on a (data, model) grid, model axis as large as
+    divisibility allows (default: every device — memory capacity, not
+    controller width, is the scaling axis). On a forced host platform
+    (XLA_FLAGS=--xla_force_host_platform_device_count=8) this is the
+    8-device validation mesh the parity tests and benchmarks run on.
+
+    An *explicit* ``model_parallel`` must divide the device count: the
+    caller asked for that degree, and silently halving it down (what the
+    best-effort `make_mesh_for` does for elastic scaling) could quietly
+    disable the memory sharding altogether."""
+    n = jax.device_count()
+    if model_parallel and n % model_parallel:
+        raise ValueError(
+            f"model_parallel={model_parallel} does not divide the "
+            f"{n} visible devices — pick a divisor (or omit it to use "
+            f"all devices on the model axis)")
+    return make_mesh_for(n, model_parallel if model_parallel else n)
+
+
 # TPU v5e hardware constants (per chip) for the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s

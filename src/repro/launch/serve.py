@@ -1,24 +1,45 @@
 """Batched serving driver: prefill a batch of prompts, then decode with a
-KV cache (ring-buffered for SWA archs, O(1) state for RWKV)."""
+KV cache (ring-buffered for SWA archs, O(1) state for RWKV).
+
+``mesh=`` (or ``--mesh-model N`` on the CLI) serves under a mesh from
+`launch/mesh.py`: logical-axis rules activate for the transformer stack
+and, for SAM-augmented archs, the external memory runs the mesh-native
+slot-sharded path (`mem_shard.memory_mesh`, docs/sharding.md) — the
+per-sequence memory state is built in the sharded layout and every
+read/write stays shard-local with O(K·W) collective traffic."""
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced as reduce_cfg
+from repro.distributed import mem_shard
+from repro.distributed.sharding import mesh_rules
 from repro.launch.steps import make_serve_step
 from repro.models import lm
 
 
 def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
           gen_len: int = 32, max_len: int = 128, use_reduced: bool = True,
-          seed: int = 0, greedy: bool = True):
+          seed: int = 0, greedy: bool = True, mesh=None):
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduce_cfg(cfg)
+    with contextlib.ExitStack() as stack:
+        if mesh is not None:
+            stack.enter_context(mesh_rules(mesh))
+            if cfg.memory is not None:
+                stack.enter_context(mem_shard.memory_mesh(
+                    mesh, cfg.memory.num_slots))
+        return _serve(cfg, batch=batch, prompt_len=prompt_len,
+                      gen_len=gen_len, max_len=max_len, seed=seed)
+
+
+def _serve(cfg, *, batch, prompt_len, gen_len, max_len, seed):
     key = jax.random.PRNGKey(seed)
     params = lm.init_params(key, cfg)
     serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
@@ -69,9 +90,17 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--mesh-model", type=int, default=0,
+                    help="serve under a (data, model) mesh with this model-"
+                         "parallel degree (0 = no mesh); SAM-augmented "
+                         "archs then run the mesh-native memory path")
     args = ap.parse_args()
+    mesh = None
+    if args.mesh_model:
+        from repro.launch.mesh import make_memory_mesh
+        mesh = make_memory_mesh(args.mesh_model)
     res = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                gen_len=args.gen_len)
+                gen_len=args.gen_len, mesh=mesh)
     print(f"generated {res['tokens'].shape} tokens; "
           f"prefill {res['prefill_s']:.2f}s, "
           f"decode {res['decode_tok_per_s']:.1f} tok/s")

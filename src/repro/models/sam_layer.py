@@ -7,8 +7,10 @@ content-based reads (§3.1) and sparse writes to {previously-read ∪ LRA}
 slots (§3.2), with the δ-thresholded last-access usage statistic. During
 training/prefill the sequence is processed in segments (one read+write per
 segment); during decode each token performs one read and writes on segment
-boundaries. Memory slots shard over the `model` mesh axis ("mem_slots" rule)
-so a 65k×128 memory adds only N·W/|model| bytes per device.
+boundaries. Under a `mem_shard.memory_mesh` context the memory slots shard
+over the `model` mesh axis (mesh-native shard_map path, docs/sharding.md)
+so a 65k×128 memory adds only ~N·W/|model| bytes per device with O(K·W)
+per-step collective traffic; without it the memory replicates.
 
 The segment loop trains through the generic sparse-rollback engine
 (`core/unroll.py`): `LMMemoryCell` implements the MemoryCell protocol, so
@@ -25,8 +27,9 @@ import jax.numpy as jnp
 
 from repro.core import addressing as addr
 from repro.core import unroll as unroll_lib
-from repro.core.types import (SCRATCH_ROWS, has_scratch_row,
-                              init_scratch_last_access, init_scratch_memory)
+from repro.core.types import (SCRATCH_ROWS, init_scratch_last_access,
+                              init_scratch_memory)
+from repro.distributed import mem_shard
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
 from repro.models.layers import init_from_defs, pdef
@@ -66,19 +69,25 @@ def memory_defs(cfg: ModelConfig):
 
 def memory_state_shapes(cfg: ModelConfig, batch: int):
     m = cfg.memory
+    rows = m.num_slots + SCRATCH_ROWS * mem_shard.default_shards(m.num_slots)
     return {
-        "memory": (batch, m.num_slots + SCRATCH_ROWS, m.word_size),
-        "last_access": (batch, m.num_slots + SCRATCH_ROWS),
+        "memory": (batch, rows, m.word_size),
+        "last_access": (batch, rows),
         "read_idx": (batch, m.num_heads, m.k),
         "read_w": (batch, m.num_heads, m.k),
     }
 
 
-def init_memory_state(cfg: ModelConfig, batch: int) -> MemoryState:
+def init_memory_state(cfg: ModelConfig, batch: int, *,
+                      mem_shards: int = None) -> MemoryState:
     m = cfg.memory
+    memory, last_access = mem_shard.init_layout(
+        m.num_slots, mem_shards,
+        init_scratch_memory(batch, m.num_slots, m.word_size),
+        init_scratch_last_access(batch, m.num_slots))
     return MemoryState(
-        memory=init_scratch_memory(batch, m.num_slots, m.word_size),
-        last_access=init_scratch_last_access(batch, m.num_slots),
+        memory=memory,
+        last_access=last_access,
         read_idx=jnp.zeros((batch, m.num_heads, m.k), jnp.int32),
         read_w=jnp.zeros((batch, m.num_heads, m.k)),
         step=jnp.zeros((), jnp.int32),
@@ -117,8 +126,8 @@ def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState,
     # ---- write (eq. 5): previously-read ∪ least-recently-accessed ----
     be = m.backend
     N = m.num_slots
-    padded = has_scratch_row(N, state.memory.shape[1])
-    valid_n = N if padded else None
+    lay = mem_shard.memory_layout(N, state.memory.shape[1])
+    valid_n = lay.valid_n
     step = state.step + 1
     lra = addr.least_recently_accessed(state.last_access, H, backend=be,
                                        valid_n=valid_n)
@@ -128,12 +137,12 @@ def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState,
         old_rows = addr.gather_rows(state.memory, widx_flat)
     memory, la = addr.sparse_write_update(
         state.memory, state.last_access, widx_flat, ww_flat, a, lra, step,
-        m.delta, backend=be, scratch_row=N if padded else None)
-    # Soft GSPMD constraint; with the scratch-row layout the slot dim is
-    # N+1, which no longer divides the model axis — GSPMD pads the odd
-    # scratch row onto the last shard (a one-row imbalance, not an error).
-    # If profiling ever shows the padding collective mattering, swap the
-    # "mem_slots" rule to None (replicate) via `mesh_rules` instead.
+        m.delta, backend=be, scratch_row=lay.scratch_row)
+    # Soft GSPMD constraint. Under the mesh-native path ("mesh" layout) the
+    # slot dim is N + shards and the "mem_slots" rule shards it exactly;
+    # otherwise the rule replicates (with a warning) — the old dynamically-
+    # indexed GSPMD sharding reintroduced a full-buffer all-gather per step
+    # (docs/sharding.md).
     memory = shard(memory, "batch", "mem_slots", "mem_word")
 
     # ---- sparse content read (§3.1) ----
@@ -165,7 +174,7 @@ def memory_replay(p, cfg: ModelConfig, pooled, state: MemoryState,
 
     be = m.backend
     N = m.num_slots
-    scratch = N if has_scratch_row(N, state.memory.shape[1]) else None
+    scratch = mem_shard.memory_layout(N, state.memory.shape[1]).scratch_row
     Kp1 = m.k + 1
     zeros = jnp.zeros((B, m.num_heads, state.memory.shape[-1]),
                       state.memory.dtype)
@@ -198,8 +207,11 @@ class LMMemoryCell:
     def init_params(self, key):
         return init_from_defs(key, memory_defs(self.cfg), jnp.float32)
 
-    def init_state(self, batch: int):
-        return init_memory_state(self.cfg, batch)
+    def init_state(self, batch: int, *, mem_shards=None):
+        return init_memory_state(self.cfg, batch, mem_shards=mem_shards)
+
+    def state_sharding(self, state):
+        return mem_shard.state_shardings(state)
 
     def step(self, params, state, pooled, *, collect_deltas: bool = False):
         return memory_access(params, self.cfg, pooled, state,
