@@ -10,7 +10,14 @@ positive control is the pre-mesh-native route (a slot-sharded legacy state
 handed to GSPMD, whose dynamically-indexed sweep/gather forces O(N)
 collective terms); its bytes must grow with N, or the guard itself is dead.
 
-Both properties are asserted here and recorded to
+LSH mode (the sharded ANN index, docs/sharding.md) gets its own rows: the
+sharded-index step's collective bytes must stay flat in N and strictly
+below the replicated-index positive control (which psum-gathers the full
+O(C·W) candidate rows per step), per-device bucket-table bytes must drop
+by exactly the shard factor vs the replicated control, and `ann_build` on
+a sharded buffer must compile with no O(N·W) all-gather.
+
+All properties are asserted here and recorded to
 ``experiments/bench/BENCH_shard.json``.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_shard [--quick]
@@ -45,11 +52,20 @@ OUT_PATH = os.path.join(OUT_DIR, "BENCH_shard.json")
 
 B, W, H, K, D = 2, 16, 2, 4, 6
 CTL = ControllerConfig(D, 16, D)
+SHARDS = 8
 
 
 def _cfg(num_slots: int) -> sam_lib.SAMConfig:
     return sam_lib.SAMConfig(
         MemoryConfig(num_slots=num_slots, word_size=W, num_heads=H, k=K),
+        CTL)
+
+
+def _lsh_cfg(num_slots: int) -> sam_lib.SAMConfig:
+    return sam_lib.SAMConfig(
+        MemoryConfig(num_slots=num_slots, word_size=W, num_heads=H, k=K,
+                     ann="lsh", lsh_tables=4, lsh_bits=6,
+                     lsh_bucket_size=32),
         CTL)
 
 
@@ -71,6 +87,52 @@ def compile_mesh_step(mesh, num_slots: int) -> dict:
         hlo = step.lower(params, state, jnp.zeros((B, D))).compile().as_text()
     rec = _collective_record(hlo)
     rec.update(path="mesh", N=num_slots)
+    return rec
+
+
+def compile_mesh_step_lsh(mesh, num_slots: int, *,
+                          index_partitions: int | None = None) -> dict:
+    """LSH-mode sharded step. ``index_partitions=None`` builds the index
+    ownership-partitioned to the mesh (each device stores 1/S of the
+    bucket tables, inserts collective-free, queries merged through the
+    O(B·K) all-gather); ``index_partitions=1`` is the retired
+    replicated-index path — this bench's positive control: its per-device
+    index bytes are S× larger and its reads psum-gather the full
+    O(C·W) candidate rows every step."""
+    cfg = _lsh_cfg(num_slots)
+    with mem_shard.memory_mesh(mesh, num_slots):
+        params = sam_lib.init_params(jax.random.PRNGKey(0), cfg)
+        state = mem_shard.place_state(
+            sam_lib.init_state(B, cfg, ann_partitions=index_partitions))
+        step = jax.jit(lambda p, s, x: sam_lib.sam_step(p, cfg, s, x))
+        hlo = step.lower(params, state, jnp.zeros((B, D))).compile().as_text()
+        bucket_dev_bytes = state.ann.buckets.addressable_shards[0].data.nbytes
+        index_dev_bytes = bucket_dev_bytes + \
+            state.ann.cursor.addressable_shards[0].data.nbytes
+        index_total = state.ann.buckets.nbytes + state.ann.cursor.nbytes
+    rec = _collective_record(hlo)
+    rec.update(path=("lsh_mesh" if index_partitions is None
+                     else "lsh_replicated_index"),
+               N=num_slots, bucket_table_bytes_per_device=bucket_dev_bytes,
+               index_bytes_per_device=index_dev_bytes,
+               index_bytes_total=index_total)
+    return rec
+
+
+def compile_lsh_build(mesh, num_slots: int) -> dict:
+    """`ann_build` on a slot-sharded buffer: must compile shard-local —
+    no canonical all-gather of the O(N·W) memory (the pre-shard path's
+    rebuild all-gathered the whole buffer back to canonical form)."""
+    from repro.core import ann as ann_lib
+    cfg = _lsh_cfg(num_slots).memory
+    with mem_shard.memory_mesh(mesh, num_slots):
+        planes = ann_lib.lsh_planes(jax.random.PRNGKey(0), cfg)
+        state = mem_shard.place_state(sam_lib.init_state(
+            B, _lsh_cfg(num_slots)))
+        build = jax.jit(lambda p, m: ann_lib.ann_build(p, m, cfg))
+        hlo = build.lower(planes, state.memory).compile().as_text()
+    rec = _collective_record(hlo)
+    rec.update(path="lsh_build", N=num_slots)
     return rec
 
 
@@ -105,10 +167,15 @@ def main(argv=None):
     results = []
     for n in sizes:
         for rec in (compile_mesh_step(mesh, n),
-                    compile_gspmd_control(mesh, n)):
+                    compile_gspmd_control(mesh, n),
+                    compile_mesh_step_lsh(mesh, n),
+                    compile_mesh_step_lsh(mesh, n, index_partitions=1),
+                    compile_lsh_build(mesh, n)):
             results.append(rec)
+            extra = (f" index {rec['index_bytes_per_device']}B/dev"
+                     if "index_bytes_per_device" in rec else "")
             row(f"shard/{rec['path']}/N={n}", 0.0,
-                f"{rec['bytes_total']:.0f}B collective")
+                f"{rec['bytes_total']:.0f}B collective{extra}")
 
     by = {(r["path"], r["N"]): r["bytes_total"] for r in results}
     n_lo, n_hi = sizes[0], sizes[-1]
@@ -131,6 +198,43 @@ def main(argv=None):
                    for v in r["collectives"].values()), default=0.0)
     assert biggest < full_buffer / 8, \
         f"a mesh-path collective moves {biggest}B (~full buffer {full_buffer}B)"
+
+    # LSH mode: sharded-index traffic flat in N and strictly below the
+    # replicated-index positive control (which psum-gathers the full
+    # O(C·W) candidate rows each step)...
+    lsh_lo, lsh_hi = by[("lsh_mesh", n_lo)], by[("lsh_mesh", n_hi)]
+    row("shard/lsh_mesh/N_scaling", 0.0,
+        f"{lsh_hi / max(lsh_lo, 1):.2f}x over {n_hi // n_lo}x slots")
+    assert lsh_hi <= lsh_lo * 1.25, \
+        f"sharded-LSH collective bytes grew with N: {lsh_lo} -> {lsh_hi}"
+    for n in sizes:
+        assert by[("lsh_mesh", n)] < by[("lsh_replicated_index", n)] / 2, \
+            (n, by[("lsh_mesh", n)], by[("lsh_replicated_index", n)])
+    # ...per-device bucket-table bytes reduced by exactly the shard factor
+    # (the replicated-index control carries the whole table per device)...
+    idx = {(r["path"], r["N"]): r.get("bucket_table_bytes_per_device")
+           for r in results if "bucket_table_bytes_per_device" in r}
+    for n in sizes:
+        sharded, repl = idx[("lsh_mesh", n)], idx[("lsh_replicated_index", n)]
+        row(f"shard/lsh_index_bytes/N={n}", 0.0,
+            f"{sharded}B/dev sharded vs {repl}B/dev replicated")
+        assert repl == sharded * SHARDS, \
+            f"per-device bucket-table bytes not reduced {SHARDS}x: " \
+            f"{sharded} vs {repl}"
+    assert idx[("lsh_mesh", n_lo)] == idx[("lsh_mesh", n_hi)], \
+        "per-device bucket-table bytes must not grow with N"
+    # ...and ann_build on a sharded buffer compiles shard-local: no
+    # collective anywhere near the O(N·W) memory buffer (the pre-shard
+    # rebuild all-gathered the whole thing).
+    for r in results:
+        if r["path"] != "lsh_build":
+            continue
+        buf = B * r["N"] * W * 4
+        big = max((v["bytes"] / max(v["count"], 1)
+                   for v in r["collectives"].values()), default=0.0)
+        assert big < buf / 8, \
+            f"ann_build on a sharded buffer moves a {big}B collective " \
+            f"(buffer {buf}B)"
 
     os.makedirs(OUT_DIR, exist_ok=True)
     record = {

@@ -28,11 +28,19 @@ Fault-tolerance contract (DESIGN.md §5):
     when the template expects exactly one more row on axis 1 and the leaf
     is named memory/last_access/usage, the loaded leaf is padded with the
     scratch-row init (zeros for float memory, int32 max for the usage
-    table) — everything else restores bit-exactly. Format-2 checkpoints
-    are restored strictly (shapes must match), and any other mismatch
-    raises — so a config change (head count, slot count — including
-    `num_slots` N→N+1, which would be shape-indistinguishable from the
-    legacy layout) cannot masquerade as a layout migration.
+    table) — everything else restores bit-exactly. Later-format
+    checkpoints are restored strictly (shapes must match), and any other
+    mismatch raises — so a config change (head count, slot count —
+    including `num_slots` N→N+1, which would be shape-indistinguishable
+    from the legacy layout) cannot masquerade as a layout migration;
+  * LSH-index re-layout (docs/sharding.md): the ownership-partitioned ANN
+    index (ANNState — buckets/cursor) stores *layout-local* ring
+    placements, so a cross-mesh restore re-partitions the two leaves
+    together on the host (`mem_shard.np_relayout_ann`; the remap needs
+    the recorded ``mem_layout``'s num_slots or a declared
+    ``expect_num_slots`` to resolve slot ownership). Pre-format-3
+    checkpoints carry the un-partitioned index shapes and migrate by a
+    pure reshape (P=1 axis inserted) first.
 """
 from __future__ import annotations
 
@@ -55,10 +63,12 @@ def _flatten_with_paths(tree):
 
 
 # Manifest format: 1 (implicit — no field) predates the scratch-row layout;
-# 2 = scratch-row era. Only format-1 checkpoints are eligible for the
-# shape-based migration shim: once a checkpoint carries the marker, its
-# shapes are authoritative and any mismatch is a config error.
-MANIFEST_FORMAT = 2
+# 2 = scratch-row era (un-partitioned LSH index); 3 = ownership-partitioned
+# LSH index (ANNState grew a partition axis). Each shape-based migration
+# shim applies only to checkpoints written *before* the format that
+# introduced its layout: once a checkpoint carries the marker, its shapes
+# are authoritative and any mismatch is a config error.
+MANIFEST_FORMAT = 3
 
 
 def save_checkpoint(directory: str, step: int, tree,
@@ -119,6 +129,7 @@ def latest_step(directory: str):
 # path cannot drift apart. Any other leaf with a shape mismatch still
 # raises — a head-count or slot-count config change must not be silently
 # "migrated".
+from repro.core.types import ANN_LEAVES as _ANN_LEAVES
 from repro.core.types import SLOT_LEAVES as _MIGRATABLE_LEAVES
 
 
@@ -144,6 +155,47 @@ def _migrate_scratch_row(arr: np.ndarray, want_shape) -> np.ndarray:
     pad[1] = (0, 1)
     fill = LA_SCRATCH if np.issubdtype(arr.dtype, np.integer) else 0
     return np.pad(arr, pad, constant_values=fill)
+
+
+def _migrate_ann_axis(arr: np.ndarray, name: str) -> np.ndarray:
+    """Pre-format-3 shim: the un-partitioned LSH index stored buckets as
+    (B, T, nb, bucket_size) and cursor as (B, T, nb); the partitioned
+    layout (format 3) inserts a P=1 ownership axis — a pure reshape."""
+    if name == "buckets" and arr.ndim == 4:
+        return arr[:, :, :, None, :]
+    if name == "cursor" and arr.ndim == 3:
+        return arr[..., None]
+    return arr
+
+
+def _relayout_ann_group(group: dict, num_slots: int, parent: str):
+    """Re-partition a deferred (buckets, cursor) pair to the template's
+    partition count via `mem_shard.np_relayout_ann` — the two leaves must
+    be remapped *together* (ring order lives in the cursor). Validates
+    that everything except the partitioning matches the template: a
+    bucket-size / table-count config change must keep raising."""
+    from repro.distributed.mem_shard import np_relayout_ann
+    if set(group) != {"buckets", "cursor"}:
+        raise ValueError(
+            f"checkpoint ANN leaves under {parent!r} cannot be re-laid-out:"
+            f" need both buckets and cursor to change partition count "
+            f"together — a lone mismatch is a config change, not a mesh "
+            f"change")
+    _, barr, btmpl, _ = group["buckets"]
+    _, carr, ctmpl, _ = group["cursor"]
+    bt = tuple(btmpl.shape)
+    ok = (barr.ndim == 5 and len(bt) == 5
+          and barr.shape[:3] == bt[:3]
+          and barr.shape[3] * barr.shape[4] == bt[3] * bt[4]
+          and carr.shape == barr.shape[:4]
+          and tuple(ctmpl.shape) == bt[:4])
+    if not ok:
+        raise ValueError(
+            f"checkpoint ANN leaves under {parent!r} have shapes "
+            f"{barr.shape}/{carr.shape}; templates {bt}/"
+            f"{tuple(ctmpl.shape)} are not a pure partition-count change "
+            f"(batch/tables/buckets/capacity must match)")
+    return np_relayout_ann(barr, carr, num_slots, bt[3])
 
 
 def _relayout_mem_shard(arr: np.ndarray, want_shape, layout: dict,
@@ -217,7 +269,8 @@ def restore_checkpoint(directory: str, template, step: int = None,
     leaves = []
     s_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
                 if shardings is not None else [None] * len(t_leaves))
-    migratable = manifest.get("format", 1) < MANIFEST_FORMAT
+    fmt = manifest.get("format", 1)
+    migratable = fmt < 2             # pre-scratch-row era
     mem_layout = manifest.get("mem_layout")
     if (expect_num_slots is not None and mem_layout is not None
             and int(mem_layout["num_slots"]) != int(expect_num_slots)):
@@ -226,6 +279,10 @@ def restore_checkpoint(directory: str, template, step: int = None,
             f"{mem_layout['num_slots']}, caller expects {expect_num_slots} "
             f"— a slot-count config change cannot be restored as a mesh "
             f"re-layout")
+    # LSH-index (buckets, cursor) pairs whose partition count must change:
+    # re-laid-out *together* after the loop (ring order lives in the
+    # cursor). parent path -> {leaf name: (slot, arr, tmpl, sharding)}.
+    ann_pending: dict = {}
     for entry, tmpl, sh in zip(entries, t_leaves, s_leaves):
         if entry is None:            # fill_missing: keep the template value
             leaves.append(jax.device_put(tmpl, sh) if sh is not None
@@ -236,7 +293,32 @@ def restore_checkpoint(directory: str, template, step: int = None,
             # Path components render as ".memory" (GetAttrKey) or "memory"
             # (dict key) depending on the container — compare field names.
             leaf_name = entry["path"].rsplit("/", 1)[-1].lstrip(".")
-            if leaf_name in _MIGRATABLE_LEAVES and mem_layout is not None:
+            if leaf_name in _ANN_LEAVES:
+                if fmt < 3:
+                    # Pre-partitioned index: insert the P=1 axis first.
+                    arr = _migrate_ann_axis(arr, leaf_name)
+                if arr.shape != tuple(tmpl.shape):
+                    # Partition-count change (cross-mesh restore): defer
+                    # for the paired re-layout. Pinning num_slots needs
+                    # the recorded mem_layout or the caller's declaration.
+                    if mem_layout is not None:
+                        n = int(mem_layout["num_slots"])
+                    elif expect_num_slots is not None:
+                        n = int(expect_num_slots)
+                    else:
+                        raise ValueError(
+                            f"checkpoint leaf {entry['path']!r} has shape "
+                            f"{arr.shape}, template expects "
+                            f"{tuple(tmpl.shape)} — re-partitioning the "
+                            f"LSH index needs the ownership rule's "
+                            f"num_slots (a recorded mem_layout, or "
+                            f"expect_num_slots=)")
+                    parent = entry["path"].rsplit("/", 1)[0]
+                    ann_pending.setdefault(parent, {"num_slots": n})[
+                        leaf_name] = (len(leaves), arr, tmpl, sh)
+                    leaves.append(None)          # patched after the loop
+                    continue
+            elif leaf_name in _MIGRATABLE_LEAVES and mem_layout is not None:
                 # Cross-mesh restore: re-layout to the template's shard
                 # count (manifest records the saved layout).
                 arr = _relayout_mem_shard(arr, tmpl.shape, mem_layout,
@@ -260,14 +342,22 @@ def restore_checkpoint(directory: str, template, step: int = None,
                 raise ValueError(
                     f"checkpoint leaf {entry['path']!r} has shape "
                     f"{arr.shape}, template expects {tuple(tmpl.shape)} — "
-                    f"scratch-row migration applies only to pre-format-"
-                    f"{MANIFEST_FORMAT} checkpoints, mem-shard re-layout "
-                    f"only to checkpoints with a recorded mem_layout, and "
-                    f"both only to {sorted(_MIGRATABLE_LEAVES)} leaves")
+                    f"scratch-row migration applies only to pre-format-2 "
+                    f"checkpoints, mem-shard/LSH-index re-layout only to "
+                    f"checkpoints with a recorded mem_layout (or a "
+                    f"declared expect_num_slots), and only to "
+                    f"{sorted(_MIGRATABLE_LEAVES | _ANN_LEAVES)} leaves")
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:
             leaves.append(jax.numpy.asarray(arr))
+    for parent, group in ann_pending.items():
+        n = group.pop("num_slots")
+        out_b, out_c = _relayout_ann_group(group, n, parent)
+        for name, out in (("buckets", out_b), ("cursor", out_c)):
+            slot, _, _, sh = group[name]
+            leaves[slot] = (jax.device_put(out, sh) if sh is not None
+                            else jax.numpy.asarray(out))
     return jax.tree.unflatten(treedef, leaves), step
 
 

@@ -76,28 +76,62 @@ def sparse_read_exact(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
         mv = m if valid_n is None else m[:, :valid_n]
         sims = sims_fn(jax.lax.stop_gradient(q), jax.lax.stop_gradient(mv))
         _, idx = topk_from_sims(sims, k)                    # (B, H, K), no grads
-    words = gather_rows(m, idx)                             # (B, H, K, W)
-    # Re-compute similarities for the selected rows only => sparse gradients.
-    sel = _rerank(q, words) * beta[..., None]
-    w = jax.nn.softmax(sel, axis=-1)
-    read = jnp.einsum("bhk,bhkw->bhw", w, words)
-    return SparseRead(indices=idx, weights=w, words=read)
+    # Exact-mode selections are always valid; the shared tail keeps the
+    # forward numerically identical to the replay path (core/cell.py).
+    return finish_candidate_read(q, m, beta, idx)
 
 
 def sparse_read_candidates(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
                            cand_idx: jax.Array) -> SparseRead:
     """ANN-mode read: re-rank a fixed candidate set (B, H, C) from the LSH
-    index, dedup, keep top-K. FLOP cost O(C·W) instead of O(N·W)."""
+    index, dedup, keep top-K. FLOP cost O(C·W) instead of O(N·W).
+
+    A candidate can be invalid (-1: an empty bucket slot, or a dedup'd
+    duplicate); when fewer than K candidates are valid, the top-K includes
+    masked positions. Validity is carried through to the read weights
+    (`finish_candidate_read`): invalid selections read with *exactly zero*
+    weight and zero gradient — before this fix they clamped to row 0 and
+    the softmax assigned it uniform nonzero weight, silently reading (and
+    backpropagating into) row 0 on a cold index."""
+    return finish_candidate_read(q, m, beta,
+                                 select_candidates(q, m, k, cand_idx))
+
+
+def select_candidates(q: jax.Array, m: jax.Array, k: int,
+                      cand_idx: jax.Array) -> jax.Array:
+    """Candidate top-K selection (non-differentiable half of the ANN read):
+    dedup, re-rank under stop_gradient, keep the K best. Returns *signed*
+    indices (B, H, K): -1 where fewer than K valid candidates existed —
+    the value the step records into its deltas so the rollback replay can
+    reconstruct the same validity mask."""
     cand_idx = _dedup(cand_idx)
     cand = gather_rows(m, cand_idx)                         # (B, H, C, W)
     sims = _rerank(jax.lax.stop_gradient(q), jax.lax.stop_gradient(cand))
     sims = jnp.where(cand_idx < 0, _NEG, sims)
     _, pos = topk_from_sims(sims, k)                        # positions in C
-    idx = jnp.take_along_axis(cand_idx, pos, axis=-1)       # (B, H, K)
+    return jnp.take_along_axis(cand_idx, pos, axis=-1)      # (B, H, K)
+
+
+def finish_candidate_read(q: jax.Array, m: jax.Array, beta: jax.Array,
+                          idx: jax.Array) -> SparseRead:
+    """Differentiable tail of every sparse read: gather the selected rows,
+    re-rank (sparse gradients — only these K rows are touched), softmax.
+
+    ``idx`` is *signed*: -1 marks an invalid selection (cold LSH index /
+    dedup'd duplicate). Invalid entries are clamped to row 0 for the
+    gather but get exactly zero weight — the remaining weights are
+    renormalized, and when nothing is valid the read word is zero with
+    zero gradient into row 0. The rollback replay (`core/cell.py`,
+    `core/dnc.py`) recomputes reads through this same function from the
+    recorded signed indices, so forward and replay match bit-for-bit."""
+    valid = idx >= 0
     idx = jnp.maximum(idx, 0)
-    words = gather_rows(m, idx)
+    words = gather_rows(m, idx)                             # (B, H, K, W)
     sel = _rerank(q, words) * beta[..., None]
+    sel = jnp.where(valid, sel, _NEG)
     w = jax.nn.softmax(sel, axis=-1)
+    w = jnp.where(valid, w, 0.0)
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-6)
     read = jnp.einsum("bhk,bhkw->bhw", w, words)
     return SparseRead(indices=idx, weights=w, words=read)
 

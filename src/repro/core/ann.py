@@ -3,8 +3,19 @@
 The paper uses FLANN k-d trees / LSH on CPU. Pointer-based trees do not map
 to TPU; we keep the LSH variant with dense fixed-shape bucket tables:
 
-  buckets: (B, T, 2**bits, bucket_size) int32 — slot indices, -1 = empty
-  cursor:  (B, T, 2**bits) int32             — ring insert position
+  buckets: (B, T, 2**bits, P, d) int32 — global slot indices, -1 = empty
+  cursor:  (B, T, 2**bits, P) int32    — ring insert position per sub-ring
+
+Every bucket's ring is **partitioned by slot ownership** into P sub-rings of
+depth d = bucket_size / P: slot g inserts into sub-ring ``g // (N / P)``,
+the same contiguous-block ownership rule the slot-sharded memory layout
+uses (docs/sharding.md). P = 1 is the canonical single-device index (one
+full-depth ring per bucket); under a `mem_shard.memory_mesh` context with
+P == shards the partition dimension shards over the mesh axis, so each
+device stores only the 1/P of the index covering the slots it owns, inserts
+are collective-free (a shard stores only what it owns), and queries merge
+per-shard candidate top-K sets through the same O(B·K) score+index
+all-gather the exact-read path uses.
 
 Signatures come from fixed random hyperplanes (non-learned, no gradients —
 "there are no gradients with respect to the ANN as its function is fixed").
@@ -14,6 +25,8 @@ kept in sync on every write, exactly as the paper passes the ANN through the
 network.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -44,17 +57,58 @@ def lsh_hash(planes: jax.Array, x: jax.Array, *, backend=None) -> jax.Array:
     return ops.detach_int(ids)
 
 
-def ann_init(batch: int, cfg: MemoryConfig) -> ANNState:
+def resolve_partitions(cfg: MemoryConfig, partitions=None) -> int:
+    """Ownership-partition count P for a fresh index. Explicit ``partitions``
+    must be valid (bucket_size and num_slots both divisible) or this
+    raises; ``None`` defaults to the active `mem_shard.memory_mesh`
+    context's shard count when the config divides it (so the index is born
+    sharded alongside the memory), falling back to 1 — the replicated
+    canonical index — with a warning when it does not."""
+    from repro.distributed import mem_shard
+    if partitions is None:
+        ctx = mem_shard.current()
+        if ctx is None or ctx.shards == 1 or ctx.num_slots != cfg.num_slots:
+            return 1
+        if cfg.lsh_bucket_size % ctx.shards or cfg.num_slots % ctx.shards:
+            warnings.warn(
+                f"lsh_bucket_size={cfg.lsh_bucket_size} / "
+                f"num_slots={cfg.num_slots} not divisible by the "
+                f"{ctx.shards}-way mesh axis — the LSH index stays "
+                f"replicated (P=1); pick a divisible bucket size to shard "
+                f"it", UserWarning, stacklevel=3)
+            return 1
+        return ctx.shards
+    p = int(partitions)
+    if p < 1 or cfg.lsh_bucket_size % p or cfg.num_slots % p:
+        raise ValueError(
+            f"partitions={p} must divide lsh_bucket_size="
+            f"{cfg.lsh_bucket_size} and num_slots={cfg.num_slots}")
+    return p
+
+
+def index_partitions(state: ANNState) -> int:
+    """Ownership-partition count P of an index (the cursor's last dim)."""
+    return state.cursor.shape[-1]
+
+
+def slot_owner(idx: jax.Array, num_slots: int, partitions: int) -> jax.Array:
+    """Ownership partition of global slot `idx` (contiguous blocks)."""
+    return idx // (num_slots // partitions)
+
+
+def ann_init(batch: int, cfg: MemoryConfig, *, partitions=None) -> ANNState:
     nb = 2 ** cfg.lsh_bits
+    P = resolve_partitions(cfg, partitions)
+    d = cfg.lsh_bucket_size // P
     return ANNState(
-        buckets=jnp.full((batch, cfg.lsh_tables, nb, cfg.lsh_bucket_size), -1,
+        buckets=jnp.full((batch, cfg.lsh_tables, nb, P, d), -1,
                          dtype=jnp.int32),
-        cursor=jnp.zeros((batch, cfg.lsh_tables, nb), dtype=jnp.int32),
+        cursor=jnp.zeros((batch, cfg.lsh_tables, nb, P), dtype=jnp.int32),
     )
 
 
 def ann_build(planes: jax.Array, memory: jax.Array, cfg: MemoryConfig,
-              *, chunk: int = None) -> ANNState:
+              *, chunk: int | None = None, partitions=None) -> ANNState:
     """Bulk-build the index from a full memory (the paper rebuilds every N
     insertions; we expose the same rebuild primitive). Only the logical rows
     of a scratch-row buffer are indexed — the scratch row is never readable,
@@ -62,22 +116,39 @@ def ann_build(planes: jax.Array, memory: jax.Array, cfg: MemoryConfig,
 
     Vectorized: slots are inserted in batched `ann_insert` calls of J =
     `chunk` rows, so a rebuild runs N/J hash+scatter rounds instead of
-    serializing N of them. J is clamped to `lsh_bucket_size` — the largest
-    value for which a batched call is *exactly* equivalent to J sequential
-    single-slot inserts (see `ann_insert`; beyond it, a chunk could land
-    more rows in one bucket than the ring holds, making the duplicate-
-    position scatter winner unspecified)."""
+    serializing N of them. J is clamped to the sub-ring depth d =
+    `lsh_bucket_size / P` — the largest value for which a batched call is
+    *exactly* equivalent to J sequential single-slot inserts (see
+    `ann_insert`; beyond it, a chunk could land more rows in one
+    (bucket, owner) sub-ring than the ring holds, making the duplicate-
+    position scatter winner unspecified).
+
+    On a slot-sharded buffer (an active `mem_shard.memory_mesh` context
+    whose shard count the config divides) the rebuild runs **shard-local**
+    under `shard_map`: each shard hashes and inserts only the rows it owns
+    into its local sub-rings — no canonical all-gather of the O(N·W)
+    memory, no collective at all (asserted on the compiled HLO by
+    `benchmarks/bench_shard.py`)."""
     from repro.distributed import mem_shard
     B, rows, _ = memory.shape
-    if (ctx := mem_shard.route_ctx(rows)) is not None:
-        # Slot-sharded buffer: rebuild from the canonical view (the bulk
-        # rebuild is an offline/rare path; the per-step inserts stay sparse).
+    P = resolve_partitions(cfg, partitions)
+    ctx = mem_shard.route_ctx(rows)
+    if ctx is not None and P == ctx.shards:
+        return mem_shard.ann_build_sharded(ctx, planes, memory, cfg,
+                                           chunk=chunk)
+    if ctx is not None:
+        # Sharded buffer, but the index takes a different partition count
+        # (an explicit ``partitions=`` request, or an indivisible bucket
+        # size resolving to 1): rebuild the replicated P-partitioned index
+        # from the canonical view. Correctness fallback only — it
+        # all-gathers the memory.
         memory = mem_shard.from_shard_layout(memory, ctx.num_slots,
                                              ctx.shards)
         rows = memory.shape[1]
     N = cfg.num_slots if has_scratch_row(cfg.num_slots, rows) else rows
-    J = max(1, min(chunk or cfg.lsh_bucket_size, N, cfg.lsh_bucket_size))
-    state = ann_init(B, cfg)
+    state = ann_init(B, cfg, partitions=P)
+    d = state.buckets.shape[-1]
+    J = max(1, min(chunk or d, N, d))
 
     def insert_chunk(state: ANNState, idx: jax.Array):        # idx: (J,)
         rows_j = jnp.take(memory, idx, axis=1)                # (B, J, W)
@@ -93,39 +164,99 @@ def ann_build(planes: jax.Array, memory: jax.Array, cfg: MemoryConfig,
     return state
 
 
-def ann_insert(planes: jax.Array, state: ANNState, idx: jax.Array,
-               rows: jax.Array, cfg: MemoryConfig) -> ANNState:
-    """Insert slots `idx` (B, J) with contents `rows` (B, J, W) into every
-    table (ring overwrite within the bucket).
-
-    Entries of one call that hash to the same bucket are sequenced by rank:
-    entry j lands at ``cursor + #{j' < j in the same bucket}`` and the
-    cursor advances by the full per-bucket count — so one batched call is
-    exactly equivalent to J sequential single-slot inserts whenever no
-    bucket receives more than `lsh_bucket_size` entries in the call (the
-    vectorized `ann_build` relies on this)."""
-    B, J = idx.shape
-    T, S = cfg.lsh_tables, cfg.lsh_bucket_size
-    bucket_ids = lsh_hash(planes, rows, backend=cfg.backend)  # (B, J, T)
-    b = jnp.arange(B)[:, None, None]                          # (B,1,1)
-    t = jnp.arange(T)[None, None, :]                          # (1,1,T)
-    same = bucket_ids[:, :, None, :] == bucket_ids[:, None, :, :]  # (B,J,J,T)
+def ring_ranks(bucket_ids: jax.Array, group: jax.Array):
+    """Per-entry insert rank and per-cell count for one batched call:
+    entries sharing a bucket *and* an ownership group are sequenced by
+    their index order — entry j lands ``#{j' < j in the same cell}`` past
+    the cursor and the cursor advances by the cell total. ``bucket_ids``:
+    (B, J, T); ``group``: (B, J, J) bool, True where two entries share an
+    owner. The single source of the ring-sequencing rule, shared by the
+    canonical partitioned insert below and the shard-local insert
+    (`mem_shard.ann_insert_sharded`) whose bit-exact agreement the mesh
+    parity suite pins."""
+    same = (bucket_ids[:, :, None, :] == bucket_ids[:, None, :, :]) \
+        & group[..., None]                                    # (B,J,J,T)
+    J = bucket_ids.shape[1]
     before = jnp.arange(J)[:, None] > jnp.arange(J)[None, :]       # j' < j
     rank = jnp.sum(same & before[None, :, :, None], axis=2)   # (B, J, T)
     count = jnp.sum(same, axis=2)                             # (B, J, T)
-    cur = state.cursor[b, t, bucket_ids]                      # (B, J, T)
-    buckets = state.buckets.at[b, t, bucket_ids, (cur + rank) % S].set(
+    return rank, count
+
+
+def ann_insert(planes: jax.Array, state: ANNState, idx: jax.Array,
+               rows: jax.Array, cfg: MemoryConfig) -> ANNState:
+    """Insert slots `idx` (B, J) with contents `rows` (B, J, W) into every
+    table (ring overwrite within the owner's sub-ring of each bucket).
+
+    Entries of one call that hash to the same bucket *and share an owner
+    partition* are sequenced by rank: entry j lands at
+    ``cursor + #{j' < j in the same (bucket, owner)}`` and the sub-ring
+    cursor advances by the full per-group count — so one batched call is
+    exactly equivalent to J sequential single-slot inserts whenever no
+    (bucket, owner) sub-ring receives more than d = bucket_size/P entries
+    in the call (the vectorized `ann_build` relies on this; see
+    tests/test_ann_properties.py for the property and the breaking case).
+
+    Works on a whole P-partitioned index and equally on a single shard's
+    local table (P=1 local block, global indices — owner resolves to the
+    one local partition)."""
+    B, J = idx.shape
+    T = cfg.lsh_tables
+    P = index_partitions(state)
+    d = state.buckets.shape[-1]
+    own = slot_owner(idx, cfg.num_slots, P) if P > 1 \
+        else jnp.zeros_like(idx)                              # (B, J)
+    bucket_ids = lsh_hash(planes, rows, backend=cfg.backend)  # (B, J, T)
+    b = jnp.arange(B)[:, None, None]                          # (B,1,1)
+    t = jnp.arange(T)[None, None, :]                          # (1,1,T)
+    rank, count = ring_ranks(bucket_ids,
+                             own[:, :, None] == own[:, None, :])
+    o = own[:, :, None]                                       # (B, J, 1)
+    cur = state.cursor[b, t, bucket_ids, o]                   # (B, J, T)
+    buckets = state.buckets.at[b, t, bucket_ids, o, (cur + rank) % d].set(
         jnp.broadcast_to(idx[:, :, None], (B, J, T)))
-    cursor = state.cursor.at[b, t, bucket_ids].set((cur + count) % S)
+    cursor = state.cursor.at[b, t, bucket_ids, o].set((cur + count) % d)
     return ANNState(buckets=buckets, cursor=cursor)
 
 
 def ann_query(planes: jax.Array, state: ANNState, q: jax.Array,
               cfg: MemoryConfig) -> jax.Array:
-    """q: (B, H, W) -> candidate slot indices (B, H, T * bucket_size)."""
+    """q: (B, H, W) -> candidate slot indices (B, H, T * bucket_size),
+    **partition-major** (all of partition 0's sub-rings across tables, then
+    partition 1's, …) — the order the sharded query path's shard-major
+    candidate merge reproduces, so tie-breaking matches exactly."""
     B, H, _ = q.shape
     bucket_ids = lsh_hash(planes, q, backend=cfg.backend)     # (B, H, T)
     b = jnp.arange(B)[:, None, None]
     t = jnp.arange(cfg.lsh_tables)[None, None, :]
-    cands = state.buckets[b, t, bucket_ids]                   # (B, H, T, S)
+    cands = state.buckets[b, t, bucket_ids]                   # (B, H, T, P, d)
+    cands = jnp.moveaxis(cands, 3, 2)                         # (B, H, P, T, d)
     return cands.reshape(B, H, -1)
+
+
+def ann_candidates(planes: jax.Array, state: ANNState, q: jax.Array,
+                   extra_idx: jax.Array, cfg: MemoryConfig) -> jax.Array:
+    """Full candidate set for an LSH-mode read: the bucket candidates of
+    `ann_query` plus `extra_idx` (B, J) — the freshly written rows, which
+    the index does not contain yet — interleaved **per ownership
+    partition**: block p is ``[bucket cands of partition p | extra entries
+    owned by p (others masked to -1)]``, giving (B, H, P·(T·d + J)).
+
+    For P=1 this is exactly ``concat([ann_query(...), extra])`` — the
+    original candidate layout. The per-partition blocks are what make the
+    sharded read path's shard-major merge order equal this array's
+    position order, so top-K tie-breaking is identical on both paths."""
+    B, H, _ = q.shape
+    J = extra_idx.shape[-1]
+    P = index_partitions(state)
+    bucket_ids = lsh_hash(planes, q, backend=cfg.backend)     # (B, H, T)
+    b = jnp.arange(B)[:, None, None]
+    t = jnp.arange(cfg.lsh_tables)[None, None, :]
+    cands = state.buckets[b, t, bucket_ids]                   # (B, H, T, P, d)
+    cands = jnp.moveaxis(cands, 3, 2)                         # (B, H, P, T, d)
+    cands = cands.reshape(B, H, P, -1)                        # (B, H, P, T·d)
+    owner = slot_owner(extra_idx, cfg.num_slots, P)           # (B, J)
+    part = jnp.arange(P)[None, :, None]                       # (1, P, 1)
+    extra = jnp.where(owner[:, None, :] == part, extra_idx[:, None, :], -1)
+    extra = jnp.broadcast_to(extra[:, None], (B, H, P, J))
+    return jnp.concatenate([cands, extra], axis=-1).reshape(B, H, -1)

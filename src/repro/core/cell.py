@@ -52,7 +52,7 @@ from repro.core import dnc as dnc_lib
 from repro.core import sam as sam_lib
 from repro.core.controller import linear, lstm_step
 from repro.core.sam import SAMConfig, _interface, apply_write
-from repro.core.types import SAMState, SparseRead, StepDeltas
+from repro.core.types import SAMState, StepDeltas
 from repro.distributed import mem_shard
 
 
@@ -106,15 +106,16 @@ def sam_replay_step(params, cfg: SAMConfig, s: SAMState, x: jax.Array,
     memory = apply_write(s.memory, deltas.write_idx, ww, a, lra_idx, cfg,
                          backend=cfg.memory.backend)
 
-    # Read at the recorded indices.
-    words = addr.gather_rows(memory, deltas.read_idx)               # (B,H,K,W)
-    sel = addr._rerank(q, words) * beta[..., None]
-    rw = jax.nn.softmax(sel, axis=-1)
-    r = jnp.einsum("bhk,bhkw->bhw", rw, words)
+    # Read at the recorded indices — through the same tail as the forward
+    # (`finish_candidate_read`), so the recorded *signed* indices
+    # reconstruct the forward's validity mask: an LSH-mode selection with
+    # no valid candidate replays with exactly zero weight and zero
+    # gradient, bit-identical to the forward pass.
+    read = addr.finish_candidate_read(q, memory, beta, deltas.read_idx)
+    r = read.words
     y = linear(params["out"], jnp.concatenate([h, r.reshape(B, -1)], axis=-1))
     new_state = SAMState(
-        memory=memory, last_access=s.last_access,
-        read=SparseRead(indices=deltas.read_idx, weights=rw, words=r),
+        memory=memory, last_access=s.last_access, read=read,
         ctrl=ctrl, step=s.step + 1, ann=s.ann)
     return new_state, y
 
@@ -128,8 +129,9 @@ class SAMCell:
     def init_params(self, key):
         return sam_lib.init_params(key, self.cfg)
 
-    def init_state(self, batch: int, *, mem_shards=None):
-        return sam_lib.init_state(batch, self.cfg, mem_shards=mem_shards)
+    def init_state(self, batch: int, *, mem_shards=None, ann_partitions=None):
+        return sam_lib.init_state(batch, self.cfg, mem_shards=mem_shards,
+                                  ann_partitions=ann_partitions)
 
     def state_sharding(self, state):
         return state_sharding(state)
@@ -178,8 +180,9 @@ class SDNCCell:
     def init_params(self, key):
         return dnc_lib.init_params(key, self.cfg)
 
-    def init_state(self, batch: int, *, mem_shards=None):
-        return dnc_lib.init_state(batch, self.cfg, mem_shards=mem_shards)
+    def init_state(self, batch: int, *, mem_shards=None, ann_partitions=None):
+        return dnc_lib.init_state(batch, self.cfg, mem_shards=mem_shards,
+                                  ann_partitions=ann_partitions)
 
     def state_sharding(self, state):
         return state_sharding(state)

@@ -20,10 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import addressing as addr
+from repro.core import ann as ann_lib
 from repro.core.controller import linear, linear_init, lstm_init, lstm_step, lstm_zero_state
-from repro.core.types import (ControllerConfig, LSTMState, MemoryConfig,
-                              SparseRead, init_scratch_last_access,
-                              init_scratch_memory)
+from repro.core.types import (ANNState, ControllerConfig, LSTMState,
+                              MemoryConfig, SparseRead,
+                              init_scratch_last_access, init_scratch_memory)
 from repro.distributed import mem_shard
 
 
@@ -78,6 +79,10 @@ class DNCState(NamedTuple):
     p_mat: Optional[SparseMat]
     ctrl: LSTMState
     step: jax.Array
+    # LSH-mode SDNC only (MemoryConfig.ann == "lsh"): the ownership-
+    # partitioned LSH index for the content read, carried non-
+    # differentiably like SAM's. None in exact mode and for the dense DNC.
+    ann: Optional[ANNState] = None
 
 
 # --------------------------------------------------------------------------
@@ -126,15 +131,22 @@ def init_params(key, cfg: DNCConfig):
     mem, ctl = cfg.memory, cfg.controller
     R, W = mem.num_heads, mem.word_size
     k1, k2, k3 = jax.random.split(key, 3)
-    return {
+    params = {
         "lstm": lstm_init(k1, ctl.input_size + R * W, ctl.hidden_size),
         "iface": linear_init(k2, ctl.hidden_size, _iface_sizes(cfg)),
         "out": linear_init(k3, ctl.hidden_size + R * W, ctl.output_size),
     }
+    if cfg.sparse and mem.ann == "lsh":
+        # fold_in (not a wider split) so the seeded lstm/iface/out init of
+        # every pre-existing dense/exact config stays bit-identical.
+        params["lsh_planes"] = jax.lax.stop_gradient(
+            ann_lib.lsh_planes(jax.random.fold_in(key, 4), mem))
+    return params
 
 
 def init_state(batch: int, cfg: DNCConfig, *,
-               mem_shards: Optional[int] = None) -> DNCState:
+               mem_shards: Optional[int] = None,
+               ann_partitions: Optional[int] = None) -> DNCState:
     mem, ctl = cfg.memory, cfg.controller
     R, W, N, KL = mem.num_heads, mem.word_size, mem.num_slots, cfg.k_l
     J = R * mem.k + 1
@@ -169,6 +181,8 @@ def init_state(batch: int, cfg: DNCConfig, *,
                             vals=jnp.zeros((batch, N, KL))),
             p_mat=SparseMat(cols=jnp.full((batch, N, KL), -1, jnp.int32),
                             vals=jnp.zeros((batch, N, KL))),
+            ann=(ann_lib.ann_init(batch, mem, partitions=ann_partitions)
+                 if mem.ann == "lsh" else None),
             **common)
     # Dense DNC: dense weightings address every row, so the memory stays
     # unpadded — the scratch-row layout is only for the sparse write scheme.
@@ -307,8 +321,29 @@ def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array,
     n_mat, p_mat, prec_sp = _update_linkage(s, widx, ww_sg, KL)
 
     # ---- reads: content + sparse forward/backward link reads ----
-    cont = addr.sparse_read_exact(rk, memory, rb, K, backend=be,
-                                  valid_n=valid_n)
+    if mem.ann == "lsh":
+        planes = params["lsh_planes"]
+        if (lay.kind == "mesh"
+                and ann_lib.index_partitions(s.ann) == lay.ctx.shards):
+            # Sharded index: per-shard candidate top-K + O(B·K) merge;
+            # collective-free insert (docs/sharding.md) — same wiring as
+            # sam_step.
+            cont_sel = mem_shard.lsh_candidate_topk_sharded(
+                lay.ctx, planes, s.ann, rk, memory, widx, K, mem)
+            ann_state = mem_shard.ann_insert_sharded(
+                lay.ctx, planes, s.ann, widx, memory, mem)
+        else:
+            cand = ann_lib.ann_candidates(planes, s.ann, rk, widx, mem)
+            cont_sel = addr.select_candidates(rk, memory, K, cand)
+            ann_state = ann_lib.ann_insert(
+                planes, s.ann, widx,
+                jax.lax.stop_gradient(addr.gather_rows(memory, widx)), mem)
+        cont = addr.finish_candidate_read(rk, memory, rb, cont_sel)
+    else:
+        cont = addr.sparse_read_exact(rk, memory, rb, K, backend=be,
+                                      valid_n=valid_n)
+        cont_sel = cont.indices
+        ann_state = s.ann
     fwd_idx, fwd_w = _link_read(s.n_mat, s.read, K)
     bwd_idx, bwd_w = _link_read(s.p_mat, s.read, K)
 
@@ -331,10 +366,13 @@ def _sdnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array,
     new_state = DNCState(memory=memory, usage=usage, read_w=s.read_w, read=read,
                          read_words=read_words, write_w=ww, write_idx=widx,
                          prec=s.prec, prec_sp=prec_sp, link=s.link,
-                         n_mat=n_mat, p_mat=p_mat, ctrl=ctrl, step=step)
+                         n_mat=n_mat, p_mat=p_mat, ctrl=ctrl, step=step,
+                         ann=ann_state)
     if collect_deltas:
+        # cont_idx is recorded *signed* (-1 = no valid candidate, LSH
+        # mode) so the replay reconstructs the same validity mask.
         return new_state, y, SDNCDeltas(
-            write_idx=widx, old_rows=old[0], lra=lra, cont_idx=cont.indices,
+            write_idx=widx, old_rows=old[0], lra=lra, cont_idx=cont_sel,
             n_cols=old[1], n_vals=old[2], p_cols=old[3], p_vals=old[4])
     return new_state, y
 
@@ -461,15 +499,17 @@ def sdnc_replay_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array,
     n_mat, p_mat, prec_sp = _update_linkage(s, widx, ww_sg, KL)
 
     # ---- reads: content read at the recorded rows + link reads ----
-    words_c = addr.gather_rows(memory, deltas.cont_idx)
-    sel = addr._rerank(rk, words_c) * rb[..., None]
-    cont_w = jax.nn.softmax(sel, axis=-1)
+    # Through the same tail as the forward (`finish_candidate_read`): the
+    # recorded signed cont_idx reconstructs the LSH validity mask, and the
+    # ANN index itself is never needed here (index selection was committed
+    # in the forward pass).
+    cont = addr.finish_candidate_read(rk, memory, rb, deltas.cont_idx)
     fwd_idx, fwd_w = _link_read(s.n_mat, s.read, K)
     bwd_idx, bwd_w = _link_read(s.p_mat, s.read, K)
 
-    idx = jnp.concatenate([bwd_idx, deltas.cont_idx, fwd_idx], axis=-1)
+    idx = jnp.concatenate([bwd_idx, cont.indices, fwd_idx], axis=-1)
     wts = jnp.concatenate([modes[..., 0:1] * bwd_w,
-                           modes[..., 1:2] * cont_w,
+                           modes[..., 1:2] * cont.weights,
                            modes[..., 2:3] * fwd_w], axis=-1)
     top_w, pos = jax.lax.top_k(wts, K)
     top_idx = jnp.take_along_axis(idx, pos, axis=-1)
@@ -482,7 +522,8 @@ def sdnc_replay_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array,
     return DNCState(memory=memory, usage=s.usage, read_w=s.read_w, read=read,
                     read_words=read_words, write_w=ww, write_idx=widx,
                     prec=s.prec, prec_sp=prec_sp, link=s.link,
-                    n_mat=n_mat, p_mat=p_mat, ctrl=ctrl, step=s.step + 1), y
+                    n_mat=n_mat, p_mat=p_mat, ctrl=ctrl, step=s.step + 1,
+                    ann=s.ann), y
 
 
 def dnc_step(params, cfg: DNCConfig, s: DNCState, x: jax.Array,

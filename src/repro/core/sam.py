@@ -59,14 +59,17 @@ def init_params(key, cfg: SAMConfig):
 
 
 def init_state(batch: int, cfg: SAMConfig, params=None, *,
-               mem_shards: Optional[int] = None) -> SAMState:
+               mem_shards: Optional[int] = None,
+               ann_partitions: Optional[int] = None) -> SAMState:
     mem, ctl = cfg.memory, cfg.controller
     H, K, W, N = mem.num_heads, mem.k, mem.word_size, mem.num_slots
     # Persistent scratch-row layout: row N is the kernels' write-scratch row
     # (never read; its last-access entry is pinned so LRA never picks it).
     # Under a `mem_shard.memory_mesh` context (or explicit `mem_shards`) the
     # buffers are built in the slot-sharded layout instead: one scratch row
-    # per shard, N + shards rows total (docs/sharding.md).
+    # per shard, N + shards rows total (docs/sharding.md). The LSH index is
+    # born ownership-partitioned to match (`ann_partitions` overrides —
+    # e.g. a single-device run reproducing a mesh run's index semantics).
     memory, last_access = mem_shard.init_layout(
         N, mem_shards, init_scratch_memory(batch, N, W),
         init_scratch_last_access(batch, N))
@@ -77,7 +80,7 @@ def init_state(batch: int, cfg: SAMConfig, params=None, *,
     )
     ann_state: Optional[ANNState] = None
     if mem.ann == "lsh":
-        ann_state = ann_lib.ann_init(batch, mem)
+        ann_state = ann_lib.ann_init(batch, mem, partitions=ann_partitions)
     return SAMState(memory=memory, last_access=last_access, read=read,
                     ctrl=lstm_zero_state(batch, ctl.hidden_size),
                     step=jnp.zeros((), jnp.int32), ann=ann_state)
@@ -172,18 +175,32 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
     # ---- read (content-based, sparse) ----
     if mem.ann == "lsh":
         planes = params["lsh_planes"]
-        cand = ann_lib.ann_query(planes, state.ann, q, mem)
-        # Always include the freshly written rows as candidates.
-        cand = jnp.concatenate(
-            [cand, jnp.broadcast_to(widx_flat[:, None, :],
-                                    (B, H, widx_flat.shape[-1]))], axis=-1)
-        read = addr.sparse_read_candidates(q, memory, beta, K, cand)
-        ann_state = ann_lib.ann_insert(
-            planes, state.ann, widx_flat,
-            jax.lax.stop_gradient(addr.gather_rows(memory, widx_flat)), mem)
+        if (lay.kind == "mesh"
+                and ann_lib.index_partitions(state.ann) == lay.ctx.shards):
+            # Mesh-native sharded index: per-shard candidate top-K merged
+            # through the O(B·K) score+index all-gather; the insert is
+            # collective-free (each shard hashes and stores only the rows
+            # it owns). docs/sharding.md.
+            read_sel = mem_shard.lsh_candidate_topk_sharded(
+                lay.ctx, planes, state.ann, q, memory, widx_flat, K, mem)
+            read = addr.finish_candidate_read(q, memory, beta, read_sel)
+            ann_state = mem_shard.ann_insert_sharded(
+                lay.ctx, planes, state.ann, widx_flat, memory, mem)
+        else:
+            # Candidates = bucket contents plus the freshly written rows
+            # (interleaved per ownership partition — ann_candidates).
+            cand = ann_lib.ann_candidates(planes, state.ann, q, widx_flat,
+                                          mem)
+            read_sel = addr.select_candidates(q, memory, K, cand)
+            read = addr.finish_candidate_read(q, memory, beta, read_sel)
+            ann_state = ann_lib.ann_insert(
+                planes, state.ann, widx_flat,
+                jax.lax.stop_gradient(addr.gather_rows(memory, widx_flat)),
+                mem)
     else:
         read = addr.sparse_read_exact(q, memory, beta, K, backend=be,
                                       valid_n=valid_n)
+        read_sel = read.indices
         ann_state = state.ann
 
     # ---- usage (U^(2)) for the read side; the write side was fused above ----
@@ -195,9 +212,11 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
     new_state = SAMState(memory=memory, last_access=la, read=read, ctrl=ctrl,
                          step=step, ann=ann_state)
     if collect_deltas:
+        # read_idx is recorded *signed* (-1 = no valid candidate, LSH mode)
+        # so the rollback replay reconstructs the same validity mask.
         return new_state, y, StepDeltas(write_idx=widx_flat,
                                         old_rows=old_rows,
-                                        read_idx=read.indices)
+                                        read_idx=read_sel)
     return new_state, y
 
 

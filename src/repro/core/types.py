@@ -39,6 +39,11 @@ LA_SCRATCH = 2 ** 31 - 1
 # (checkpoint/ckpt.py). A new slot-sharded state field must be added HERE
 # so the live transforms and the checkpoint path cannot drift apart.
 SLOT_LEAVES = frozenset({"memory", "last_access", "usage"})
+# Field names of the ANN index leaves (ANNState). Like SLOT_LEAVES, the
+# single source shared by the mem-shard sharding specs (the LSH bucket
+# tables shard over their partition dimension) and the checkpoint
+# re-layout/migration shims.
+ANN_LEAVES = frozenset({"buckets", "cursor"})
 
 
 def has_scratch_row(num_slots: int, buf_rows: int) -> bool:
@@ -105,10 +110,20 @@ class LSTMState(NamedTuple):
 
 
 class ANNState(NamedTuple):
-    """Fixed-shape LSH index state (DESIGN.md §2).
+    """Fixed-shape LSH index state, partitioned by slot ownership
+    (DESIGN.md §2, docs/sharding.md).
 
-    buckets: (B, T, n_buckets, bucket_size) int32 slot-indices, -1 = empty.
-    cursor:  (B, T, n_buckets) int32 ring-insert position per bucket.
+    Every bucket's ring is split into P ownership sub-rings: slot g lives in
+    sub-ring ``g // (N / P)``, the same contiguous-block ownership rule the
+    slot-sharded memory layout uses — so under a `mem_shard.memory_mesh`
+    context with P == shards the partition dimension shards over the mesh
+    axis and each device carries only the 1/P of the index covering the
+    slots it owns. The canonical single-device index is the P=1 special
+    case (one full-depth ring per bucket — the original layout).
+
+    buckets: (B, T, n_buckets, P, d) int32 global slot-indices, -1 = empty;
+             d = bucket_size // P (total per-bucket capacity is unchanged).
+    cursor:  (B, T, n_buckets, P) int32 ring-insert position per sub-ring.
     """
 
     buckets: jax.Array
@@ -159,7 +174,10 @@ class StepDeltas(NamedTuple):
 
     write_idx: jax.Array     # (B, Hw) int32 rows touched by the write
     old_rows: jax.Array      # (B, Hw, W) their pre-write contents
-    read_idx: jax.Array      # (B, H, K) int32 rows selected by the read
+    read_idx: jax.Array      # (B, H, K) int32 rows selected by the read,
+    #                          *signed*: -1 = no valid candidate (cold LSH
+    #                          index) — the replay reconstructs the zero-
+    #                          weight validity mask from the sign
 
 
 def tree_bytes(tree) -> int:

@@ -44,10 +44,13 @@ shard_map; the engine itself only has to keep its *residual stacks* laid
 out consistently, which `mem_shard.constrain_state` does — the dense
 boundary-checkpoint stack of the chunked mode (one full state every C
 steps) is sharded exactly like the live state (its memory leaves put the
-slot-row dimension on the mesh axis), while the O(C·K·W) sparse delta
-stacks are explicitly replicated (they are index/row records every shard
-needs during rollback). This closes the multi-host remainder of the
-chunked engine: per-device checkpoint-stack memory is O(T/C · state/S).
+slot-row dimension on the mesh axis, and in LSH mode the stacked ANN
+index leaves put their ownership-partition dimension there, so boundary
+checkpoints never replicate the bucket tables either), while the
+O(C·K·W) sparse delta stacks are explicitly replicated (they are
+index/row records every shard needs during rollback). This closes the
+multi-host remainder of the chunked engine: per-device checkpoint-stack
+memory is O(T/C · state/S).
 """
 from __future__ import annotations
 

@@ -34,9 +34,11 @@ def reshard_tree(tree, axes_tree, new_mesh):
 def relayout_memory_state(tree, num_slots: int, new_shards: int):
     """Convert every slot-dimension leaf of a recurrent-state tree between
     mem-shard layouts (current shard count inferred from the row dimension;
-    `new_shards=1` is the canonical single-device layout). Use together
-    with `reshard_tree`/`mem_shard.place_state` when a scale event changes
-    the model-parallel degree."""
+    `new_shards=1` is the canonical single-device layout), and re-partition
+    any LSH index (buckets, cursor) pair to the new shard count so the
+    mesh-native ANN path survives the scale event (docs/sharding.md). Use
+    together with `reshard_tree`/`mem_shard.place_state` when a scale event
+    changes the model-parallel degree."""
     from repro.distributed import mem_shard
     return mem_shard.relayout_state(tree, num_slots, new_shards)
 

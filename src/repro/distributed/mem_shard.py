@@ -55,6 +55,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
+import warnings
 from typing import NamedTuple, Optional
 
 import numpy as np
@@ -64,7 +65,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.types import LA_SCRATCH, SCRATCH_ROWS, SLOT_LEAVES
+from repro.core.types import (ANN_LEAVES, LA_SCRATCH, SCRATCH_ROWS,
+                              SLOT_LEAVES)
 from repro.kernels import ops as _ops
 
 
@@ -242,6 +244,58 @@ def np_relayout(arr: np.ndarray, num_slots: int, from_shards: int,
         (B, N + to_shards * SCRATCH_ROWS) + tail)
 
 
+def np_relayout_ann(buckets: np.ndarray, cursor: np.ndarray, num_slots: int,
+                    to_partitions: int):
+    """Host-side (numpy) re-partitioning of an LSH index between ownership
+    partition counts — the checkpoint restore path's ANN counterpart of
+    `np_relayout` (save on mesh A, restore on mesh B / single device).
+
+    Bucket contents are *global* slot indices but their placement is
+    layout-local (which sub-ring a slot sits in, and where its ring
+    cursor points, depend on the partition count), so a partition-count
+    change cannot be a reshape: every entry is re-routed to its new
+    owner's sub-ring. The deterministic remap rule: per (batch, table,
+    bucket), entries are drained oldest→newest from each old sub-ring, old
+    partitions visited in ascending order, and re-inserted in that order
+    into the new sub-rings — when a new sub-ring overflows its depth
+    d = bucket_size/P, the oldest drained entries drop first, exactly the
+    ring-overwrite semantics a live rebuild would apply. Total per-bucket
+    capacity (bucket_size = P·d) is preserved and merging partitions only
+    *grows* per-owner capacity, so S→1 (and the S→1→S round trip) loses
+    nothing; any move that shrinks a sub-ring below its entry count —
+    1→S included — drops the oldest entries of the overfull sub-rings
+    (documented, tested in tests/test_mesh_parity.py and
+    tests/test_checkpoint_layout.py).
+
+    Python-loop implementation over (B, T, n_buckets) — restore is a rare,
+    host-side path; sizes are a few thousand buckets."""
+    B, T, nb, p_from, d_from = buckets.shape
+    cap = p_from * d_from
+    if cap % to_partitions or num_slots % to_partitions:
+        raise ValueError(
+            f"cannot re-partition LSH index to P={to_partitions}: bucket "
+            f"capacity {cap} and num_slots={num_slots} must both divide")
+    d_to = cap // to_partitions
+    blk = num_slots // to_partitions
+    out_b = np.full((B, T, nb, to_partitions, d_to), -1, np.int32)
+    out_c = np.zeros((B, T, nb, to_partitions), np.int32)
+    for b in range(B):
+        for t in range(T):
+            for k in range(nb):
+                drained = [[] for _ in range(to_partitions)]
+                for p in range(p_from):
+                    cur = int(cursor[b, t, k, p])
+                    for j in range(d_from):       # oldest → newest
+                        e = int(buckets[b, t, k, p, (cur + j) % d_from])
+                        if e >= 0:
+                            drained[e // blk].append(e)
+                for p, seq in enumerate(drained):
+                    seq = seq[-d_to:]             # overflow: oldest drop
+                    out_b[b, t, k, p, :len(seq)] = seq
+                    out_c[b, t, k, p] = len(seq) % d_to
+    return out_b, out_c
+
+
 # Layout transforms and sharding specs key on the *field name and dim
 # position* of the slot leaves (`core.types.SLOT_LEAVES` — the same single
 # set the checkpoint migration shims trust), never on a bare size match: a
@@ -256,21 +310,33 @@ def _leaf_name(path) -> str:
 
 
 def _slot_dim(name: str, leaf) -> Optional[int]:
-    """Dim index of the slot rows for a named state leaf: -2 for the memory
-    buffer ((..., rows, W)), -1 for the usage table ((..., rows)). None for
-    anything that is not a slot-dimension leaf (`SLOT_LEAVES`)."""
-    if name not in SLOT_LEAVES or not hasattr(leaf, "ndim"):
+    """Dim index of the sharding axis for a named state leaf: -2 for the
+    memory buffer ((..., rows, W)) and the ANN bucket table
+    ((..., P, d)), -1 for the usage table ((..., rows)) and the ANN cursor
+    ((..., P)). None for anything that is not a slot-dimension leaf
+    (`SLOT_LEAVES` / `ANN_LEAVES`)."""
+    if name not in SLOT_LEAVES and name not in ANN_LEAVES:
         return None
-    if name == "memory":
+    if not hasattr(leaf, "ndim"):
+        return None
+    if name in ("memory", "buckets"):
         return leaf.ndim - 2 if leaf.ndim >= 2 else None
     return leaf.ndim - 1 if leaf.ndim >= 1 else None
 
 
+def _leaf_extent(ctx: MemShardCtx, name: str) -> int:
+    """Size the sharding dim of a named leaf must have in this context's
+    layout: N + S rows for memory/usage, S partitions for the ANN index."""
+    return ctx.shards if name in ANN_LEAVES else ctx.sharded_rows
+
+
 def _map_slot_leaves(tree, fn):
-    """tree_map that hands `fn(dim, leaf)` only the named slot leaves (dim =
-    their slot-rows axis); everything else passes through `fn(None, leaf)`."""
+    """tree_map that hands `fn(name, dim, leaf)` only the named slot leaves
+    (dim = their sharding axis); everything else passes through
+    `fn(name, None, leaf)`."""
     def visit(path, leaf):
-        return fn(_slot_dim(_leaf_name(path), leaf), leaf)
+        name = _leaf_name(path)
+        return fn(name, _slot_dim(name, leaf), leaf)
     return jax.tree_util.tree_map_with_path(visit, tree)
 
 
@@ -285,8 +351,9 @@ def to_shard_state(tree, ctx: Optional[MemShardCtx] = None):
         return tree
     canon = ctx.num_slots + SCRATCH_ROWS
 
-    def conv(dim, leaf):
-        if dim is None or dim != 1 or leaf.shape[dim] != canon:
+    def conv(name, dim, leaf):
+        if (name in ANN_LEAVES or dim is None or dim != 1
+                or leaf.shape[dim] != canon):
             return leaf
         return to_shard_layout(leaf, ctx.num_slots, ctx.shards)
     return _map_slot_leaves(tree, conv)
@@ -298,8 +365,14 @@ def from_shard_state(tree, ctx: Optional[MemShardCtx] = None):
     if ctx is None or ctx.shards == 1:
         return tree
 
-    def conv(dim, leaf):
-        if dim is None or dim != 1 or leaf.shape[dim] != ctx.sharded_rows:
+    # The ANN index is NOT converted: its partition count is *semantic*
+    # (it determines per-bucket sub-ring depths and hence candidate sets),
+    # not mere placement — re-partitioning an index is a remap/rebuild
+    # (`np_relayout_ann`, or `ann_build` on the new layout), never a
+    # reshape.
+    def conv(name, dim, leaf):
+        if (name in ANN_LEAVES or dim is None or dim != 1
+                or leaf.shape[dim] != ctx.sharded_rows):
             return leaf
         return from_shard_layout(leaf, ctx.num_slots, ctx.shards)
     return _map_slot_leaves(tree, conv)
@@ -309,58 +382,114 @@ def relayout_state(tree, num_slots: int, new_shards: int):
     """Convert the named slot-dimension leaves between shard counts,
     inferring the current count from the row dimension (rows = N + S).
     Elastic scaling uses this to move a recurrent carry onto a mesh with a
-    different model degree (distributed/elastic.py)."""
-    def conv(dim, leaf):
-        if dim is None or dim != 1:
+    different model degree (distributed/elastic.py). ANN index
+    (buckets, cursor) pairs are re-partitioned to `new_shards` as well —
+    on the host, via `np_relayout_ann`, since their partition count is
+    semantic, not mere placement — so an LSH-mode carry keeps the
+    mesh-native index path after a scale event instead of silently
+    falling back to the replicated-index read. An index whose bucket
+    capacity cannot take `new_shards` partitions is left as-is with a
+    warning (that fallback is correct, just replicated)."""
+    def conv(name, dim, leaf):
+        if name in ANN_LEAVES or dim is None or dim != 1:
             return leaf
         s_from = leaf.shape[dim] - num_slots
         if s_from < 1 or num_slots % s_from or s_from == new_shards:
             return leaf
         x = from_shard_layout(jnp.asarray(leaf), num_slots, s_from)
         return to_shard_layout(x, num_slots, new_shards)
-    return _map_slot_leaves(tree, conv)
+    return _relayout_ann_leaves(_map_slot_leaves(tree, conv), num_slots,
+                                new_shards)
+
+
+def _relayout_ann_leaves(tree, num_slots: int, to_partitions: int):
+    """Re-partition every sibling (buckets, cursor) ANN pair of `tree` to
+    `to_partitions` (host-side `np_relayout_ann` — the two leaves move
+    together because ring order lives in the cursor). Pairs already at the
+    target count, non-index decoys (wrong rank), and indivisible
+    capacities (warned) pass through."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [leaf for _, leaf in flat]
+    groups: dict = {}
+    for i, (path, leaf) in enumerate(flat):
+        name = _leaf_name(path)
+        if name in ANN_LEAVES and hasattr(leaf, "ndim"):
+            groups.setdefault(tuple(str(k) for k in path[:-1]), {})[name] \
+                = (i, leaf)
+    for parent, g in groups.items():
+        if set(g) != {"buckets", "cursor"}:
+            continue
+        bi, b = g["buckets"]
+        ci, c = g["cursor"]
+        if (b.ndim != 5 or c.ndim != 4 or b.shape[:4] != c.shape
+                or b.shape[-2] == to_partitions):
+            continue
+        cap = b.shape[-2] * b.shape[-1]
+        if to_partitions < 1 or cap % to_partitions \
+                or num_slots % to_partitions:
+            warnings.warn(
+                f"LSH index at {'/'.join(parent)} (P={b.shape[-2]}, "
+                f"bucket capacity {cap}) cannot re-partition to "
+                f"{to_partitions} — leaving it as-is (reads fall back to "
+                f"the replicated-index path)", UserWarning, stacklevel=3)
+            continue
+        nb, nc = np_relayout_ann(np.asarray(jax.device_get(b)),
+                                 np.asarray(jax.device_get(c)),
+                                 num_slots, to_partitions)
+        leaves[bi], leaves[ci] = jnp.asarray(nb), jnp.asarray(nc)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 # --------------------------------------------------------------------------
 # State specs ("shard-consistent state specs" for jit/device_put/constraints)
 # --------------------------------------------------------------------------
 
-def leaf_spec(ctx: MemShardCtx, dim: Optional[int], shape) -> P:
-    """PartitionSpec placing the mesh axis on `dim` — the slot-rows axis a
+def leaf_spec(ctx: MemShardCtx, dim: Optional[int], shape,
+              extent: Optional[int] = None) -> P:
+    """PartitionSpec placing the mesh axis on `dim` — the sharding axis a
     named slot leaf resolved to via `_slot_dim` (works for live state
     leaves and for engine-stacked versions of them, e.g. the chunked
     unroll's (S_seg, B, N+S, W) boundary-checkpoint stack, whose rows dim
-    is still ndim-2). Anything else — including a slot leaf whose row
-    count does not match the context's layout — is explicitly replicated."""
-    if dim is None or shape[dim] != ctx.sharded_rows:
+    is still ndim-2, or a stacked (S_seg, B, T, nb, P, d) ANN bucket
+    table). ``extent`` is the size the dim must have to shard (default:
+    the sharded row count; the ANN leaves pass the shard count). Anything
+    else — including a slot leaf whose dim size does not match the
+    context's layout — is explicitly replicated."""
+    if extent is None:
+        extent = ctx.sharded_rows
+    if dim is None or shape[dim] != extent:
         return P()
     return P(*(ctx.axis if i == dim else None for i in range(len(shape))))
 
 
 def state_shardings(tree, ctx: Optional[MemShardCtx] = None):
     """NamedSharding pytree for a state tree: slot-sharded memory/usage
-    leaves (by field name + dim position) on the mesh axis, everything
-    else replicated. None without an active (distributed) context."""
+    leaves and ownership-partitioned ANN index leaves (by field name + dim
+    position) on the mesh axis, everything else replicated. None without
+    an active (distributed) context."""
     ctx = ctx or current()
     if ctx is None or ctx.shards == 1:
         return None
-    return _map_slot_leaves(tree, lambda dim, leaf: NamedSharding(
-        ctx.mesh, leaf_spec(ctx, dim, leaf.shape)))
+    return _map_slot_leaves(tree, lambda name, dim, leaf: NamedSharding(
+        ctx.mesh, leaf_spec(ctx, dim, leaf.shape, _leaf_extent(ctx, name))))
 
 
 def constrain_state(tree):
     """`with_sharding_constraint` every leaf per `leaf_spec` — sharded
-    memory rows on the mesh axis, explicit replication elsewhere (this is
-    what keeps the chunked engine's O(C·K·W) delta stacks replicated and
-    its dense boundary checkpoints sharded like the live state). No-op
+    memory rows (and ANN index partitions) on the mesh axis, explicit
+    replication elsewhere (this is what keeps the chunked engine's
+    O(C·K·W) delta stacks replicated and its dense boundary checkpoints —
+    the ANN state riding along — sharded like the live state). No-op
     without an active distributed context."""
     ctx = current()
     if ctx is None or ctx.shards == 1:
         return tree
-    return _map_slot_leaves(tree, lambda dim, leaf:
+    return _map_slot_leaves(tree, lambda name, dim, leaf:
                             jax.lax.with_sharding_constraint(
                                 leaf, NamedSharding(
-                                    ctx.mesh, leaf_spec(ctx, dim, leaf.shape))))
+                                    ctx.mesh,
+                                    leaf_spec(ctx, dim, leaf.shape,
+                                              _leaf_extent(ctx, name)))))
 
 
 def place_state(tree, ctx: Optional[MemShardCtx] = None):
@@ -528,6 +657,165 @@ def sparse_write_update_sharded(ctx: MemShardCtx, mem, la, write_idx,
                  (_mem_spec(ctx), _vec_spec(ctx), P(), P(), P(), P(), P()),
                  (_mem_spec(ctx), _vec_spec(ctx)))(
                      mem, la, write_idx, write_w, a, lra_idx, step)
+
+
+# --------------------------------------------------------------------------
+# Sharded LSH index (ANN) ops — the bucket tables shard by slot ownership
+# --------------------------------------------------------------------------
+#
+# The index layout is `core.ann`'s ownership-partitioned ANNState with
+# P == ctx.shards: buckets (B, T, nb, S, d), cursor (B, T, nb, S), sharded
+# over the partition dimension — each device holds only the sub-rings
+# covering the slots it owns (1/S of the index). Inserts are collective-
+# free: a shard hashes the rows it stores locally and scatters only owned
+# indices (non-owned scatters route out of bounds and drop — the bucket-
+# table analogue of the scratch-row trick). Queries hash shard-local,
+# re-rank the local candidates against the *local* memory block (every
+# local candidate is an owned slot), and merge per-shard top-K sets through
+# the same O(B·K) score+index all-gather the exact-read path uses.
+
+def _ann_specs(ctx):
+    """(buckets, cursor) PartitionSpecs: partition dim on the mesh axis."""
+    return (P(None, None, None, ctx.axis, None),
+            P(None, None, None, ctx.axis))
+
+
+def ann_insert_sharded(ctx: MemShardCtx, planes, state, idx, mem, cfg):
+    """Mesh-native `ann.ann_insert`: no collective at all. Each shard reads
+    the rows it owns from its local memory block (non-owned indices resolve
+    to the scratch row, whose hash is discarded), hashes them, and inserts
+    the owned indices into its local sub-rings; rank/cursor sequencing
+    counts only owned same-bucket pairs — exactly the (bucket, owner)
+    grouping of the canonical partitioned insert, one owner at a time."""
+    from repro.core import ann as ann_lib
+    T = cfg.lsh_tables
+
+    def body(planes, buckets_l, cursor_l, idx, mem_l):
+        B = idx.shape[0]
+        d = buckets_l.shape[-1]
+        s = jax.lax.axis_index(ctx.axis)
+        own, lidx = _own_local(ctx, idx, s)
+        rows = mem_l[jnp.arange(B)[:, None], lidx]            # (B, J, W)
+        ids = ann_lib.lsh_hash(planes, rows, backend=cfg.backend)  # (B,J,T)
+        b = jnp.arange(B)[:, None, None]
+        t = jnp.arange(T)[None, None, :]
+        # Owned entries form one ownership group (this shard); non-owned
+        # entries group with nothing, so they neither rank nor count —
+        # the same (bucket, owner) sequencing as the canonical insert,
+        # restricted to one owner (ann.ring_ranks is the single source).
+        rank, count = ann_lib.ring_ranks(
+            ids, own[:, :, None] & own[:, None, :])
+        cur = cursor_l[b, t, ids, 0]                          # (B, J, T)
+        # Non-owned entries scatter out of bounds and drop.
+        pos = jnp.where(own[..., None], (cur + rank) % d, d)
+        buckets = buckets_l.at[b, t, ids, 0, pos].set(
+            jnp.broadcast_to(idx[:, :, None], ids.shape), mode="drop")
+        bid = jnp.where(own[..., None], ids, buckets_l.shape[2])
+        cursor = cursor_l.at[b, t, bid, 0].set((cur + count) % d,
+                                               mode="drop")
+        return buckets, cursor
+
+    bspec, cspec = _ann_specs(ctx)
+    buckets, cursor = _smap(
+        ctx, body, (P(), bspec, cspec, P(), _mem_spec(ctx)),
+        (bspec, cspec))(planes, state.buckets, state.cursor, idx, mem)
+    return type(state)(buckets=buckets, cursor=cursor)
+
+
+def lsh_candidate_topk_sharded(ctx: MemShardCtx, planes, state, q, mem,
+                               extra_idx, k: int, cfg):
+    """Mesh-native LSH candidate selection: each shard hashes the
+    (replicated) queries, gathers its local sub-rings' candidates plus the
+    owned entries of `extra_idx` (the freshly written rows), re-ranks them
+    against its local memory block, takes a local top-K, and the per-shard
+    (B, H, K) score+index sets merge through the existing all-gather +
+    replicated K-merge — O(B·H·K) collective, independent of N and of the
+    bucket-table size. Candidate order (local sub-rings, then owned
+    extras, shard-major) equals the canonical `ann.ann_candidates` array's
+    position order, so top-K tie-breaking matches the single-device path
+    exactly. Returns (B, H, K) *signed* global indices (-1 = no valid
+    candidate), replicated."""
+    from repro.core import addressing as addr_lib
+    from repro.core import ann as ann_lib
+    T = cfg.lsh_tables
+    d = state.buckets.shape[-1]
+    c_local = T * d + extra_idx.shape[-1]
+    if k > c_local:
+        raise ValueError(
+            f"top-{k} LSH read needs K <= per-shard candidates "
+            f"{c_local} (= tables*bucket_size/shards + write rows)")
+
+    def body(planes, q, mem_l, buckets_l, widx):
+        B, H, _ = q.shape
+        s = jax.lax.axis_index(ctx.axis)
+        ids = ann_lib.lsh_hash(planes, q, backend=cfg.backend)  # (B, H, T)
+        b = jnp.arange(B)[:, None, None]
+        t = jnp.arange(T)[None, None, :]
+        cl = buckets_l[b, t, ids, 0].reshape(B, H, T * d)
+        own = (widx // ctx.local_n) == s                        # (B, J)
+        extra = jnp.where(own, widx, -1)[:, None, :]
+        extra = jnp.broadcast_to(extra, (B, H, widx.shape[-1]))
+        cand = jnp.concatenate([cl, extra], axis=-1)            # (B,H,C_l)
+        # Local dedup == global dedup: ownership blocks are disjoint.
+        cand = addr_lib._dedup(cand)
+        lidx = jnp.where(cand >= 0, cand - s * ctx.local_n, ctx.local_n)
+        rows = mem_l[jnp.arange(B)[:, None, None], lidx]        # (B,H,C_l,W)
+        sims = addr_lib._rerank(jax.lax.stop_gradient(q),
+                                jax.lax.stop_gradient(rows))
+        sims = jnp.where(cand < 0, addr_lib._NEG, sims)
+        vals, pos = jax.lax.top_k(sims, k)
+        gidx = jnp.take_along_axis(cand, pos, axis=-1)
+        av = _concat_shards(vals, ctx.axis)                     # (B, H, S·K)
+        ai = _concat_shards(gidx, ctx.axis)
+        _, mpos = jax.lax.top_k(av, k)
+        return jnp.take_along_axis(ai, mpos, axis=-1)
+
+    bspec, _ = _ann_specs(ctx)
+    return _smap(ctx, body, (P(), P(), _mem_spec(ctx), bspec, P()),
+                 P())(planes, q, mem, state.buckets, extra_idx)
+
+
+def ann_build_sharded(ctx: MemShardCtx, planes, memory, cfg, *,
+                      chunk: int | None = None):
+    """Mesh-native `ann.ann_build`: each shard bulk-inserts the rows it
+    owns into its local sub-table — **no** canonical all-gather of the
+    O(N·W) memory, no collective at all (each shard's insert sequence over
+    its owned slots in ascending order is exactly the canonical build's
+    sequence restricted to that owner, so the result equals the canonical
+    P-partitioned build bit-for-bit)."""
+    from repro.core import ann as ann_lib
+    from repro.core.types import ANNState
+    nb = 2 ** cfg.lsh_bits
+    T = cfg.lsh_tables
+    d = cfg.lsh_bucket_size // ctx.shards
+
+    def body(planes, mem_l):
+        B = mem_l.shape[0]
+        s = jax.lax.axis_index(ctx.axis)
+        n_l = ctx.local_n
+        state = ANNState(
+            buckets=jnp.full((B, T, nb, 1, d), -1, jnp.int32),
+            cursor=jnp.zeros((B, T, nb, 1), jnp.int32))
+        J = max(1, min(chunk or d, n_l, d))
+
+        def insert_chunk(st, lidx):                           # lidx: (J,)
+            rows_j = jnp.take(mem_l, lidx, axis=1)            # (B, J, W)
+            gidx = jnp.broadcast_to((lidx + s * n_l)[None],
+                                    (B, lidx.shape[0]))
+            return ann_lib.ann_insert(planes, st, gidx, rows_j, cfg), None
+
+        n_full = n_l // J
+        main = jnp.arange(n_full * J, dtype=jnp.int32).reshape(n_full, J)
+        state, _ = jax.lax.scan(insert_chunk, state, main)
+        if n_l % J:
+            state, _ = insert_chunk(
+                state, jnp.arange(n_full * J, n_l, dtype=jnp.int32))
+        return state.buckets, state.cursor
+
+    bspec, cspec = _ann_specs(ctx)
+    buckets, cursor = _smap(ctx, body, (P(), _mem_spec(ctx)),
+                            (bspec, cspec))(planes, memory)
+    return ANNState(buckets=buckets, cursor=cursor)
 
 
 def update_last_access_sharded(ctx: MemShardCtx, la, idx, w, step,

@@ -61,6 +61,9 @@ def _serve(cfg, *, batch, prompt_len, gen_len, max_len, seed):
     logits = None
     for tok in prompt_iter:
         logits, cache = serve_step(params, cache, step_tok(tok))
+    # JAX dispatch is async: without blocking on the result the stopwatch
+    # measures enqueue time, not compute, inflating the throughput numbers.
+    jax.block_until_ready(logits)
     prefill_t = time.time() - t0
 
     out_tokens = []
@@ -74,6 +77,7 @@ def _serve(cfg, *, batch, prompt_len, gen_len, max_len, seed):
         logits, cache = serve_step(params, cache, step_in)
         tok = jnp.argmax(logits[:, -1], axis=-1)
         out_tokens.append(tok)
+    jax.block_until_ready(tok)       # same async-dispatch pitfall as above
     decode_t = time.time() - t0
     tokens = jnp.stack(out_tokens, axis=1)
     return {

@@ -125,6 +125,91 @@ def test_format2_checkpoint_never_migrates(tmp_path):
         restore_checkpoint(str(tmp_path), template)
 
 
+def _set_format(directory: str, step: int, fmt: int):
+    mpath = os.path.join(directory, f"step_{step}", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["format"] = fmt
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+
+def test_pre_partition_ann_checkpoint_migrates(tmp_path):
+    """Format-2 (scratch-row era) checkpoints stored the un-partitioned
+    LSH index — buckets (B, T, nb, bucket_size), cursor (B, T, nb).
+    Restoring into the ownership-partitioned layout's P=1 template is a
+    pure reshape (the inserted partition axis); into a P>1 template the
+    reshaped index then re-partitions through the paired re-layout, given
+    a declared num_slots to pin the ownership rule. A format-3 checkpoint
+    with the same shapes keeps raising — its shapes are authoritative."""
+    from repro.core import ann as ann_lib
+    from repro.core.types import ANNState
+    mem = MemoryConfig(num_slots=32, word_size=8, num_heads=2, k=2,
+                       ann="lsh", lsh_tables=2, lsh_bits=3,
+                       lsh_bucket_size=8)
+    cfg = sam_lib.SAMConfig(mem, CTL)
+    params, state = _stepped_state(cfg)
+    legacy = state._replace(ann=ANNState(
+        buckets=state.ann.buckets[:, :, :, 0, :],        # (B, T, nb, S_b)
+        cursor=state.ann.cursor[..., 0]))                # (B, T, nb)
+    save_checkpoint(str(tmp_path / "a"), 5, legacy)
+    _set_format(str(tmp_path / "a"), 5, 2)
+    template = sam_lib.init_state(2, cfg)                # P=1, 5-D leaves
+    restored, _ = restore_checkpoint(str(tmp_path / "a"), template)
+    assert np.array_equal(np.asarray(restored.ann.buckets),
+                          np.asarray(state.ann.buckets))
+    assert np.array_equal(np.asarray(restored.ann.cursor),
+                          np.asarray(state.ann.cursor))
+    # Same legacy checkpoint into a P=4 template: reshape + re-partition.
+    # Oracle = the documented rule: drain each bucket's ring oldest→newest,
+    # route entries to their new owner, keep the newest d_to=2 per
+    # sub-ring (oldest drop on overflow — capacity per owner shrank 8→2).
+    tmpl4 = sam_lib.init_state(2, cfg, ann_partitions=4)
+    restored4, _ = restore_checkpoint(str(tmp_path / "a"), tmpl4,
+                                      expect_num_slots=32)
+    assert restored4.ann.buckets.shape[-2:] == (4, 2)
+    b_old = np.asarray(legacy.ann.buckets)               # (B, T, nb, 8)
+    c_old = np.asarray(legacy.ann.cursor)
+    b_new = np.asarray(restored4.ann.buckets)
+    for bi in range(b_old.shape[0]):
+        for t in range(b_old.shape[1]):
+            for k in range(b_old.shape[2]):
+                cur = int(c_old[bi, t, k])
+                drained = [int(b_old[bi, t, k, (cur + j) % 8])
+                           for j in range(8)]
+                drained = [e for e in drained if e >= 0]
+                for p in range(4):
+                    want = [e for e in drained if e // 8 == p][-2:]
+                    got = [int(e) for e in b_new[bi, t, k, p] if e >= 0]
+                    assert sorted(got) == sorted(want), (bi, t, k, p)
+    # Authoritative format: the same shapes under format 3 stay an error.
+    save_checkpoint(str(tmp_path / "b"), 5, legacy)
+    with pytest.raises(ValueError, match="re-partition|re-layout"):
+        restore_checkpoint(str(tmp_path / "b"), template)
+    # The migrated state steps normally (LSH read path intact).
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8))
+    _, y = sam_lib.sam_step(params, cfg, restored, x)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_ann_relayout_requires_both_leaves(tmp_path):
+    """A partition-count mismatch on only one ANN leaf (the other matching
+    the template) is a config change — e.g. a bucket-size change that
+    keeps cursor shapes equal — and must raise, not half-remap."""
+    from repro.distributed import mem_shard
+    b = np.full((2, 2, 8, 2, 4), -1, np.int32)
+    c = np.zeros((2, 2, 8, 2), np.int32)
+    save_checkpoint(str(tmp_path), 1, {"buckets": b, "cursor": c},
+                    mem_layout=(32, 1))
+    tmpl = {"buckets": jnp.full((2, 2, 8, 2, 2), -1, jnp.int32),   # cap 4
+            "cursor": jnp.zeros((2, 2, 8, 2), jnp.int32)}
+    with pytest.raises(ValueError, match="both buckets and cursor"):
+        restore_checkpoint(str(tmp_path), tmpl)
+    # np_relayout_ann itself refuses a capacity that does not divide.
+    with pytest.raises(ValueError, match="re-partition"):
+        mem_shard.np_relayout_ann(b, c, 32, 3)
+
+
 def test_migration_shim_is_narrow():
     """Only the one-extra-row-on-axis-1 mismatch is migrated."""
     arr = np.zeros((2, 8, 4), np.float32)

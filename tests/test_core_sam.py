@@ -60,6 +60,64 @@ def test_write_erases_lra_and_adds(rng_key):
     np.testing.assert_allclose(got, np.asarray(deltas.old_rows))
 
 
+def test_cold_index_read_is_zero_with_zero_gradient(rng_key):
+    """Regression: a freshly-initialized LSH index yields all -1 candidates;
+    the top-K then selects masked positions which clamp to row 0. Before
+    the validity-mask fix, the softmax handed row 0 uniform *nonzero*
+    weight — K phantom reads of (and gradients into) row 0. Now invalid
+    selections carry exactly zero weight: the read word is zero and no
+    gradient reaches row 0."""
+    B, H, W, K = 2, 2, 8, 4
+    q = jax.random.normal(rng_key, (B, H, W))
+    m = jax.random.normal(jax.random.PRNGKey(1), (B, 16, W))
+    beta = jnp.ones((B, H)) * 2.0
+    empty = jnp.full((B, H, 12), -1, jnp.int32)      # cold index: no cands
+
+    def read_sum(m):
+        r = addr.sparse_read_candidates(q, m, beta, K, empty)
+        return r.weights.sum() + jnp.abs(r.words).sum()
+
+    r = addr.sparse_read_candidates(q, m, beta, K, empty)
+    np.testing.assert_array_equal(np.asarray(r.weights), 0.0)
+    np.testing.assert_array_equal(np.asarray(r.words), 0.0)
+    g = jax.grad(read_sum)(m)
+    np.testing.assert_array_equal(np.asarray(g), 0.0)   # incl. row 0
+
+    # Partially-cold set: one valid candidate, K=4 selections — the valid
+    # row keeps full (renormalized) weight, the padding reads weigh zero.
+    cand = empty.at[:, :, 3].set(5)
+    r = addr.sparse_read_candidates(q, m, beta, K, cand)
+    np.testing.assert_allclose(np.asarray(r.weights.sum(-1)), 1.0,
+                               rtol=1e-6)
+    assert int((np.asarray(r.weights) > 0).sum(-1).max()) == 1
+    g = jax.grad(lambda mm: jnp.abs(addr.sparse_read_candidates(
+        q, mm, beta, K, cand).words).sum())(m)
+    assert float(np.abs(np.asarray(g)[:, 0]).max()) == 0.0   # row 0 clean
+    assert float(np.abs(np.asarray(g)[:, 5]).max()) > 0.0
+
+
+def test_fresh_lsh_state_first_read_has_no_row0_gradient(rng_key):
+    """End-to-end form of the cold-index regression: on the very first SAM
+    step the index is empty, so any read selection beyond the freshly
+    written rows must contribute zero weight — memory row gradients flow
+    only through rows the step actually touched."""
+    cfg = make_cfg("lsh")
+    params = init_params(rng_key, cfg)
+    state = init_state(2, cfg)
+    x = jax.random.normal(rng_key, (2, 8))
+    _, _, deltas = sam_step(params, cfg, state, x, collect_deltas=True)
+    touched = set(np.asarray(deltas.write_idx).ravel().tolist())
+
+    def loss(mem):
+        s = state._replace(memory=mem)
+        _, y = sam_step(params, cfg, s, x)
+        return (y ** 2).sum()
+
+    g = np.abs(np.asarray(jax.grad(loss)(state.memory)))
+    untouched = sorted(set(range(cfg.memory.num_slots)) - touched)
+    assert g[:, untouched].max() == 0.0
+
+
 def test_usage_threshold():
     la = jnp.zeros((1, 8), jnp.int32)
     idx = jnp.array([[2, 3]])

@@ -7,12 +7,16 @@ These tests need 8 devices; the tier-1 driver in tests/test_sharding_optim.py
 
   * SAM and SDNC forward, gradient, and chunked-rollback BPTT match the
     single-device reference to 1e-5 on every unroll mode (exact-read and
-    LSH candidate reads);
+    LSH candidate reads, the LSH bucket tables sharded by slot ownership
+    with the final index asserted bit-exactly);
   * the compiled sharded step's HLO contains no full-memory collective —
     per-step collective bytes are independent of N (the GSPMD slot-sharded
-    path, the positive control, scales with N);
+    path, the positive control, scales with N); the sharded-LSH step
+    additionally compiles no full-bucket-table collective, and `ann_build`
+    on a sharded buffer compiles with no O(N·W) all-gather;
   * a checkpoint saved on mesh A (8-way) restores on mesh B (4-way) and on
-    a single device, bit-exact on the logical rows;
+    a single device, bit-exact on the logical rows; the LSH index
+    re-partitions with its per-bucket candidate sets preserved;
   * the streaming trainer under a mesh reproduces the single-device loss
     trajectory exactly.
 """
@@ -58,14 +62,23 @@ def _mesh24():
 
 @functools.lru_cache(maxsize=None)
 def _cell(kind: str):
-    if kind == "sdnc":
-        return SDNCCell(dnc_lib.DNCConfig(
-            MemoryConfig(num_slots=N, word_size=W, num_heads=H, k=K),
-            CTL, k_l=4, sparse=True))
     mem = MemoryConfig(num_slots=N, word_size=W, num_heads=H, k=K,
-                       ann="lsh" if kind == "sam_lsh" else "exact",
+                       ann="lsh" if kind.endswith("_lsh") else "exact",
                        lsh_tables=2, lsh_bits=3, lsh_bucket_size=8)
+    if kind.startswith("sdnc"):
+        return SDNCCell(dnc_lib.DNCConfig(mem, CTL, k_l=4, sparse=True))
     return SAMCell(sam_lib.SAMConfig(mem, CTL))
+
+
+def _init_state(cell, kind: str):
+    """Single-device state with the mesh run's *index semantics*: the LSH
+    index's ownership partitioning (P=8 sub-rings per bucket) determines
+    candidate sets, so the reference must carry the same partitioning —
+    unsharded — for parity to be meaningful. The memory layout itself is
+    pure placement and stays canonical here."""
+    if kind.endswith("_lsh"):
+        return cell.init_state(B, ann_partitions=8)
+    return cell.init_state(B)
 
 
 def _xs():
@@ -84,7 +97,7 @@ def _reference(kind: str, mode: str, chunk):
     cell = _cell(kind)
     params = cell.init_params(jax.random.PRNGKey(0))
     (_, (st, ys)), g = jax.value_and_grad(_loss, argnums=1, has_aux=True)(
-        cell, params, cell.init_state(B), mode, chunk)
+        cell, params, _init_state(cell, kind), mode, chunk)
     return params, st, ys, g
 
 
@@ -106,14 +119,24 @@ def _assert_state_matches(canon, ref):
 MODES = [("naive", None), ("sparse", None), ("chunked", 3)]
 
 
-@pytest.mark.parametrize("kind", ["sam", "sdnc"])
+@pytest.mark.parametrize("kind", ["sam", "sdnc", "sam_lsh", "sdnc_lsh"])
 @pytest.mark.parametrize("mode,chunk", MODES, ids=[m for m, _ in MODES])
 def test_forward_grad_bptt_parity(kind, mode, chunk):
+    """SAM and SDNC, exact and LSH reads: the mesh run (memory slot-sharded,
+    LSH bucket tables sharded by slot ownership) matches the single-device
+    reference at 1e-5 on outputs, final state, and gradients — the LSH
+    kinds additionally assert the final ANN index (buckets *and* cursors)
+    bit-exactly, which pins the collective-free sharded insert to the
+    canonical partitioned insert."""
     cell = _cell(kind)
     params, ref_st, ref_ys, ref_g = _reference(kind, mode, chunk)
     with mem_shard.memory_mesh(_mesh8(), N):
-        state = mem_shard.place_state(cell.init_state(B))
+        state = mem_shard.place_state(_init_state(cell, kind))
         assert state.memory.shape[1] == N + 8          # sharded layout
+        if kind.endswith("_lsh"):
+            assert state.ann.buckets.shape[-2] == 8    # sharded index
+            assert state.ann.buckets.addressable_shards[0].data.nbytes \
+                == state.ann.buckets.nbytes // 8       # 1/S per device
         f = jax.jit(functools.partial(
             jax.value_and_grad(_loss, argnums=1, has_aux=True),
             cell, mode=mode, chunk=chunk))
@@ -122,24 +145,6 @@ def test_forward_grad_bptt_parity(kind, mode, chunk):
     np.testing.assert_allclose(np.asarray(ys), np.asarray(ref_ys),
                                atol=TOL, rtol=0)
     _assert_state_matches(canon, ref_st)
-    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(ref_g)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   atol=TOL, rtol=0)
-
-
-def test_lsh_candidate_read_parity():
-    """ANN (LSH) mode: candidate gathers and index-sync inserts run through
-    the mesh route too."""
-    cell = _cell("sam_lsh")
-    params, ref_st, ref_ys, ref_g = _reference("sam_lsh", "sparse", None)
-    with mem_shard.memory_mesh(_mesh8(), N):
-        state = mem_shard.place_state(cell.init_state(B))
-        f = jax.jit(functools.partial(
-            jax.value_and_grad(_loss, argnums=1, has_aux=True),
-            cell, mode="sparse", chunk=None))
-        (_, (st, ys)), g = f(params, state)
-    np.testing.assert_allclose(np.asarray(ys), np.asarray(ref_ys),
-                               atol=TOL, rtol=0)
     for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(ref_g)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=TOL, rtol=0)
@@ -172,6 +177,42 @@ def test_step_hlo_collectives_scale_with_k_not_n():
     # would catch a regression that silently reintroduces dense traffic).
     assert ctrl_big["bytes_total"] >= ctrl_small["bytes_total"] * 2
     assert mesh_big["bytes_total"] < ctrl_big["bytes_total"] / 4
+
+
+def test_lsh_step_hlo_no_bucket_table_collective():
+    """Sharded-LSH step guard: no collective anywhere near the full bucket
+    table (or the memory buffer), traffic flat in N, and strictly below
+    the replicated-index positive control (whose read psum-gathers the
+    full O(C·W) candidate rows); per-device bucket-table bytes drop by
+    exactly the shard factor."""
+    from benchmarks import bench_shard
+    mesh = _mesh8()
+    small = bench_shard.compile_mesh_step_lsh(mesh, 256)
+    big = bench_shard.compile_mesh_step_lsh(mesh, 1024)
+    repl = bench_shard.compile_mesh_step_lsh(mesh, 1024, index_partitions=1)
+    table = repl["index_bytes_total"]
+    biggest = max((v["bytes"] / max(v["count"], 1)
+                   for v in big["collectives"].values()), default=0.0)
+    assert biggest < table / 8, \
+        f"sharded LSH step moves a {biggest}B collective (table {table}B)"
+    assert big["bytes_total"] <= small["bytes_total"] * 1.25
+    assert big["bytes_total"] < repl["bytes_total"] / 2
+    assert repl["bucket_table_bytes_per_device"] \
+        == big["bucket_table_bytes_per_device"] * 8
+
+
+def test_ann_build_sharded_compiles_without_canonical_allgather():
+    """`ann_build` on a slot-sharded buffer rebuilds shard-local: the
+    compiled HLO moves no collective anywhere near the O(N·W) memory (the
+    pre-shard rebuild all-gathered the whole buffer back to canonical
+    form)."""
+    from benchmarks import bench_shard
+    rec = bench_shard.compile_lsh_build(_mesh8(), 1024)
+    buf = bench_shard.B * 1024 * bench_shard.W * 4
+    biggest = max((v["bytes"] / max(v["count"], 1)
+                   for v in rec["collectives"].values()), default=0.0)
+    assert biggest < buf / 8, \
+        f"sharded ann_build moves a {biggest}B collective (buffer {buf}B)"
 
 
 # --------------------------------------------------------------------------
@@ -246,6 +287,57 @@ def test_pre_mesh_checkpoint_upgrades_with_declared_slots(tmp_path):
         canon = mem_shard.from_shard_state(restored["carry"])
     np.testing.assert_array_equal(np.asarray(canon.memory[:, :N]),
                                   np.asarray(logical))
+
+
+def _bucket_entry_sets(ann):
+    """Multiset of valid entries per (batch, table, bucket), partition-
+    agnostic — the candidate sets queries see."""
+    b = np.asarray(ann.buckets)
+    B_, T_, nb = b.shape[:3]
+    return [[sorted(int(e) for e in b[i, t, k].ravel() if e >= 0)
+             for k in range(nb)] for i in range(B_) for t in range(T_)]
+
+
+def test_checkpoint_ann_index_relayout(tmp_path):
+    """Bucket contents are layout-local ring placements, so a cross-mesh
+    restore re-partitions the (buckets, cursor) pair together: save the
+    LSH index populated on the 8-way mesh, restore onto a 4-way mesh and
+    a single device — the per-bucket candidate sets are preserved exactly
+    (total per-bucket capacity is partition-invariant), and the restored
+    index keeps working (cursors consistent)."""
+    from repro.checkpoint import ckpt as ckpt_lib
+    cell = _cell("sam_lsh")
+    cfg = cell.cfg
+    params = cell.init_params(jax.random.PRNGKey(0))
+    with mem_shard.memory_mesh(_mesh8(), N):
+        state = mem_shard.place_state(cell.init_state(B, ann_partitions=8))
+        step = jax.jit(functools.partial(sam_lib.sam_step, params, cfg))
+        for x in _xs():                        # populate the index
+            state, _ = step(state, x)
+        saved_sets = _bucket_entry_sets(state.ann)
+        ckpt_lib.save_checkpoint(str(tmp_path), 1, {"carry": state})
+    # 4-way restore: buckets (B, T, nb, 8, 1) -> (B, T, nb, 4, 2).
+    with mem_shard.memory_mesh(_mesh24(), N):
+        tmpl = {"carry": cell.init_state(B)}
+        restored, _ = ckpt_lib.restore_checkpoint(str(tmp_path), tmpl)
+        ann4 = restored["carry"].ann
+        assert ann4.buckets.shape[-2:] == (4, 2)
+        assert _bucket_entry_sets(ann4) == saved_sets
+        # Ownership rule holds after the remap: every entry sits in the
+        # sub-ring of its owner.
+        b4 = np.asarray(ann4.buckets)
+        part = np.arange(4)[None, None, None, :, None]
+        assert bool(((b4 < 0) | (b4 // (N // 4) == part)).all())
+    # Single-device restore (canonical P=1 full-depth rings).
+    tmpl1 = {"carry": cell.init_state(B)}
+    r1, _ = ckpt_lib.restore_checkpoint(str(tmp_path), tmpl1)
+    ann1 = r1["carry"].ann
+    assert ann1.buckets.shape[-2:] == (1, 8)
+    assert _bucket_entry_sets(ann1) == saved_sets
+    # The restored single-device state keeps stepping (cursor consistent).
+    s1 = r1["carry"]
+    s1, _ = sam_lib.sam_step(params, cfg, s1, _xs()[0])
+    assert bool(jnp.isfinite(s1.read.words).all())
 
 
 # --------------------------------------------------------------------------

@@ -148,6 +148,38 @@ def test_relayout_state_infers_current_shards():
         np.asarray(mem[:, :N]))
 
 
+def test_relayout_state_repartitions_ann_index():
+    """An elastic scale event must carry the LSH index to the new shard
+    count (else every later step silently falls back to the replicated-
+    index read): relayout_memory_state re-partitions sibling
+    (buckets, cursor) pairs, preserving the per-bucket entry sets when
+    capacity allows, and warns + passes through when it does not."""
+    from repro.distributed.elastic import relayout_memory_state
+    N = 16
+    cfg = MemoryConfig(num_slots=N, word_size=8, ann="lsh", lsh_tables=2,
+                       lsh_bits=3, lsh_bucket_size=8)
+    planes = ann_lib.lsh_planes(jax.random.PRNGKey(0), cfg)
+    mem = jax.random.normal(jax.random.PRNGKey(1), (2, N, 8))
+    ann8 = ann_lib.ann_build(planes, mem, cfg, partitions=8)
+    tree = {"memory": mem_shard.to_shard_layout(
+                jnp.zeros((2, N + 1, 3)), N, 8),
+            "ann": {"buckets": ann8.buckets, "cursor": ann8.cursor}}
+    out = relayout_memory_state(tree, N, 2)
+    assert out["memory"].shape == (2, N + 2, 3)
+    assert out["ann"]["buckets"].shape[-2:] == (2, 4)
+    # Capacity per owner grew (8 sub-rings of 1 -> 2 of 4): sets preserved.
+    def sets(b):
+        b = np.asarray(b)
+        return [sorted(int(e) for e in b[i, t, k].ravel() if e >= 0)
+                for i in range(2) for t in range(2) for k in range(8)]
+    assert sets(out["ann"]["buckets"]) == sets(ann8.buckets)
+    # Indivisible target: warn, leave the pair untouched.
+    with pytest.warns(UserWarning, match="re-partition"):
+        out3 = relayout_memory_state(
+            {"ann": {"buckets": ann8.buckets, "cursor": ann8.cursor}}, N, 3)
+    assert out3["ann"]["buckets"].shape == ann8.buckets.shape
+
+
 def test_np_relayout_rejects_bad_shards():
     arr = np.zeros((2, 13, 3), np.float32)
     with pytest.raises(ValueError):
