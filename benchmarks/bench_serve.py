@@ -1,0 +1,157 @@
+"""Continuous-batching serving bench: Poisson arrivals against the
+`launch/engine` ServeEngine, recording throughput (tok/s) and tail
+latency (p50/p99 time-to-first-token and end-to-end) per lane.
+
+Workload: an open-loop arrival process — request `i`'s arrival time is a
+seeded exponential inter-arrival draw, independent of service progress
+(the standard serving-bench discipline: a closed loop would let a slow
+server throttle its own offered load and flatter its tails). Each request
+is a distinct user with a random prompt; a fraction of users return for a
+second request, exercising the persistent-session path (evict → session
+store → restore) under load.
+
+Two lanes: single-device, and a forced-8-host-device mesh running the
+mesh-native slot-sharded memory path (the arch is SAM-augmented, so every
+decode step drives a sparse memory read+write per group). Results append
+to ``experiments/bench/BENCH_serve.json``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+"""
+from __future__ import annotations
+
+# CLI runs force the 8-device host platform; this MUST precede any jax
+# import (jax locks the device count on first init) and MUST NOT fire for
+# mere importers (the smoke test imports helpers under its own device
+# setup — mutating the env at import time would flip the whole importing
+# process to 8 fake devices).
+import os
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+
+def make_workload(cfg, *, requests: int, rate_hz: float, prompt_len: int,
+                  gen_len: int, seed: int = 0, revisit_frac: float = 0.25):
+    """Seeded Poisson(rate) arrival schedule: [(arrival_s, Request)].
+
+    The trailing ``revisit_frac`` of requests revisit an earlier user
+    (continuing that user's session) instead of introducing a new one."""
+    from repro.launch.engine import Request
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, requests))
+    out = []
+    n_fresh = max(1, int(round(requests * (1.0 - revisit_frac))))
+    for i, t in enumerate(arrivals):
+        # Trailing requests revisit users 0, 1, ... round-robin: bounded
+        # visits per user, so a session never outgrows max_len.
+        user = f"user{i if i < n_fresh else (i - n_fresh) % n_fresh}"
+        out.append((float(t), Request(
+            user=user,
+            prompt=rng.integers(1, cfg.vocab_size, prompt_len).tolist(),
+            max_new_tokens=gen_len, greedy=False, sample_seed=i)))
+    return out
+
+
+def run_lane(cfg, workload, *, lanes: int, max_len: int, mesh=None) -> dict:
+    """Serve `workload` open-loop and return the lane's metrics."""
+    from repro.launch.engine import ServeEngine
+
+    with ServeEngine(cfg, lanes=lanes, max_len=max_len, mesh=mesh) as eng:
+        # Warm the jit caches off the clock: one throwaway request.
+        from repro.launch.engine import Request
+        eng.run([Request(user="__warmup__", prompt=[1], max_new_tokens=1)])
+        eng.sessions.take("__warmup__")
+
+        pending = list(workload)
+        results = []
+        # time.time() throughout: the engine stamps first-token/finish
+        # times with it, so arrivals must live on the same clock.
+        t0 = time.time()
+        while pending or eng.scheduler.has_work:
+            now = time.time() - t0
+            while pending and pending[0][0] <= now:
+                t_arr, req = pending.pop(0)
+                req.arrival = t0 + t_arr
+                eng.submit(req)
+            if not eng.scheduler.has_work:
+                time.sleep(max(0.0, pending[0][0] - now))
+                continue
+            results.extend(eng.step())
+        wall = time.time() - t0
+        steps = eng.steps
+
+    total_tokens = sum(len(r["tokens"]) for r in results)
+    ttft = [r["first_token_time"] - r["arrival"] for r in results]
+    e2e = [r["finish_time"] - r["arrival"] for r in results]
+    assert len(results) == len(workload), "requests were dropped"
+    assert min(ttft) > 0 and min(e2e) > 0
+    pct = lambda xs, q: float(np.percentile(np.asarray(xs), q) * 1e3)
+    return {
+        "requests": len(results),
+        "steps": steps,
+        "wall_s": wall,
+        "tok_per_s": total_tokens / max(wall, 1e-9),
+        "ttft_p50_ms": pct(ttft, 50),
+        "ttft_p99_ms": pct(ttft, 99),
+        "latency_p50_ms": pct(e2e, 50),
+        "latency_p99_ms": pct(e2e, 99),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload (CI tier-1 smoke)")
+    ap.add_argument("--arch", default="h2o_danube_3_4b_sam")
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0 = auto)")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.launch.mesh import make_memory_mesh
+
+    cfg = reduced(get_config(args.arch))
+    assert cfg.memory is not None, "bench wants a SAM-augmented arch"
+    requests = 6 if args.smoke else 24
+    prompt_len, gen_len, max_len = (4, 6, 64) if args.smoke else (8, 16, 128)
+    # Auto rate: brisk enough that lanes contend and the queue is nonempty
+    # part of the time (tail latency is meaningless at near-zero load).
+    rate = args.rate or (args.lanes * 1.5 if args.smoke else args.lanes * 2.0)
+
+    records = []
+    lanes_spec = [("single", None)]
+    if jax.device_count() >= 8:
+        lanes_spec.append(("mesh8", make_memory_mesh(8)))
+    else:
+        print("# <8 devices: mesh lane skipped (CLI runs force 8)")
+    for name, mesh in lanes_spec:
+        workload = make_workload(cfg, requests=requests, rate_hz=rate,
+                                 prompt_len=prompt_len, gen_len=gen_len)
+        rec = run_lane(cfg, workload, lanes=args.lanes, max_len=max_len,
+                       mesh=mesh)
+        rec.update(lane=name, arch=args.arch, lanes=args.lanes,
+                   rate_hz=rate, prompt_len=prompt_len, gen_len=gen_len,
+                   smoke=bool(args.smoke))
+        records.append(rec)
+        row(f"serve/{name}", rec["latency_p50_ms"] * 1e3,
+            f"{rec['tok_per_s']:.1f}tok/s p99={rec['latency_p99_ms']:.0f}ms")
+
+    os.makedirs("experiments/bench", exist_ok=True)
+    with open("experiments/bench/BENCH_serve.json", "w") as f:
+        json.dump({"bench": "serve", "records": records}, f, indent=2)
+    print("# wrote experiments/bench/BENCH_serve.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Continuous-batching serving engine with persistent per-user memory
+sessions (docs/serving.md).
+
+* `Scheduler` / `Request` — FIFO lane assignment (scheduler.py);
+* `SessionStore` — canonical-layout LRU session cache with disk spill
+  (sessions.py);
+* `make_engine_step` — the jitted whole-batch decode step (stepfn.py);
+* `ServeEngine` — ties them together (engine.py).
+"""
+from repro.launch.engine.scheduler import Request, Scheduler
+from repro.launch.engine.sessions import SessionStore
+from repro.launch.engine.stepfn import make_engine_step
+from repro.launch.engine.engine import ServeEngine
+
+__all__ = ["Request", "Scheduler", "SessionStore", "make_engine_step",
+           "ServeEngine"]

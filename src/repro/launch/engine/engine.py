@@ -1,0 +1,265 @@
+"""The continuous-batching serving engine.
+
+A `ServeEngine` owns a fixed number of batch *lanes* (the device batch
+dimension), one compiled step function (launch/engine/stepfn.py), and a
+`SessionStore` of per-user persistent state. Each `step()`:
+
+1. admits queued requests into free lanes (scheduler, FIFO) — a lane
+   freed by an eviction is refillable on the same step;
+2. runs one jitted decode step for the whole batch (every lane advances:
+   prompt token while prefilling, else its previously emitted token);
+3. updates per-request progress and evicts finished lanes, snapshotting
+   each finished user's session (KV-cache rows + position + SAM memory
+   states + token counter) into the session store.
+
+A user's next request *resumes* their session: the stored KV cache,
+position, and memory state re-enter whichever lane the scheduler picks,
+and decode continues as if never interrupted. Sessions are stored in the
+canonical single-shard memory layout and re-laid-out to the live mesh's
+shard count on admission (`elastic.relayout_memory_state` — the same
+cross-mesh machinery a checkpoint restore uses), so a session saved by a
+single-device engine restores into a mesh engine and vice versa. Row
+indices (`read_idx`) need no conversion: they are *global* slot ids in
+[0, N) under every layout (the mem_shard module contract).
+
+Determinism contract (tested in tests/test_serve_engine.py): every decode
+and memory op is per-batch-row and sampling keys derive from
+(request seed, session token counter) only, so a request's token stream
+and final memory state are bit-identical whether it ran uninterrupted or
+was evicted and restored across engine instances, whatever lanes it
+landed in and whoever its batch neighbours were.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import elastic, mem_shard
+from repro.distributed.sharding import mesh_rules
+from repro.kernels import registry as kernel_registry
+from repro.models import lm
+from repro.launch.engine.scheduler import Request, Scheduler
+from repro.launch.engine.sessions import SessionStore
+from repro.launch.engine.stepfn import make_engine_step
+
+
+class ServeEngine:
+    """Continuous-batching server for one model over `lanes` batch lanes.
+
+    ``mesh=`` serves under a (data, model) mesh: logical-axis sharding
+    rules activate for the transformer stack and, for SAM-augmented
+    archs, the slot-sharded mesh-native memory path
+    (`mem_shard.memory_mesh`). Use as a context manager (or call
+    ``close()``) so the mesh contexts unwind.
+
+    ``session_capacity``/``spill_dir`` bound the in-RAM session store
+    with LRU disk spill (launch/engine/sessions.py).
+    """
+
+    def __init__(self, cfg, *, lanes: int = 4, max_len: int = 128,
+                 param_seed: int = 0, mesh=None,
+                 session_capacity: Optional[int] = None,
+                 spill_dir: Optional[str] = None,
+                 session_store: Optional[SessionStore] = None):
+        if cfg.frontend == "audio":
+            raise NotImplementedError(
+                "the serving engine feeds token ids, not audio frames")
+        if (cfg.memory is not None
+                and kernel_registry.resolve(cfg.memory.backend).use_pallas):
+            raise ValueError(
+                "per-lane memory step counters need the 'ref' kernel "
+                "backend (the fused Pallas write kernel takes a scalar "
+                "step) — set memory.backend='ref' for serving")
+        self.cfg = cfg
+        self.lanes = lanes
+        self.max_len = max_len
+        self._stack = contextlib.ExitStack()
+        if mesh is not None:
+            self._stack.enter_context(mesh_rules(mesh))
+            if cfg.memory is not None:
+                self._stack.enter_context(
+                    mem_shard.memory_mesh(mesh, cfg.memory.num_slots))
+
+        self.params = lm.init_params(jax.random.PRNGKey(param_seed), cfg)
+        self.cache = lm.init_cache(cfg, lanes, max_len, per_lane_pos=True)
+        self.mem = lm.init_memory_states(cfg, lanes, per_lane_step=True)
+        self._step_fn = make_engine_step(cfg)
+
+        self.scheduler = Scheduler(lanes)
+        self.sessions = session_store if session_store is not None else \
+            SessionStore(
+                num_slots=cfg.memory.num_slots if cfg.memory else None,
+                capacity=session_capacity, spill_dir=spill_dir)
+
+        # Host-side per-lane registers (what the next jitted step consumes).
+        self._feed = np.zeros(lanes, np.int32)      # next input token
+        self._greedy = np.ones(lanes, bool)
+        self._seeds = np.zeros(lanes, np.int32)
+        self._counters = np.zeros(lanes, np.int32)  # session token counters
+        self._out: dict[int, list] = {}             # request id -> tokens
+        self.steps = 0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self):
+        self._stack.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    @property
+    def _live_shards(self) -> int:
+        ctx = mem_shard.current()
+        if ctx is not None and self.cfg.memory is not None \
+                and ctx.num_slots == self.cfg.memory.num_slots:
+            return ctx.shards
+        return 1
+
+    # -- request API -------------------------------------------------------
+
+    def submit(self, req: Request) -> Request:
+        if not req.prompt:
+            raise ValueError("a request needs at least one prompt token")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if req.arrival == 0.0:
+            req.arrival = time.time()
+        return self.scheduler.submit(req)
+
+    def step(self) -> list:
+        """Advance the batch one token; returns results of any requests
+        that finished this step (possibly empty)."""
+        for lane, req in self.scheduler.admit():
+            self._admit_lane(lane, req)
+        if not self.scheduler.active:
+            return []
+
+        tokens = jnp.asarray(self._feed[:, None])
+        next_tok, logits, self.cache, self.mem = self._step_fn(
+            self.params, self.cache, self.mem, tokens,
+            jnp.asarray(self._greedy), jnp.asarray(self._seeds),
+            jnp.asarray(self._counters))
+        self.last_logits = logits     # (lanes, V); tests probe neighbours
+        # Block on the sampled tokens: the tail-latency numbers the bench
+        # records must measure compute, not JAX's async dispatch queue.
+        toks = np.asarray(next_tok)
+        now = time.time()
+        self.steps += 1
+
+        finished = []
+        for lane in sorted(self.scheduler.active):
+            req = self.scheduler.active[lane]
+            self._counters[lane] += 1
+            if req.prefilling:
+                req.prefill_done += 1
+                if req.prefilling:            # more prompt to feed
+                    self._feed[lane] = req.prompt[req.prefill_done]
+                    continue
+                req.first_token_time = now    # last prompt token consumed:
+            req.generated += 1                # this step's output counts
+            self._out[req.id].append(int(toks[lane]))
+            self._feed[lane] = toks[lane]
+            if req.done:
+                req.finish_time = now
+                self._evict_lane(lane)
+                finished.append(self._result(req))
+        return finished
+
+    def run(self, requests=None) -> list:
+        """Submit `requests` (optional) and step until the queue and all
+        lanes drain; returns results in completion order."""
+        for r in requests or []:
+            self.submit(r)
+        results = []
+        while self.scheduler.has_work:
+            results.extend(self.step())
+        return results
+
+    # -- lane <-> session movement ----------------------------------------
+
+    def _admit_lane(self, lane: int, req: Request) -> None:
+        sess = self.sessions.take(req.user)
+        if sess is None:
+            self._reset_lane(lane)
+        else:
+            self._restore_lane(lane, sess)
+        pos = int(np.asarray(self.cache["pos"])[lane])
+        if pos + len(req.prompt) + req.max_new_tokens > self.max_len \
+                and self.cfg.window is None:
+            raise ValueError(
+                f"user {req.user!r}: session at position {pos} cannot fit "
+                f"{len(req.prompt)} prompt + {req.max_new_tokens} new "
+                f"tokens in max_len={self.max_len}")
+        self._feed[lane] = req.prompt[0]
+        self._greedy[lane] = req.greedy
+        self._seeds[lane] = req.sample_seed
+        self._out[req.id] = []
+
+    def _reset_lane(self, lane: int) -> None:
+        """Cold session: zero KV rows, position 0, fresh memory state —
+        including a cold (empty) ANN index for cells that carry one."""
+        self.cache = {
+            k: (v.at[lane].set(0) if k == "pos" else v.at[:, lane].set(0))
+            for k, v in self.cache.items()}
+        if self.mem is not None:
+            fresh = lm.init_memory_states(self.cfg, 1, per_lane_step=True)
+            self.mem = tuple(
+                jax.tree.map(lambda full, one: full.at[lane].set(one[0]),
+                             live, new)
+                for live, new in zip(self.mem, fresh))
+        self._counters[lane] = 0
+
+    def _restore_lane(self, lane: int, sess) -> None:
+        """Warm session: re-lay the canonical-layout session out to the
+        live shard count and insert it into `lane`."""
+        cache = sess["cache"]
+        self.cache = {
+            k: (v.at[lane].set(jnp.asarray(sess["pos"][0])) if k == "pos"
+                else v.at[:, lane].set(jnp.asarray(cache[k][:, 0])))
+            for k, v in self.cache.items()}
+        if self.mem is not None:
+            mem = elastic.relayout_memory_state(
+                sess["mem"], self.cfg.memory.num_slots, self._live_shards)
+            self.mem = tuple(
+                jax.tree.map(lambda full, one: full.at[lane].set(
+                    jnp.asarray(one)[0]), live, warm)
+                for live, warm in zip(self.mem, mem))
+        self._counters[lane] = int(sess["counter"])
+
+    def _evict_lane(self, lane: int) -> None:
+        req = self.scheduler.evict(lane)
+        sess = {
+            "cache": {k: v[:, lane:lane + 1]
+                      for k, v in self.cache.items() if k != "pos"},
+            "pos": self.cache["pos"][lane:lane + 1],
+            "counter": int(self._counters[lane]),
+        }
+        if self.mem is not None:
+            # No index remap needed: row indices (read_idx) are *global*
+            # slot ids in [0, N) under every layout (mem_shard module
+            # contract) — only the memory/usage buffers are re-laid-out.
+            sess["mem"] = tuple(
+                jax.tree.map(lambda t: t[lane:lane + 1], st)
+                for st in self.mem)
+        self.sessions.put(req.user, sess)
+
+    def _result(self, req: Request) -> dict:
+        return {
+            "id": req.id,
+            "user": req.user,
+            "tokens": self._out.pop(req.id),
+            "prompt_len": len(req.prompt),
+            "arrival": req.arrival,
+            "first_token_time": req.first_token_time,
+            "finish_time": req.finish_time,
+        }

@@ -1,0 +1,64 @@
+"""The engine's jitted per-step function: one decode step for the whole
+lane batch, plus per-lane token selection.
+
+Every lane advances every step — a prefilling lane consumes its next
+prompt token, a generating lane consumes the token it sampled last step —
+so the compiled computation is a single fixed-shape program regardless of
+which requests occupy which lanes (the continuous-batching contract: admit
+and evict change *data*, never *shape*).
+
+Sampling is per-lane and placement-invariant: lane ``b``'s key is
+``fold_in(fold_in(PRNGKey(0), seed_b), counter_b)`` where ``seed_b`` is
+the request's sample seed and ``counter_b`` the session's token counter.
+A request therefore draws the same sample stream wherever the scheduler
+happens to place it and whoever its batch neighbours are — one half of
+the engine's evict/restore determinism guarantee (the other half is that
+every decode/memory op is per-batch-row; see models/lm.decode_step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def _sample_row(seed, counter, logits):
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(0), seed), counter)
+    return jax.random.categorical(key, logits)
+
+
+def make_engine_step(cfg):
+    """Build the jitted engine step for `cfg`.
+
+    Returned callable:
+        ``step(params, cache, mem_states, tokens, greedy, seeds, counters)
+        -> (next_tok, logits, new_cache, new_mem_states)``
+
+    * ``tokens`` (B, 1) int32: this step's input token per lane (prompt
+      token while prefilling, else the previously emitted token);
+    * ``greedy`` (B,) bool: argmax vs categorical, per lane;
+    * ``seeds`` / ``counters`` (B,) int32: sampling-key material;
+    * ``next_tok`` (B,) int32, ``logits`` (B, V) float32.
+
+    ``cache`` and ``mem_states`` are donated — the engine owns exactly one
+    live copy of the batch state and snapshots lanes out of it (host-side)
+    before evicting, never after stepping.
+    """
+
+    def step(params, cache, mem_states, tokens, greedy, seeds, counters):
+        if mem_states is None:
+            logits, new_cache = lm.decode_step(params, cfg, cache, tokens)
+            new_mem = None
+        else:
+            logits, new_cache, new_mem = lm.decode_step(
+                params, cfg, cache, tokens, mem_states=mem_states)
+        logits = logits[:, -1, :].astype(jnp.float32)
+        greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sampled = jax.vmap(_sample_row)(seeds, counters, logits)
+        next_tok = jnp.where(greedy, greedy_tok,
+                             sampled.astype(jnp.int32))
+        return next_tok, logits, new_cache, new_mem
+
+    return jax.jit(step, donate_argnums=(1, 2))

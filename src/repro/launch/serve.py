@@ -1,12 +1,20 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with a
-KV cache (ring-buffered for SWA archs, O(1) state for RWKV).
+"""Serving drivers.
 
-``mesh=`` (or ``--mesh-model N`` on the CLI) serves under a mesh from
+Two modes share this CLI:
+
+* **static batch** (`serve`, the original driver): prefill a lockstep
+  batch of prompts, then decode greedy or sampled — kept as the simple
+  reference path and for throughput spot checks;
+* **continuous batching** (`serve_continuous`, ``--continuous``): the
+  engine package (launch/engine/) — FIFO admission over fixed lanes,
+  mid-decode evict/refill, and persistent per-user memory sessions
+  (docs/serving.md). `benchmarks/bench_serve.py` drives this mode under a
+  Poisson arrival workload.
+
+``mesh=`` (or ``--mesh-model N``) serves under a mesh from
 `launch/mesh.py`: logical-axis rules activate for the transformer stack
 and, for SAM-augmented archs, the external memory runs the mesh-native
-slot-sharded path (`mem_shard.memory_mesh`, docs/sharding.md) — the
-per-sequence memory state is built in the sharded layout and every
-read/write stays shard-local with O(K·W) collective traffic."""
+slot-sharded path (`mem_shard.memory_mesh`, docs/sharding.md)."""
 from __future__ import annotations
 
 import argparse
@@ -36,10 +44,19 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
                 stack.enter_context(mem_shard.memory_mesh(
                     mesh, cfg.memory.num_slots))
         return _serve(cfg, batch=batch, prompt_len=prompt_len,
-                      gen_len=gen_len, max_len=max_len, seed=seed)
+                      gen_len=gen_len, max_len=max_len, seed=seed,
+                      greedy=greedy)
 
 
-def _serve(cfg, *, batch, prompt_len, gen_len, max_len, seed):
+def _select(logits, greedy: bool, key):
+    """Next-token selection for the static-batch driver: argmax, or
+    temperature-1 categorical when ``greedy=False``."""
+    if greedy:
+        return jnp.argmax(logits[:, -1], axis=-1)
+    return jax.random.categorical(key, logits[:, -1].astype(jnp.float32))
+
+
+def _serve(cfg, *, batch, prompt_len, gen_len, max_len, seed, greedy=True):
     key = jax.random.PRNGKey(seed)
     params = lm.init_params(key, cfg)
     serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
@@ -67,15 +84,16 @@ def _serve(cfg, *, batch, prompt_len, gen_len, max_len, seed):
     prefill_t = time.time() - t0
 
     out_tokens = []
-    tok = jnp.argmax(logits[:, -1], axis=-1)
+    sample_key = jax.random.fold_in(key, 1)
+    tok = _select(logits, greedy, sample_key)
     t0 = time.time()
-    for _ in range(gen_len):
+    for i in range(gen_len):
         if cfg.frontend == "audio":
             step_in = jax.nn.one_hot(tok, cfg.d_model)[:, None]
         else:
             step_in = tok[:, None]
         logits, cache = serve_step(params, cache, step_in)
-        tok = jnp.argmax(logits[:, -1], axis=-1)
+        tok = _select(logits, greedy, jax.random.fold_in(sample_key, i))
         out_tokens.append(tok)
     jax.block_until_ready(tok)       # same async-dispatch pitfall as above
     decode_t = time.time() - t0
@@ -88,12 +106,53 @@ def _serve(cfg, *, batch, prompt_len, gen_len, max_len, seed):
     }
 
 
+def serve_continuous(arch: str, *, lanes: int = 4, requests: int = 8,
+                     prompt_len: int = 8, gen_len: int = 16,
+                     max_len: int = 128, use_reduced: bool = True,
+                     seed: int = 0, greedy: bool = True, mesh=None):
+    """Serve `requests` synthetic single-request users through the
+    continuous-batching engine and report aggregate throughput."""
+    import numpy as np
+    from repro.launch.engine import Request, ServeEngine
+
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduce_cfg(cfg)
+    rng = np.random.default_rng(seed)
+    with ServeEngine(cfg, lanes=lanes, max_len=max_len, param_seed=seed,
+                     mesh=mesh) as eng:
+        t0 = time.time()
+        results = eng.run([
+            Request(user=f"user{i}",
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        prompt_len).tolist(),
+                    max_new_tokens=gen_len, greedy=greedy, sample_seed=i)
+            for i in range(requests)])
+        wall = time.time() - t0
+        steps = eng.steps
+    total = sum(len(r["tokens"]) for r in results)
+    return {
+        "results": results,
+        "wall_s": wall,
+        "steps": steps,
+        "tok_per_s": total / max(wall, 1e-9),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="hymba_1_5b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static-batch size / engine lane count")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--sample", action="store_true",
+                    help="categorical sampling instead of argmax")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching engine "
+                         "(launch/engine) instead of the static batch")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="request count for --continuous")
     ap.add_argument("--mesh-model", type=int, default=0,
                     help="serve under a (data, model) mesh with this model-"
                          "parallel degree (0 = no mesh); SAM-augmented "
@@ -103,11 +162,20 @@ def main():
     if args.mesh_model:
         from repro.launch.mesh import make_memory_mesh
         mesh = make_memory_mesh(args.mesh_model)
-    res = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                gen_len=args.gen_len, mesh=mesh)
-    print(f"generated {res['tokens'].shape} tokens; "
-          f"prefill {res['prefill_s']:.2f}s, "
-          f"decode {res['decode_tok_per_s']:.1f} tok/s")
+    if args.continuous:
+        res = serve_continuous(args.arch, lanes=args.batch,
+                               requests=args.requests,
+                               prompt_len=args.prompt_len,
+                               gen_len=args.gen_len,
+                               greedy=not args.sample, mesh=mesh)
+        print(f"served {len(res['results'])} requests in {res['steps']} "
+              f"steps; {res['tok_per_s']:.1f} tok/s")
+    else:
+        res = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+                    gen_len=args.gen_len, greedy=not args.sample, mesh=mesh)
+        print(f"generated {res['tokens'].shape} tokens; "
+              f"prefill {res['prefill_s']:.2f}s, "
+              f"decode {res['decode_tok_per_s']:.1f} tok/s")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,10 @@ from repro.models.config import (MLAConfig, MoEConfig, ModelConfig, RWKVConfig,
                                  SSMConfig, MemoryLayerConfig)
 from repro.models.lm import (abstract_params, init_params, param_axes,
                              loss_fn, forward, prefill, decode_step,
-                             init_cache, abstract_cache, cache_axes)
+                             init_cache, init_memory_states, abstract_cache,
+                             cache_axes)
 
 __all__ = ["MLAConfig", "MoEConfig", "ModelConfig", "RWKVConfig", "SSMConfig",
            "MemoryLayerConfig", "abstract_params", "init_params", "param_axes",
            "loss_fn", "forward", "prefill", "decode_step", "init_cache",
-           "abstract_cache", "cache_axes"]
+           "init_memory_states", "abstract_cache", "cache_axes"]

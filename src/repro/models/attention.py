@@ -202,19 +202,32 @@ def gqa_forward(params, cfg: ModelConfig, x, positions):
 def gqa_decode(params, cfg: ModelConfig, x, k_cache, v_cache, pos):
     """x: (B, 1, d); caches (B, Smax, Hkv, D) (ring buffer when SWA).
 
+    ``pos`` is () for a lockstep batch, or (B,) per-lane positions — the
+    continuous-batching engine (launch/engine) admits sequences mid-decode,
+    so each lane runs at its own offset (its own rope phase, cache slot,
+    and validity horizon); rows never mix, so a lane's output is invariant
+    to its neighbours.
+
     Returns (out, k_cache, v_cache)."""
     B = x.shape[0]
     Smax = k_cache.shape[1]
+    pos = jnp.asarray(pos)
     q = peinsum("bsd,dhk->bshk", x, params["wq"])
     k = peinsum("bsd,dhk->bshk", x, params["wk"])
     v = peinsum("bsd,dhk->bshk", x, params["wv"])
-    q = rope(q, pos[None, None], cfg.rope_theta)
-    k = rope(k, pos[None, None], cfg.rope_theta)
+    ppos = pos[None, None] if pos.ndim == 0 else pos[:, None]
+    q = rope(q, ppos, cfg.rope_theta)
+    k = rope(k, ppos, cfg.rope_theta)
     slot = pos % Smax if cfg.window is not None else pos
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k.astype(k_cache.dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    else:
+        b = jnp.arange(B)
+        k_cache = k_cache.at[b, slot].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[b, slot].set(v[:, 0].astype(v_cache.dtype))
 
     H, Hkv = cfg.padded_heads, cfg.num_kv_heads
     G = H // Hkv
@@ -224,10 +237,11 @@ def gqa_decode(params, cfg: ModelConfig, x, k_cache, v_cache, pos):
     s = shard(s, "batch", "kv_heads", None, "kv_seq")
     idx = jnp.arange(Smax)
     if cfg.window is not None:
-        valid = (idx <= slot) | (pos >= Smax)      # full ring once wrapped
+        valid = (idx <= slot[..., None]) | (pos[..., None] >= Smax)
     else:
-        valid = idx <= pos
-    s = jnp.where(valid[None, None, None, :], s, _NEG)
+        valid = idx <= pos[..., None]              # () -> (Smax); (B,) -> (B,Smax)
+    valid = jnp.broadcast_to(valid, (B, Smax))
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(p.dtype),
                    preferred_element_type=jnp.float32)
@@ -464,10 +478,16 @@ def mla_decode(params, cfg: ModelConfig, x, ckv_cache, pos):
     B = x.shape[0]
     Smax = ckv_cache.shape[1]
     H = cfg.num_heads
-    q_nope, q_rope, c, k_rope = _mla_qkv(params, cfg, x, pos[None, None])
+    pos = jnp.asarray(pos)
+    ppos = pos[None, None] if pos.ndim == 0 else pos[:, None]
+    q_nope, q_rope, c, k_rope = _mla_qkv(params, cfg, x, ppos)
     new = jnp.concatenate([c, k_rope], axis=-1)
-    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
-        ckv_cache, new.astype(ckv_cache.dtype), pos, axis=1)
+    if pos.ndim == 0:
+        ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+            ckv_cache, new.astype(ckv_cache.dtype), pos, axis=1)
+    else:                       # per-lane positions (continuous batching)
+        ckv_cache = ckv_cache.at[jnp.arange(B), pos].set(
+            new[:, 0].astype(ckv_cache.dtype))
     cache = ckv_cache.astype(x.dtype)
     c_all, kr_all = cache[..., :m.kv_lora], cache[..., m.kv_lora:]
 
@@ -480,8 +500,8 @@ def mla_decode(params, cfg: ModelConfig, x, ckv_cache, pos):
     scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
     s = (s_nope + s_rope) * scale
     s = shard(s, "batch", "heads", None, "kv_seq")
-    valid = jnp.arange(Smax) <= pos
-    s = jnp.where(valid[None, None, None, :], s, _NEG)
+    valid = jnp.broadcast_to(jnp.arange(Smax) <= pos[..., None], (B, Smax))
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhst,btl->bshl", p, c_all,
                        preferred_element_type=jnp.float32).astype(x.dtype)

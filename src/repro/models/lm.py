@@ -214,13 +214,40 @@ def cache_axes(cfg: ModelConfig):
             "pos": ()}
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               per_lane_pos: bool = False):
+    """``per_lane_pos=True`` carries ``pos`` as a (B,) vector instead of a
+    scalar — the continuous-batching engine (launch/engine) admits lanes
+    mid-decode, so every lane runs at its own position."""
     cd = _DTYPES[cfg.compute_dtype]
     shapes = cache_shapes(cfg, batch, max_len)
     cache = {k: jnp.zeros(v, jnp.float32 if k in ("wkv", "ssm") else cd)
              for k, v in shapes.items()}
-    cache["pos"] = jnp.zeros((), jnp.int32)
+    cache["pos"] = jnp.zeros((batch,) if per_lane_pos else (), jnp.int32)
     return cache
+
+
+def init_memory_states(cfg: ModelConfig, batch: int, *,
+                       per_lane_step: bool = False):
+    """Per-group decode-time memory: a tuple of `sam_layer.MemoryState`
+    (one per memory group, matching the stacked ``params['memory']``).
+
+    ``per_lane_step=True`` carries the SAM step counter as a (B, 1) vector
+    so every lane stamps usage with its *own* session step — a session
+    evicted and later restored into a different lane (launch/engine) then
+    reproduces the uninterrupted run's usage table bit-for-bit. The ref
+    kernel backend broadcasts the vector step; the fused Pallas write
+    kernel takes a scalar, so per-lane serving runs on "ref"."""
+    if cfg.memory is None:
+        return None
+    n_groups = max(1, cfg.num_layers // cfg.memory.every_n_layers)
+    states = []
+    for _ in range(n_groups):
+        st = sam_layer.init_memory_state(cfg, batch)
+        if per_lane_step:
+            st = st._replace(step=jnp.zeros((batch, 1), jnp.int32))
+        states.append(st)
+    return tuple(states)
 
 
 def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
@@ -233,11 +260,28 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
     return out
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens):
+def decode_step(params, cfg: ModelConfig, cache, tokens, mem_states=None):
     """tokens: (B, 1) int32 (or (B, 1, d) frame embeds for audio frontends).
-    Returns (logits (B, 1, V), new_cache)."""
+
+    ``cache['pos']`` is () for a lockstep batch or (B,) per-lane positions
+    (continuous batching — launch/engine). ``mem_states`` (a tuple of
+    per-group `sam_layer.MemoryState`, see `init_memory_states`) enables
+    SAM-augmented decode: the scanned stack splits into memory groups
+    exactly like the training forward (`_scan_blocks`), and after each
+    group's blocks the token's hidden state performs one SAM read+write
+    (decode segment = 1 token). Every memory op is per-batch-row, so a
+    lane's memory trajectory is independent of its neighbours — the
+    property the serving engine's evict/restore determinism rests on.
+
+    Returns (logits (B, 1, V), new_cache) — plus new_mem_states when
+    ``mem_states`` was given."""
     cd = _DTYPES[cfg.compute_dtype]
     pos = cache["pos"]
+    if jnp.ndim(pos) and cfg.sparse_decode_blocks is not None:
+        raise NotImplementedError(
+            "per-lane decode positions are not supported with "
+            "sparse_decode_blocks (the block-centroid ring assumes a "
+            "lockstep position)")
     if cfg.frontend == "audio":
         x = tokens.astype(cd)
     else:
@@ -264,17 +308,51 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
             x, nc = tfm.block_decode(dp, cfg, x, dc, pos, moe_layer=False)
             dense_cache = jax.tree.map(
                 lambda full, new: full.at[i].set(new), dense_cache, nc)
+    else:
+        dense_cache = None
+        scan_cache = layer_cache
+
+    new_mem = None
+    if mem_states is not None:
+        if cfg.memory is None:
+            raise ValueError("mem_states passed but cfg.memory is None")
+        n_scan = cfg.num_layers - n_dense
+        n_groups = len(mem_states)
+        per = n_scan // n_groups
+        mem_params = _cast(params["memory"], cfg)
+        new_mem, group_caches = [], []
+        for g in range(n_groups):
+            sl = jax.tree.map(
+                lambda t: jax.lax.slice_in_dim(t, g * per, (g + 1) * per,
+                                               axis=0), blocks)
+            cc = jax.tree.map(
+                lambda t: jax.lax.slice_in_dim(t, g * per, (g + 1) * per,
+                                               axis=0), scan_cache)
+            x, nc = jax.lax.scan(body, x, (sl, cc))
+            group_caches.append(nc)
+            mp = jax.tree.map(lambda t: t[g], mem_params)
+            st, out = sam_layer.memory_access(mp, cfg, x[:, 0],
+                                              mem_states[g])
+            new_mem.append(st)
+            x = x + out[:, None, :].astype(x.dtype)
+        new_scan_cache = jax.tree.map(
+            lambda *ts: jnp.concatenate(ts, axis=0), *group_caches)
+    else:
         x, new_scan_cache = jax.lax.scan(body, x, (blocks, scan_cache))
+
+    if dense_cache is not None:
         new_cache = jax.tree.map(
             lambda a, b: jnp.concatenate([a, b], axis=0),
             dense_cache, new_scan_cache)
     else:
-        x, new_cache = jax.lax.scan(body, x, (blocks, layer_cache))
+        new_cache = new_scan_cache
 
     x = rms_norm(x, _cast(params["final_norm"], cfg), cfg.norm_eps)
     logits = x @ _head_weight(params, cfg)
     logits = shard(logits, "batch", None, "vocab")
     new_cache["pos"] = pos + 1
+    if mem_states is not None:
+        return logits, new_cache, tuple(new_mem)
     return logits, new_cache
 
 
