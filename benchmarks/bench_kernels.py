@@ -20,7 +20,11 @@ would measure noise.
 
 Results go to ``experiments/bench/BENCH_kernels.json``; the
 ``layout_speedup`` rows record scratch-vs-legacy at each size, the
-evidence for the ROADMAP item this layout closed.
+evidence for the ROADMAP item this layout closed. The ``decode_step``
+rows time one full model decode step per backend and record its staged
+primitive counts — the fused-read before/after (ref composes the read
+and keeps a ``top_k`` primitive; the Pallas backends stage the whole
+read as a single ``pallas_call``).
 
 On TPU the fused backend is ``"pallas"`` (compiled); elsewhere it falls
 back to ``"pallas-interpret"``, whose absolute numbers only sanity-check
@@ -92,6 +96,58 @@ def bench_sparse_write(n: int, backend: str, layout: str = "scratch"):
     return timed(run)
 
 
+def bench_fused_read(n: int, backend: str, block_n: int = 512):
+    """One fused-read dispatch (sweep → top-K → softmax → gather)."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, W))
+    mem = jax.random.normal(jax.random.PRNGKey(n), (B, n, W))
+    beta = jnp.ones((B, H)) * 4.0
+
+    @jax.jit
+    def f(q, mem, beta):
+        return ops.fused_read(q, mem, beta, K, backend=backend,
+                              block_n=block_n)
+
+    return timed(lambda: f(q, mem, beta))
+
+
+def bench_decode_step(backend: str):
+    """Per-token latency of a full `lm.decode_step` on the reduced
+    SAM-augmented arch, plus the staged-primitive counts of the step —
+    the fused-read before/after: the ref backend composes the read
+    (a `top_k` primitive survives in the jaxpr), the Pallas backends
+    stage the whole read as one `pallas_call`."""
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.kernels.introspect import count_primitives
+    from repro.models import lm
+
+    cfg = reduced(get_config("h2o_danube_3_4b_sam"))
+    cfg = dataclasses.replace(
+        cfg, memory=dataclasses.replace(cfg.memory, backend=backend))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    tok = jnp.ones((1, 1), jnp.int32)
+
+    def step(cache, mem):
+        return lm.decode_step(params, cfg, cache, tok, mem_states=mem)
+
+    cache0 = lm.init_cache(cfg, 1, 64)
+    mem0 = lm.init_memory_states(cfg, 1)
+    counts = count_primitives(step, cache0, mem0)
+    jstep = jax.jit(step)
+
+    def run():
+        run.state = jstep(*run.state)[1:]
+        return run.state[0]["pos"]
+
+    run.state = (cache0, mem0)
+    us = timed(run)
+    return us, {"pallas_call": counts.get("pallas_call", 0),
+                "top_k": counts.get("top_k", 0),
+                "sort": counts.get("sort", 0),
+                "eqns": sum(counts.values())}
+
+
 def bench_topk(n: int, backend: str, block_n: int = 512):
     q = jax.random.normal(jax.random.PRNGKey(0), (B, H, W))
     mem = jax.random.normal(jax.random.PRNGKey(n), (B, n, W))
@@ -132,6 +188,22 @@ def main(argv=None):
                 results.append({"op": "topk_read", "backend": be, "N": n,
                                 "us_per_call": us})
                 row(f"topk_read/{be}/N={n}", us)
+                us = bench_fused_read(n, be)
+                results.append({"op": "fused_read", "backend": be, "N": n,
+                                "us_per_call": us})
+                row(f"fused_read/{be}/N={n}", us)
+
+    # Decode-step rows: one full model decode step per backend — per-token
+    # latency plus the staged-primitive counts showing the fused read (ref
+    # composes: top_k >= 1; pallas backends: the read is one pallas_call
+    # and zero top_k — the remaining sorts are lra_topn's tile merge).
+    for be in ("ref", pallas_be):
+        us, counts = bench_decode_step(be)
+        results.append({"op": "decode_step", "backend": be,
+                        "us_per_token": us, **counts})
+        row(f"decode_step/{be}", us,
+            f"pallas_call={counts['pallas_call']} top_k={counts['top_k']} "
+            f"eqns={counts['eqns']}")
 
     # Speedup columns. ref/fused compares backends on the scratch layout (on
     # CPU-interpret this mostly demonstrates N-independence of the fused

@@ -115,7 +115,12 @@ def main(argv=None):
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = auto)")
+    ap.add_argument("--backend", default=None,
+                    help="memory kernel backend (ref | pallas | "
+                         "pallas-interpret); default: the arch config's")
     args = ap.parse_args(argv)
+
+    import dataclasses
 
     import jax
     from repro.configs import get_config, reduced
@@ -123,6 +128,11 @@ def main(argv=None):
 
     cfg = reduced(get_config(args.arch))
     assert cfg.memory is not None, "bench wants a SAM-augmented arch"
+    if args.backend:
+        cfg = dataclasses.replace(
+            cfg, memory=dataclasses.replace(cfg.memory,
+                                            backend=args.backend))
+    backend = cfg.memory.backend or "ref"
     requests = 6 if args.smoke else 24
     prompt_len, gen_len, max_len = (4, 6, 64) if args.smoke else (8, 16, 128)
     # Auto rate: brisk enough that lanes contend and the queue is nonempty
@@ -141,8 +151,8 @@ def main(argv=None):
         rec = run_lane(cfg, workload, lanes=args.lanes, max_len=max_len,
                        mesh=mesh)
         rec.update(lane=name, arch=args.arch, lanes=args.lanes,
-                   rate_hz=rate, prompt_len=prompt_len, gen_len=gen_len,
-                   smoke=bool(args.smoke))
+                   backend=backend, rate_hz=rate, prompt_len=prompt_len,
+                   gen_len=gen_len, smoke=bool(args.smoke))
         records.append(rec)
         row(f"serve/{name}", rec["latency_p50_ms"] * 1e3,
             f"{rec['tok_per_s']:.1f}tok/s p99={rec['latency_p99_ms']:.0f}ms")

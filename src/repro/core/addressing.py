@@ -53,18 +53,27 @@ def sparse_read_exact(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
     """'Linear index' SAM read: exact K nearest by similarity, softmax over the
     kept K entries only (§3.1 — remaining entries set to zero).
 
-    Gradients flow only through the K gathered rows (take_along_axis). The
-    O(N·W) similarity sweep runs on the kernel backend (the index selection
-    is under stop_gradient, so no kernel VJP is needed). ``valid_n``
-    restricts the sweep to the logical rows of a scratch-row buffer — the
-    scratch row can never be selected, so no gradient ever flows through
-    it."""
+    Gradients flow only through the K gathered rows. The cosine-similarity
+    read runs as **one** fused kernel dispatch (`ops.fused_read`: sweep +
+    top-K + softmax + weighted gather) on the Pallas backends, with the
+    selection under stop_gradient and the composed path's exact gradients
+    via the op's custom VJP. ``valid_n`` restricts the sweep to the
+    logical rows of a scratch-row buffer — the scratch row can never be
+    selected, so no gradient ever flows through it. Slot-sharded buffers
+    (`mem_shard.memory_mesh`) keep the composed shard_map path: the
+    sweep/merge and gather are collectives the fused kernel cannot
+    express."""
+    from repro.distributed import mem_shard
     if sims_fn is cosine_sim:
-        _, idx = ops.topk_read(jax.lax.stop_gradient(q),
-                               jax.lax.stop_gradient(m), k, backend=backend,
-                               valid_n=valid_n)
+        if mem_shard.route_ctx(m.shape[1]) is not None:
+            _, idx = ops.topk_read(jax.lax.stop_gradient(q),
+                                   jax.lax.stop_gradient(m), k,
+                                   backend=backend, valid_n=valid_n)
+            return finish_candidate_read(q, m, beta, idx)
+        read, w, idx = ops.fused_read(q, m, beta, k, backend=backend,
+                                      valid_n=valid_n)
+        return SparseRead(indices=idx, weights=w, words=read)
     else:
-        from repro.distributed import mem_shard
         if mem_shard.route_ctx(m.shape[1]) is not None:
             # A custom similarity has no shard-local/K-merge decomposition
             # here; sweeping the sharded layout directly would score the
@@ -97,6 +106,26 @@ def sparse_read_candidates(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
                                  select_candidates(q, m, k, cand_idx))
 
 
+def select_and_read_candidates(q: jax.Array, m: jax.Array, beta: jax.Array,
+                               k: int, cand_idx: jax.Array, *,
+                               backend=None) -> tuple[SparseRead, jax.Array]:
+    """The ANN read as one fused kernel dispatch: dedup the raw candidate
+    set, then re-rank + top-K + softmax + weighted gather in a single
+    `ops.fused_read` pass (grid independent of N). Returns the read plus
+    the *signed* (B, H, K) selection — what a step records into its deltas
+    so the rollback replay can reconstruct the validity mask
+    (`select_candidates`' contract). Slot-sharded buffers fall back to the
+    composed select/finish pair (the gather is a shard_map collective)."""
+    from repro.distributed import mem_shard
+    if mem_shard.route_ctx(m.shape[1]) is not None:
+        sel = select_candidates(q, m, k, cand_idx)
+        return finish_candidate_read(q, m, beta, sel), sel
+    read, w, sel = ops.fused_read(q, m, beta, k, cand_idx=_dedup(cand_idx),
+                                  backend=backend)
+    return SparseRead(indices=jnp.maximum(sel, 0), weights=w,
+                      words=read), sel
+
+
 def select_candidates(q: jax.Array, m: jax.Array, k: int,
                       cand_idx: jax.Array) -> jax.Array:
     """Candidate top-K selection (non-differentiable half of the ANN read):
@@ -126,7 +155,10 @@ def finish_candidate_read(q: jax.Array, m: jax.Array, beta: jax.Array,
     recorded signed indices, so forward and replay match bit-for-bit."""
     valid = idx >= 0
     idx = jnp.maximum(idx, 0)
-    words = gather_rows(m, idx)                             # (B, H, K, W)
+    # Read at f32 whatever the storage dtype: bf16 memory rows
+    # (MemoryConfig.mem_dtype) upcast before the re-rank, matching the
+    # fused kernels and `ref.sparse_read_tail`.
+    words = gather_rows(m, idx).astype(jnp.float32)         # (B, H, K, W)
     sel = _rerank(q, words) * beta[..., None]
     sel = jnp.where(valid, sel, _NEG)
     w = jax.nn.softmax(sel, axis=-1)

@@ -71,7 +71,8 @@ def init_state(batch: int, cfg: SAMConfig, params=None, *,
     # born ownership-partitioned to match (`ann_partitions` overrides —
     # e.g. a single-device run reproducing a mesh run's index semantics).
     memory, last_access = mem_shard.init_layout(
-        N, mem_shards, init_scratch_memory(batch, N, W),
+        N, mem_shards,
+        init_scratch_memory(batch, N, W, dtype=jnp.dtype(mem.mem_dtype)),
         init_scratch_last_access(batch, N))
     read = SparseRead(
         indices=jnp.zeros((batch, H, K), jnp.int32),
@@ -188,11 +189,14 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
                 lay.ctx, planes, state.ann, widx_flat, memory, mem)
         else:
             # Candidates = bucket contents plus the freshly written rows
-            # (interleaved per ownership partition — ann_candidates).
+            # (interleaved per ownership partition — ann_candidates). The
+            # hash/probe stays here (the candidate ids drive the fused
+            # kernel's prefetched block map); everything after is one
+            # dispatch.
             cand = ann_lib.ann_candidates(planes, state.ann, q, widx_flat,
                                           mem)
-            read_sel = addr.select_candidates(q, memory, K, cand)
-            read = addr.finish_candidate_read(q, memory, beta, read_sel)
+            read, read_sel = addr.select_and_read_candidates(
+                q, memory, beta, K, cand, backend=be)
             ann_state = ann_lib.ann_insert(
                 planes, state.ann, widx_flat,
                 jax.lax.stop_gradient(addr.gather_rows(memory, widx_flat)),

@@ -52,10 +52,16 @@ def has_scratch_row(num_slots: int, buf_rows: int) -> bool:
     return buf_rows == num_slots + SCRATCH_ROWS
 
 
-def init_scratch_memory(batch: int, num_slots: int,
-                        word_size: int) -> jax.Array:
-    """Zero-initialized (B, N+1, W) memory in the scratch-row layout."""
-    return jnp.zeros((batch, num_slots + SCRATCH_ROWS, word_size))
+def init_scratch_memory(batch: int, num_slots: int, word_size: int,
+                        dtype=jnp.float32) -> jax.Array:
+    """Zero-initialized (B, N+1, W) memory in the scratch-row layout.
+
+    ``dtype`` is the *storage* dtype of the rows (``MemoryConfig.mem_dtype``
+    / ``MemoryLayerConfig.mem_dtype``): bfloat16 halves the dominant state
+    buffer; every read path upcasts gathered rows to float32 before the
+    similarity/softmax math, so compute precision is unchanged."""
+    return jnp.zeros((batch, num_slots + SCRATCH_ROWS, word_size),
+                     dtype=dtype)
 
 
 def init_scratch_last_access(batch: int, num_slots: int) -> jax.Array:
@@ -86,6 +92,11 @@ class MemoryConfig:
     # custom name (repro.kernels.registry). None -> $REPRO_KERNEL_BACKEND
     # -> 'ref'. Trace-time static; threaded through every memory op.
     backend: Optional[str] = None
+    # Storage dtype of the memory rows: 'float32' | 'bfloat16'. Reads
+    # upcast gathered rows to float32 before the similarity/softmax math,
+    # so bfloat16 halves the (B, N+1, W) buffer at unchanged compute
+    # precision (writes round once per slot update).
+    mem_dtype: str = "float32"
     lsh_tables: int = 4
     lsh_bits: int = 8              # buckets per table = 2**bits
     lsh_bucket_size: int = 32

@@ -10,6 +10,8 @@ traffic); the accuracy effect is exercised in tests (quantization error is
 zero-mean, bounded by scale/2)."""
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -28,8 +30,10 @@ def quantize_int8(x: jax.Array):
 
 
 def dequantize_int8(q, scale, shape):
+    # math.prod keeps the size a Python int: jnp.prod would produce a
+    # tracer under jit, and a traced slice bound is a TypeError.
     out = (q.astype(jnp.float32) * scale).reshape(-1)
-    return out[:int(jnp.prod(jnp.asarray(shape)))].reshape(shape)
+    return out[:math.prod(shape)].reshape(shape)
 
 
 def int8_roundtrip(x: jax.Array) -> jax.Array:
@@ -38,8 +42,4 @@ def int8_roundtrip(x: jax.Array) -> jax.Array:
     if x.ndim == 0 or not jnp.issubdtype(x.dtype, jnp.floating):
         return x
     q, scale = quantize_int8(x)
-    size = 1
-    for s in x.shape:
-        size *= s
-    out = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
-    return out.reshape(x.shape).astype(x.dtype)
+    return dequantize_int8(q, scale, x.shape).astype(x.dtype)

@@ -1,0 +1,292 @@
+"""Pallas TPU kernels: the fused one-dispatch SAM read (§3.1 / §3.5).
+
+The composed sparse read is 3–4 dispatches per decode step: a similarity
+sweep (`topk_read`), a `lax.top_k` merge, a row gather, and the re-rank /
+softmax / weighted-sum tail — each materializing an intermediate in HBM.
+These kernels collapse the whole read into **one** `pallas_call`:
+
+* `fused_read_sweep` — the exact ("linear index") read. Grid
+  (B·H, N/block_n), sequential over tiles: each tile computes cosine
+  similarities on the MXU, keeps a running global top-K in VMEM scratch
+  (values, indices, and the raw candidate *rows*, so no second gather
+  pass ever touches HBM), and the final tile applies key strength,
+  softmax, and the weighted sum in-register. HBM traffic is the one
+  O(N·W) memory stream — the intermediates (sims, top-K merge buffers,
+  gathered rows) never exist outside VMEM.
+
+* `fused_read_candidates` — the ANN-mode read over a pre-deduped signed
+  candidate set from the LSH index. The candidate ids are scalar-
+  prefetched (they *must* exist before kernel launch — they drive the
+  memory block's index map), so the hash + bucket/ring probe + dedup stay
+  outside; everything after (candidate sims → top-K re-rank → softmax →
+  weighted gather) is one pass with grid (B·H, C) — **independent of N**.
+  Invalid candidates (id < 0: cold bucket slot or dedup'd duplicate) ride
+  through with weight exactly 0, matching
+  `addressing.finish_candidate_read`'s validity contract.
+
+Both kernels compute in f32 regardless of the memory dtype (bf16 rows are
+upcast tile-by-tile in VMEM — the scaled-read half of the compressed-
+memory story), tie-break identically to `jax.lax.top_k` (value descending,
+then lowest index / candidate position), and return (read, weights,
+signed indices). Selection is non-differentiable by construction;
+`kernels/ops.py` wraps both in a residual-light `jax.custom_vjp` whose
+backward re-derives the differentiable tail (`ref.sparse_read_tail`) from
+the recorded indices — gradients match the composed path exactly.
+
+Scratch-row layout: `fused_read_sweep` takes ``valid_n=N`` so the grid
+tiles cover exactly rows [0, N) of the persistent (B, N+1, W) buffer —
+the write-scratch row is never swept. The candidate kernel needs nothing:
+candidate ids are always < N.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_CONSUMED = -3e30          # below any cosine sim and the -1e9 validity mask
+_NEG = -1e9                # finish_candidate_read's invalid-selection mask
+_IMAX = jnp.iinfo(jnp.int32).max
+
+
+def _norm_row(x):
+    return x * jax.lax.rsqrt(jnp.sum(x * x) + 1e-6)
+
+
+def _take_row(mat, j):
+    """Row `j` (traced) of a VMEM-resident (R, W) value via a one-hot
+    matvec — Mosaic-friendly where a dynamic-start slice is not."""
+    hot = (jnp.arange(mat.shape[0]) == j).astype(jnp.float32)
+    return jnp.dot(hot, mat, preferred_element_type=jnp.float32)
+
+
+def _softmax_tail(vals, valid, beta):
+    """The read-weight tail, numerically identical to
+    `addressing.finish_candidate_read`: scaled sims masked to -1e9 where
+    invalid, softmax, invalid weights zeroed, renormalized."""
+    sel = jnp.where(valid, vals * beta, _NEG)
+    e = jnp.exp(sel - jnp.max(sel))
+    w = e / jnp.sum(e)
+    w = jnp.where(valid, w, 0.0)
+    return w / jnp.maximum(jnp.sum(w), 1e-6)
+
+
+# --------------------------------------------------------------------------
+# Exact read: one sequential sweep, running top-K + rows in scratch
+# --------------------------------------------------------------------------
+
+def _sweep_kernel(q_ref, m_ref, beta_ref, read_ref, w_ref, idx_ref,
+                  vals_s, idx_s, rows_s, *, k: int, block_n: int,
+                  tiles: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        vals_s[0, :] = jnp.full((k,), _CONSUMED, jnp.float32)
+        idx_s[0, :] = jnp.full((k,), _IMAX, jnp.int32)
+        rows_s[:, :] = jnp.zeros(rows_s.shape, jnp.float32)
+
+    q = q_ref[0, :].astype(jnp.float32)
+    m = m_ref[0, :, :].astype(jnp.float32)
+    qn = _norm_row(q)
+    mnorm = jax.lax.rsqrt(jnp.sum(m * m, axis=-1) + 1e-6)
+    sims = jnp.dot(m, qn, preferred_element_type=jnp.float32) * mnorm
+    base = t * block_n
+
+    # Local top-K of this tile (K argmax passes; argmax prefers the lowest
+    # j on ties, i.e. the lowest global index).
+    lv, li, lr = [], [], []
+    for _ in range(k):
+        j = jnp.argmax(sims)
+        lv.append(sims[j])
+        li.append((base + j).astype(jnp.int32))
+        lr.append(_take_row(m, j))
+        sims = sims.at[j].set(_CONSUMED)
+
+    # Merge scratch + local (2K entries) back into scratch, ordered by
+    # (value descending, index ascending) — `lax.top_k`'s tie convention.
+    cv = jnp.concatenate([vals_s[0, :], jnp.stack(lv)])
+    ci = jnp.concatenate([idx_s[0, :], jnp.stack(li)])
+    cr = jnp.concatenate([rows_s[:, :], jnp.stack(lr)], axis=0)
+    for i in range(k):
+        vmax = jnp.max(cv)
+        j = jnp.argmin(jnp.where(cv == vmax, ci, _IMAX))
+        vals_s[0, i] = cv[j]
+        idx_s[0, i] = ci[j]
+        rows_s[i, :] = _take_row(cr, j)
+        cv = cv.at[j].set(_CONSUMED)
+        ci = ci.at[j].set(_IMAX)
+
+    @pl.when(t == tiles - 1)
+    def _emit():
+        # Exact selections are always valid (every swept row is real).
+        w = _softmax_tail(vals_s[0, :], True, beta_ref[0, 0])
+        read_ref[0, :] = jnp.dot(w, rows_s[:, :],
+                                 preferred_element_type=jnp.float32)
+        w_ref[0, :] = w
+        idx_ref[0, :] = idx_s[0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret",
+                                             "valid_n"))
+def fused_read_sweep(q: jax.Array, mem: jax.Array, beta: jax.Array, *,
+                     k: int, block_n: int = 512, interpret: bool = True,
+                     valid_n: Optional[int] = None):
+    """q: (B, H, W), mem: (B, N, W), beta: (B, H) -> (read (B, H, W) f32,
+    weights (B, H, K) f32, indices (B, H, K) int32). One kernel dispatch;
+    numerically matches `ref.fused_read_ref` (= the composed
+    topk_read → finish_candidate_read path). ``valid_n`` restricts the
+    sweep to rows [0, valid_n) of a scratch-row buffer."""
+    B, H, W = q.shape
+    N = mem.shape[1] if valid_n is None else valid_n
+    assert N % block_n == 0, (N, block_n)
+    assert block_n >= k, (block_n, k)
+    tiles = N // block_n
+    qf = q.reshape(B * H, W)
+    bf = beta.reshape(B * H, 1).astype(jnp.float32)
+
+    read, w, idx = pl.pallas_call(
+        functools.partial(_sweep_kernel, k=k, block_n=block_n, tiles=tiles),
+        grid=(B * H, tiles),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda bh, t: (bh, 0)),
+            pl.BlockSpec((1, block_n, W), lambda bh, t: (bh // H, t, 0)),
+            pl.BlockSpec((1, 1), lambda bh, t: (bh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, W), lambda bh, t: (bh, 0)),
+            pl.BlockSpec((1, k), lambda bh, t: (bh, 0)),
+            pl.BlockSpec((1, k), lambda bh, t: (bh, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, W), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, k), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+            pltpu.VMEM((k, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, mem, bf)
+    return (read.reshape(B, H, W), w.reshape(B, H, k),
+            idx.reshape(B, H, k))
+
+
+# --------------------------------------------------------------------------
+# ANN read: scalar-prefetched candidates, grid independent of N
+# --------------------------------------------------------------------------
+
+def _cand_kernel(cc_ref, cs_ref, q_ref, beta_ref, m_ref,
+                 read_ref, w_ref, idx_ref,
+                 vals_s, pos_s, sig_s, rows_s, *, k: int, C: int):
+    bh = pl.program_id(0)
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        vals_s[0, :] = jnp.full((k,), _CONSUMED, jnp.float32)
+        # Distinct descending sentinels: the first K insertions each evict
+        # a different empty slot (eviction picks the max-pos minimum).
+        pos_s[0, :] = _IMAX - jnp.arange(k, dtype=jnp.int32)
+        sig_s[0, :] = jnp.full((k,), -1, jnp.int32)
+        rows_s[:, :] = jnp.zeros(rows_s.shape, jnp.float32)
+
+    row = m_ref[0, 0, :].astype(jnp.float32)
+    qn = _norm_row(q_ref[0, :].astype(jnp.float32))
+    sim = jnp.dot(row, qn, preferred_element_type=jnp.float32) \
+        * jax.lax.rsqrt(jnp.sum(row * row) + 1e-6)
+    sig = cs_ref[bh, c]
+    sim = jnp.where(sig < 0, _NEG, sim)
+
+    # Running top-K under (value desc, position asc): candidate `c` enters
+    # iff it strictly beats the current minimum (a tie keeps the earlier
+    # position, as `lax.top_k` would), evicting the max-position slot among
+    # the equal minima (the one `top_k` would drop).
+    cv = vals_s[0, :]
+    vmin = jnp.min(cv)
+    slot = jnp.argmax(jnp.where(cv == vmin, pos_s[0, :], -1))
+    hot = (jnp.arange(k) == slot) & (sim > vmin)
+    vals_s[0, :] = jnp.where(hot, sim, cv)
+    pos_s[0, :] = jnp.where(hot, c, pos_s[0, :])
+    sig_s[0, :] = jnp.where(hot, sig, sig_s[0, :])
+    rows_s[:, :] = jnp.where(hot[:, None], row[None, :], rows_s[:, :])
+
+    @pl.when(c == C - 1)
+    def _emit():
+        cv = vals_s[0, :]
+        cp = pos_s[0, :]
+        ov, osig, orows = [], [], []
+        for _ in range(k):
+            vmax = jnp.max(cv)
+            j = jnp.argmin(jnp.where(cv == vmax, cp, _IMAX))
+            ov.append(cv[j])
+            osig.append(sig_s[0, j])
+            orows.append(_take_row(rows_s[:, :], j))
+            cv = cv.at[j].set(_CONSUMED)
+            cp = cp.at[j].set(_IMAX)
+        vals = jnp.stack(ov)
+        sig = jnp.stack(osig)
+        rows = jnp.stack(orows)
+        w = _softmax_tail(vals, sig >= 0, beta_ref[0, 0])
+        read_ref[0, :] = jnp.dot(w, rows,
+                                 preferred_element_type=jnp.float32)
+        w_ref[0, :] = w
+        idx_ref[0, :] = sig
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def fused_read_candidates(q: jax.Array, mem: jax.Array, beta: jax.Array,
+                          cand_idx: jax.Array, *, k: int,
+                          interpret: bool = True):
+    """ANN-mode fused read. q: (B, H, W), mem: (B, N, W), beta: (B, H),
+    cand_idx: (B, H, C) *signed, pre-deduped* candidate ids (-1 = invalid).
+    Returns (read (B, H, W) f32, weights (B, H, K) f32, signed indices
+    (B, H, K) int32) — numerically matches `ref.fused_read_candidates_ref`
+    (= select_candidates → finish_candidate_read on deduped candidates).
+    Grid is (B·H, C): independent of N. Requires C >= k."""
+    B, H, W = q.shape
+    C = cand_idx.shape[-1]
+    assert C >= k, (C, k)
+    qf = q.reshape(B * H, W)
+    bf = beta.reshape(B * H, 1).astype(jnp.float32)
+    cs = cand_idx.reshape(B * H, C).astype(jnp.int32)
+    cc = jnp.maximum(cs, 0)          # clamped: drives the mem block map
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,       # clamped ids, signed ids
+        grid=(B * H, C),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda bh, c, *_: (bh, 0)),
+            pl.BlockSpec((1, 1), lambda bh, c, *_: (bh, 0)),
+            pl.BlockSpec((1, 1, W), lambda bh, c, cc, _cs: (bh // H, cc[bh, c], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, W), lambda bh, c, *_: (bh, 0)),
+            pl.BlockSpec((1, k), lambda bh, c, *_: (bh, 0)),
+            pl.BlockSpec((1, k), lambda bh, c, *_: (bh, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+            pltpu.VMEM((1, k), jnp.int32),
+            pltpu.VMEM((k, W), jnp.float32),
+        ],
+    )
+    read, w, idx = pl.pallas_call(
+        functools.partial(_cand_kernel, k=k, C=C),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, W), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, k), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cc, cs, qf, bf, mem)
+    return (read.reshape(B, H, W), w.reshape(B, H, k),
+            idx.reshape(B, H, k))

@@ -1,0 +1,49 @@
+"""Structural dispatch counting over jaxprs.
+
+The fused-read acceptance criterion ("a decode step's SAM read is one
+kernel dispatch") is asserted *structurally*: trace the function with
+`jax.make_jaxpr` — no compile, no TPU needed, safe on CPU even for
+``backend="pallas"`` — and count primitives. `pallas_call` is opaque (its
+inner jaxpr is the kernel body, not extra dispatches), every other
+primitive's sub-jaxprs (scan/while/cond/pjit bodies) are walked
+recursively. Used by `tests/test_fused_read.py` (fused = 1 pallas_call +
+0 sort/top_k, with the composed path as positive control) and by
+`benchmarks/bench_kernels.py`'s decode-step rows.
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+
+
+def count_primitives(fn, *args, **kwargs) -> collections.Counter:
+    """Trace ``fn(*args, **kwargs)`` and count every primitive equation,
+    recursing into sub-jaxprs (except inside `pallas_call`: one kernel is
+    one dispatch, whatever its body stages)."""
+    jaxpr = jax.make_jaxpr(fn, **{})(*args, **kwargs) \
+        if not kwargs else jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    counts: collections.Counter = collections.Counter()
+    _walk(jaxpr.jaxpr, counts)
+    return counts
+
+
+def _walk(jaxpr, counts) -> None:
+    for eqn in jaxpr.eqns:
+        counts[eqn.primitive.name] += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for sub in _sub_jaxprs(eqn.params):
+            _walk(sub, counts)
+
+
+def _sub_jaxprs(params):
+    """Yield every inner jaxpr in an eqn's params (duck-typed: closed
+    jaxprs carry ``.jaxpr``, open ones carry ``.eqns`` directly)."""
+    for v in params.values():
+        vs = v if isinstance(v, (list, tuple)) else [v]
+        for item in vs:
+            if hasattr(item, "jaxpr"):
+                yield item.jaxpr
+            elif hasattr(item, "eqns"):
+                yield item

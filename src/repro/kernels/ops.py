@@ -60,6 +60,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.fused_read import \
+    fused_read_candidates as fused_read_cand_pallas
+from repro.kernels.fused_read import fused_read_sweep as fused_read_pallas
 from repro.kernels.lsh_hash import lsh_hash as lsh_hash_pallas
 from repro.kernels.registry import BackendSpec, resolve
 from repro.kernels.scatter_rows import scatter_rows as scatter_rows_pallas
@@ -218,6 +221,122 @@ def lra_topn(last_access, n: int, *, backend: BackendSpec = None,
 
 
 # --------------------------------------------------------------------------
+# Fused one-dispatch SAM read (differentiable)
+# --------------------------------------------------------------------------
+
+def fused_read(q, mem, beta, k: int, *, cand_idx=None,
+               backend: BackendSpec = None, block_n: int = 512,
+               valid_n: int = None):
+    """The whole sparse read in one kernel dispatch. q: (B, H, W),
+    mem: (B, N, W), beta: (B, H) -> (read (B, H, W) f32, weights (B, H, K),
+    signed indices (B, H, K) int32).
+
+    With ``cand_idx=None``: the exact read — similarity sweep over rows
+    [0, valid_n), top-K, softmax tail fused (`fused_read_sweep`). With
+    ``cand_idx`` (B, H, C) *signed, pre-deduped* LSH candidates: the
+    ANN-mode read with grid independent of N (`fused_read_candidates`).
+    Selection is non-differentiable; read/weights carry the composed
+    path's exact gradients (custom VJP re-derives `ref.sparse_read_tail`
+    from the recorded indices). Falls back to the jnp oracle when N is
+    not divisible by the clamped block size (exact) or C < k (ANN) —
+    identical results, composed execution.
+
+    Slot-sharded buffers (`mem_shard.memory_mesh`) have no fused route:
+    the caller (core/addressing.py) keeps the composed
+    shard_map path there."""
+    if _mesh_route(mem.shape[1]) is not None:
+        raise ValueError(
+            "fused_read has no slot-sharded route; use the composed "
+            "topk_read/gather path (core.addressing falls back to it "
+            "under an active memory_mesh)")
+    be = resolve(backend)
+    if (impl := be.impl("fused_read")) is not None:
+        if valid_n is not None and not _accepts_kw(impl, "valid_n"):
+            out = impl(q, mem[:, :valid_n], beta, k, cand_idx=cand_idx,
+                       block_n=block_n)
+        else:
+            out = impl(q, mem, beta, k, cand_idx=cand_idx, block_n=block_n,
+                       **_opt_kw(valid_n=valid_n))
+        read, w, idx = out
+        return read, w, _detach_int(idx)
+    if cand_idx is not None:
+        if be.use_pallas and cand_idx.shape[-1] >= k:
+            out = _fused_read_cand_vjp(q, mem, beta, cand_idx, k,
+                                       be.interpret)
+        else:
+            out = ref.fused_read_candidates_ref(q, mem, beta, k, cand_idx)
+        read, w, idx = out
+        return read, w, _detach_int(idx)
+    if be.impl("topk_read") is not None:
+        # Partial backend: it accelerates the composed sweep but has no
+        # fused read — honor its override by composing (identical results,
+        # composed execution; the docs/kernels.md extension contract).
+        _, idx = topk_read(jax.lax.stop_gradient(q),
+                           jax.lax.stop_gradient(mem), k, backend=be,
+                           block_n=block_n, valid_n=valid_n)
+        read, w = ref.sparse_read_tail(q, mem, beta, idx)
+        return read, w, _detach_int(idx)
+    nv = mem.shape[1] if valid_n is None else valid_n
+    bn = min(block_n, nv)
+    if be.use_pallas and nv % bn == 0 and bn >= k:
+        out = _fused_read_sweep_vjp(q, mem, beta, k, bn, be.interpret,
+                                    valid_n)
+    else:
+        out = ref.fused_read_ref(q, mem, beta, k, valid_n=valid_n)
+    read, w, idx = out
+    return read, w, _detach_int(idx)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fused_read_sweep_vjp(q, mem, beta, k, block_n, interpret, valid_n):
+    return fused_read_pallas(q, mem, beta, k=k, block_n=block_n,
+                             interpret=interpret, valid_n=valid_n)
+
+
+def _fused_read_sweep_fwd(q, mem, beta, k, block_n, interpret, valid_n):
+    out = _fused_read_sweep_vjp(q, mem, beta, k, block_n, interpret, valid_n)
+    return out, (q, mem, beta, out[2])
+
+
+def _fused_read_sweep_bwd(k, block_n, interpret, valid_n, res, ct):
+    q, mem, beta, idx = res
+    g_read, g_w, _ = ct                               # idx is int: float0 ct
+    # Selection (idx) is non-differentiable; everything after it is exactly
+    # the composed path's tail, so its VJP *is* the composed gradient.
+    _, vjp_fn = jax.vjp(
+        lambda q_, m_, b_: ref.sparse_read_tail(q_, m_, b_, idx),
+        q, mem, beta)
+    return vjp_fn((g_read, g_w))
+
+
+_fused_read_sweep_vjp.defvjp(_fused_read_sweep_fwd, _fused_read_sweep_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _fused_read_cand_vjp(q, mem, beta, cand_idx, k, interpret):
+    return fused_read_cand_pallas(q, mem, beta, cand_idx, k=k,
+                                  interpret=interpret)
+
+
+def _fused_read_cand_fwd(q, mem, beta, cand_idx, k, interpret):
+    out = _fused_read_cand_vjp(q, mem, beta, cand_idx, k, interpret)
+    return out, (q, mem, beta, cand_idx, out[2])
+
+
+def _fused_read_cand_bwd(k, interpret, res, ct):
+    q, mem, beta, cand_idx, idx = res
+    g_read, g_w, _ = ct
+    _, vjp_fn = jax.vjp(
+        lambda q_, m_, b_: ref.sparse_read_tail(q_, m_, b_, idx),
+        q, mem, beta)
+    g_q, g_mem, g_beta = vjp_fn((g_read, g_w))
+    return g_q, g_mem, g_beta, _zero_ct(cand_idx)
+
+
+_fused_read_cand_vjp.defvjp(_fused_read_cand_fwd, _fused_read_cand_bwd)
+
+
+# --------------------------------------------------------------------------
 # scatter_rows (differentiable)
 # --------------------------------------------------------------------------
 
@@ -237,6 +356,10 @@ def scatter_rows(mem, idx, rows, mode: str = "add", *,
                              "scratch row")
         return mem_shard.scatter_rows_sharded(ctx, mem, idx, rows, mode,
                                               backend=backend)
+    # Cast OUTSIDE the custom_vjp below: the astype's transpose then
+    # converts the (bf16) memory cotangent back to the caller's rows dtype;
+    # casting inside would leak a bf16 cotangent against an f32 primal.
+    rows = rows.astype(mem.dtype)
     be = resolve(backend)
     if (impl := be.impl("scatter_rows")) is not None:
         if scratch_row is not None and not _accepts_kw(impl, "scratch_row"):

@@ -25,6 +25,68 @@ def topk_read_ref(q: jax.Array, mem: jax.Array, k: int):
     return jax.lax.top_k(sims, k)
 
 
+def sparse_read_tail(q: jax.Array, mem: jax.Array, beta: jax.Array,
+                     idx: jax.Array):
+    """Differentiable tail of a sparse read from recorded signed indices —
+    the jnp twin of `core.addressing.finish_candidate_read` (kept here so
+    the fused-read custom-VJPs in `kernels/ops.py` can re-derive gradients
+    without a circular import).
+
+    q: (B, H, W), mem: (B, N, W), beta: (B, H), idx: (B, H, K) signed
+    (-1 = invalid: clamped for the gather, weight exactly 0). Rows are
+    upcast to f32 before the re-rank (bf16 memory storage reads at f32).
+    Returns (read (B, H, K->W weighted sum), weights (B, H, K))."""
+    valid = idx >= 0
+    b = jnp.arange(mem.shape[0])[:, None, None]
+    words = mem[b, jnp.maximum(idx, 0)].astype(jnp.float32)   # (B, H, K, W)
+    qn = q * jax.lax.rsqrt(jnp.sum(q * q, -1, keepdims=True) + 1e-6)
+    wn = words * jax.lax.rsqrt(jnp.sum(words * words, -1, keepdims=True)
+                               + 1e-6)
+    sel = jnp.einsum("bhw,bhkw->bhk", qn, wn) * beta[..., None]
+    sel = jnp.where(valid, sel, -1e9)
+    w = jax.nn.softmax(sel, axis=-1)
+    w = jnp.where(valid, w, 0.0)
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-6)
+    read = jnp.einsum("bhk,bhkw->bhw", w, words)
+    return read, w
+
+
+def fused_read_ref(q: jax.Array, mem: jax.Array, beta: jax.Array, k: int,
+                   valid_n=None):
+    """Oracle for the fused exact read: the composed
+    topk_read → finish_candidate_read path in one call. The selection sweep
+    runs on a stop-gradient f32 view of rows [0, valid_n); the tail
+    gathers from the full (differentiable) memory. Returns
+    (read (B,H,W), weights (B,H,K), indices (B,H,K) int32)."""
+    mv = mem if valid_n is None else mem[:, :valid_n]
+    _, idx = topk_read_ref(
+        jax.lax.stop_gradient(q).astype(jnp.float32),
+        jax.lax.stop_gradient(mv).astype(jnp.float32), k)
+    read, w = sparse_read_tail(q, mem, beta, idx)
+    return read, w, idx
+
+
+def fused_read_candidates_ref(q: jax.Array, mem: jax.Array, beta: jax.Array,
+                              k: int, cand_idx: jax.Array):
+    """Oracle for the fused ANN read: re-rank a *pre-deduped* signed
+    candidate set (B, H, C), keep the top-K by (sim desc, position asc),
+    then the shared tail. Invalid candidates (-1) re-rank at -1e9 —
+    selectable only when fewer than K valid candidates exist, and then
+    with exactly zero weight. Returns (read, weights, signed idx)."""
+    b = jnp.arange(mem.shape[0])[:, None, None]
+    cand = jax.lax.stop_gradient(mem)[b, jnp.maximum(cand_idx, 0)]
+    cand = cand.astype(jnp.float32)                           # (B, H, C, W)
+    qs = jax.lax.stop_gradient(q).astype(jnp.float32)
+    qn = qs * jax.lax.rsqrt(jnp.sum(qs * qs, -1, keepdims=True) + 1e-6)
+    cn = cand * jax.lax.rsqrt(jnp.sum(cand * cand, -1, keepdims=True) + 1e-6)
+    sims = jnp.einsum("bhw,bhcw->bhc", qn, cn)
+    sims = jnp.where(cand_idx < 0, -1e9, sims)
+    _, pos = jax.lax.top_k(sims, k)
+    idx = jnp.take_along_axis(cand_idx, pos, axis=-1)         # (B, H, K)
+    read, w = sparse_read_tail(q, mem, beta, idx)
+    return read, w, idx
+
+
 def scatter_rows_ref(mem: jax.Array, idx: jax.Array, rows: jax.Array,
                      mode: str = "add"):
     """mem: (B,N,W), idx: (B,J), rows: (B,J,W). Sequential semantics for
@@ -32,6 +94,7 @@ def scatter_rows_ref(mem: jax.Array, idx: jax.Array, rows: jax.Array,
     because XLA's scatter-set order for conflicting updates is otherwise
     implementation-defined across platforms."""
     b = jnp.arange(mem.shape[0])[:, None]
+    rows = rows.astype(mem.dtype)
     if mode == "add":
         return mem.at[b, idx].add(rows)
     # Replace every duplicate's row with its last occurrence's row, so the
@@ -73,9 +136,11 @@ def sparse_write_update_ref(mem: jax.Array, last_access: jax.Array,
 
     mem: (B, N, W); last_access: (B, N) int32; write_idx: (B, J) int32 with
     J = H·(K+1); write_w: (B, J); a: (B, H, W) write words (head of column j
-    is j // (K+1)); lra_idx: (B, H) rows to erase; step: () int32. Also
-    accepts scratch-row buffers ((B, N+1, W)/(B, N+1), indices < N): the
-    scatter updates below never reach row N, so it passes through untouched.
+    is j // (K+1)); lra_idx: (B, H) rows to erase; step: () int32 or a
+    per-batch-row (B,)/(B, 1) vector (per-lane session steps, the serving
+    engine's layout). Also accepts scratch-row buffers ((B, N+1, W)/
+    (B, N+1), indices < N): the scatter updates below never reach row N,
+    so it passes through untouched.
 
     Semantics (matching `sam_step`'s unfused sequence exactly):
       1. mem[b, lra_idx]   = 0                       (R_t erase, eq. 6)
@@ -91,7 +156,9 @@ def sparse_write_update_ref(mem: jax.Array, last_access: jax.Array,
     mem = mem.at[b, lra_idx].set(jnp.zeros((B, lra_idx.shape[1], W), mem.dtype))
     add_rows = (write_w.reshape(B, H, kp1)[..., None]
                 * a[:, :, None, :]).reshape(B, J, W)
-    mem = mem.at[b, write_idx].add(add_rows)
+    # One rounding per slot update under bf16 storage (scatter updates must
+    # match the operand dtype; f32 memory is unaffected).
+    mem = mem.at[b, write_idx].add(add_rows.astype(mem.dtype))
     upd = jnp.where(write_w > delta, step, last_access[b, write_idx])
     la = last_access.at[b, write_idx].max(upd)
     return mem, la

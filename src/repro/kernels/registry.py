@@ -27,8 +27,9 @@ Adding a backend
 ----------------
 Register a new :class:`KernelBackend` under a fresh name. A backend is a
 set of flags (``use_pallas``/``interpret``) plus an optional ``overrides``
-table mapping op names (``"topk_read"``, ``"scatter_rows"``, ``"lsh_hash"``,
-``"lra_topn"``, ``"usage_argmin"``, ``"sparse_write_update"``) to callables
+table mapping op names (``"topk_read"``, ``"fused_read"``,
+``"scatter_rows"``, ``"lsh_hash"``, ``"lra_topn"``, ``"usage_argmin"``,
+``"sparse_write_update"``) to callables
 with the override signatures listed in docs/kernels.md (the ref signatures
 plus the trailing keyword config each op forwards, e.g. ``topk_read``
 receives ``block_n=``). `kernels/ops.py` consults

@@ -66,6 +66,7 @@ def scatter_rows(mem: jax.Array, idx: jax.Array, rows: jax.Array,
     buffer and 'add' parks duplicates on row N in place (no pad/slice)."""
     B, N, W = mem.shape
     _, J = idx.shape
+    rows = rows.astype(mem.dtype)   # one rounding per update under bf16 rows
     if mode == "add":
         # Read-modify-write of a freshly written block would see stale data
         # under in/out aliasing, so make the touched row set unique first.

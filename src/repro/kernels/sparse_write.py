@@ -47,6 +47,23 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.scatter_rows import first_occurrence
 
 
+def _as_lane_step(step: jax.Array, batch: int) -> jax.Array:
+    """Normalize the usage-stamp step to a (B,) int32 vector.
+
+    Accepts the () scalar the recurrent cores carry, or the (B,)/(B, 1)
+    per-lane counters the continuous-batching engine carries (one session
+    step per lane — `models/lm.init_memory_states(per_lane_step=True)`)."""
+    step = jnp.asarray(step).astype(jnp.int32)
+    if step.ndim == 0:
+        return jnp.broadcast_to(step, (batch,))
+    flat = step.reshape(-1)
+    if flat.shape[0] != batch:
+        raise ValueError(
+            f"per-lane step must have one entry per batch row: got shape "
+            f"{step.shape} for batch {batch}")
+    return flat
+
+
 def _kernel(uidx_ref, widx_ref, erase_ref, w_ref, step_ref,
             mem_ref, la_ref, a_ref, out_mem_ref, out_la_ref,
             *, J: int, kp1: int, delta: float):
@@ -65,7 +82,7 @@ def _kernel(uidx_ref, widx_ref, erase_ref, w_ref, step_ref,
         touched = hit if touched is None else (touched | hit)
     out_mem_ref[0, 0, :] = acc
     out_la_ref[0, 0] = jnp.where(touched,
-                                 jnp.maximum(step_ref[0], la_ref[0, 0]),
+                                 jnp.maximum(step_ref[b], la_ref[0, 0]),
                                  la_ref[0, 0])
 
 
@@ -86,9 +103,13 @@ def sparse_write_update(mem: jax.Array, last_access: jax.Array,
     scratch row is padded on and sliced back off (O(N·W) per call).
 
     write_idx: (B, J) int32, J = H·(K+1); write_w: (B, J); a: (B, H, W);
-    lra_idx: (B, H) int32; step: () int32. All indices < N. Numerically
-    matches `ref.sparse_write_update_ref` (duplicates accumulate; usage
-    takes the max over step and the previous value wherever weight > delta).
+    lra_idx: (B, H) int32; step: () int32, or a per-batch-row (B,)/(B, 1)
+    vector (the continuous-batching engine stamps each lane with its own
+    session step — the scalar is broadcast, the vector is scalar-prefetched
+    and indexed by the grid's batch coordinate). All indices < N.
+    Numerically matches `ref.sparse_write_update_ref` (duplicates
+    accumulate; usage takes the max over step and the previous value
+    wherever weight > delta).
 
     Precondition: every lra_idx row must also appear in write_idx — only
     write_idx rows get grid steps, so an LRA row outside the write set
@@ -118,7 +139,7 @@ def sparse_write_update(mem: jax.Array, last_access: jax.Array,
     first = first_occurrence(write_idx)
     uidx = jnp.where(first, write_idx, dummy).astype(jnp.int32)
     erase = (uidx[:, :, None] == lra_idx[:, None, :]).any(-1).astype(jnp.int32)
-    step_arr = jnp.broadcast_to(step, (1,)).astype(jnp.int32)
+    step_arr = _as_lane_step(step, B)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,   # uidx, write_idx, erase, write_w, step

@@ -42,11 +42,11 @@ import jax.numpy as jnp
 
 from repro.distributed import elastic, mem_shard
 from repro.distributed.sharding import mesh_rules
-from repro.kernels import registry as kernel_registry
 from repro.models import lm
 from repro.launch.engine.scheduler import Request, Scheduler
 from repro.launch.engine.sessions import SessionStore
-from repro.launch.engine.stepfn import make_engine_step
+from repro.launch.engine.stepfn import (make_engine_step, make_lane_insert,
+                                        make_prefill_scan)
 
 
 class ServeEngine:
@@ -70,12 +70,6 @@ class ServeEngine:
         if cfg.frontend == "audio":
             raise NotImplementedError(
                 "the serving engine feeds token ids, not audio frames")
-        if (cfg.memory is not None
-                and kernel_registry.resolve(cfg.memory.backend).use_pallas):
-            raise ValueError(
-                "per-lane memory step counters need the 'ref' kernel "
-                "backend (the fused Pallas write kernel takes a scalar "
-                "step) — set memory.backend='ref' for serving")
         self.cfg = cfg
         self.lanes = lanes
         self.max_len = max_len
@@ -90,6 +84,16 @@ class ServeEngine:
         self.cache = lm.init_cache(cfg, lanes, max_len, per_lane_pos=True)
         self.mem = lm.init_memory_states(cfg, lanes, per_lane_step=True)
         self._step_fn = make_engine_step(cfg)
+        self._prefill_fn = make_prefill_scan(cfg)
+        self._insert_fn = make_lane_insert(cfg)
+        # Cold-session template, built once (inside the mesh contexts, so
+        # memory leaves are born in the live layout): admission inserts it
+        # with the same single jitted dispatch a warm restore uses.
+        self._fresh_cache = {k: jnp.zeros_like(v[:, :1])
+                             for k, v in self.cache.items() if k != "pos"}
+        self._zero_pos = jnp.zeros((1,), jnp.int32)
+        self._fresh_mem = None if self.mem is None else \
+            lm.init_memory_states(cfg, 1, per_lane_step=True)
 
         self.scheduler = Scheduler(lanes)
         self.sessions = session_store if session_store is not None else \
@@ -143,6 +147,7 @@ class ServeEngine:
             self._admit_lane(lane, req)
         if not self.scheduler.active:
             return []
+        self._prefill_scan_hop()
 
         tokens = jnp.asarray(self._feed[:, None])
         next_tok, logits, self.cache, self.mem = self._step_fn(
@@ -188,18 +193,25 @@ class ServeEngine:
     # -- lane <-> session movement ----------------------------------------
 
     def _admit_lane(self, lane: int, req: Request) -> None:
+        # Validate against the *stored* session before taking it: a
+        # rejected request must leave the session in the store and hand
+        # the lane back to the scheduler — previously `take` had already
+        # removed the session and the raise left the lane occupied with
+        # no way to free it.
+        sess = self.sessions.peek(req.user)
+        pos = 0 if sess is None else int(np.asarray(sess["pos"])[0])
+        if pos + len(req.prompt) + req.max_new_tokens > self.max_len \
+                and self.cfg.window is None:
+            self.scheduler.evict(lane)
+            raise ValueError(
+                f"user {req.user!r}: session at position {pos} cannot fit "
+                f"{len(req.prompt)} prompt + {req.max_new_tokens} new "
+                f"tokens in max_len={self.max_len}")
         sess = self.sessions.take(req.user)
         if sess is None:
             self._reset_lane(lane)
         else:
             self._restore_lane(lane, sess)
-        pos = int(np.asarray(self.cache["pos"])[lane])
-        if pos + len(req.prompt) + req.max_new_tokens > self.max_len \
-                and self.cfg.window is None:
-            raise ValueError(
-                f"user {req.user!r}: session at position {pos} cannot fit "
-                f"{len(req.prompt)} prompt + {req.max_new_tokens} new "
-                f"tokens in max_len={self.max_len}")
         self._feed[lane] = req.prompt[0]
         self._greedy[lane] = req.greedy
         self._seeds[lane] = req.sample_seed
@@ -207,34 +219,55 @@ class ServeEngine:
 
     def _reset_lane(self, lane: int) -> None:
         """Cold session: zero KV rows, position 0, fresh memory state —
-        including a cold (empty) ANN index for cells that carry one."""
-        self.cache = {
-            k: (v.at[lane].set(0) if k == "pos" else v.at[:, lane].set(0))
-            for k, v in self.cache.items()}
-        if self.mem is not None:
-            fresh = lm.init_memory_states(self.cfg, 1, per_lane_step=True)
-            self.mem = tuple(
-                jax.tree.map(lambda full, one: full.at[lane].set(one[0]),
-                             live, new)
-                for live, new in zip(self.mem, fresh))
+        including a cold (empty) ANN index for cells that carry one. One
+        jitted dispatch (`make_lane_insert`), not one per state leaf."""
+        self.cache, self.mem = self._insert_fn(
+            self.cache, self.mem, lane, self._fresh_cache, self._zero_pos,
+            self._fresh_mem)
         self._counters[lane] = 0
 
     def _restore_lane(self, lane: int, sess) -> None:
         """Warm session: re-lay the canonical-layout session out to the
-        live shard count and insert it into `lane`."""
-        cache = sess["cache"]
-        self.cache = {
-            k: (v.at[lane].set(jnp.asarray(sess["pos"][0])) if k == "pos"
-                else v.at[:, lane].set(jnp.asarray(cache[k][:, 0])))
-            for k, v in self.cache.items()}
+        live shard count and insert it into `lane` — one jitted dispatch,
+        like the cold reset."""
+        mem = None
         if self.mem is not None:
             mem = elastic.relayout_memory_state(
                 sess["mem"], self.cfg.memory.num_slots, self._live_shards)
-            self.mem = tuple(
-                jax.tree.map(lambda full, one: full.at[lane].set(
-                    jnp.asarray(one)[0]), live, warm)
-                for live, warm in zip(self.mem, mem))
+        self.cache, self.mem = self._insert_fn(
+            self.cache, self.mem, lane, sess["cache"],
+            jnp.asarray(sess["pos"]), mem)
         self._counters[lane] = int(sess["counter"])
+
+    def _prefill_scan_hop(self) -> None:
+        """Scan the shared mid-prompt stretch in one dispatch.
+
+        Fires only when the queue is drained and *every* active request is
+        still prefilling, and stops one token short of the shortest
+        remaining prompt — so every emission boundary (last prompt token,
+        first sampled token, `first_token_time`, logits bookkeeping) stays
+        on the ordinary 1-token step path. Continuous batching is
+        untouched: the hop replaces exactly n ordinary steps with one
+        `lax.scan` dispatch (`make_prefill_scan`) and advances `steps`,
+        counters, and prompt cursors by the same n."""
+        reqs = self.scheduler.active
+        if self.scheduler.queue or not reqs:
+            return
+        if any(not r.prefilling for r in reqs.values()):
+            return
+        n = min(len(r.prompt) - r.prefill_done for r in reqs.values()) - 1
+        if n < 1:
+            return
+        feed = np.zeros((self.lanes, n), np.int32)
+        for lane, r in reqs.items():
+            feed[lane] = r.prompt[r.prefill_done:r.prefill_done + n]
+        self.cache, self.mem = self._prefill_fn(
+            self.params, self.cache, self.mem, jnp.asarray(feed))
+        self.steps += n
+        for lane, r in reqs.items():
+            self._counters[lane] += n
+            r.prefill_done += n
+            self._feed[lane] = r.prompt[r.prefill_done]
 
     def _evict_lane(self, lane: int) -> None:
         req = self.scheduler.evict(lane)

@@ -103,6 +103,25 @@ class SessionStore:
             return _host(tree)
         return None
 
+    def peek(self, user: str):
+        """Return `user`'s session tree without removing it from the store
+        (restoring it into the hot set first if it was spilled). None for
+        an unknown user. Lets a caller validate a request against the
+        stored state *before* committing to `take` — rejecting then loses
+        nothing."""
+        if user in self._hot:
+            return self._hot[user]
+        if user in self._spilled:
+            directory, template = self._spilled.pop(user)
+            tree, _ = ckpt.restore_checkpoint(directory, template)
+            shutil.rmtree(directory, ignore_errors=True)
+            self.restores += 1
+            self._hot[user] = _host(tree)
+            self._hot.move_to_end(user)
+            self._maybe_spill()
+            return self._hot[user]
+        return None
+
     def __contains__(self, user: str) -> bool:
         return user in self._hot or user in self._spilled
 

@@ -62,3 +62,66 @@ def make_engine_step(cfg):
         return next_tok, logits, new_cache, new_mem
 
     return jax.jit(step, donate_argnums=(1, 2))
+
+
+def make_prefill_scan(cfg):
+    """Build the jitted multi-token prefill for `cfg`: the whole token
+    stretch under one `lax.scan` of the decode step (`lm.decode_scan`) —
+    one XLA dispatch instead of one Python dispatch per prompt token.
+
+    Returned callable:
+        ``prefill(params, cache, mem_states, tokens) ->
+        (new_cache, new_mem_states)``
+
+    ``tokens`` (B, T) int32: T input tokens per lane. No sampling, no
+    logits — prefill consumes prompt tokens whose successors are already
+    known, so only the carried state matters. ``cache``/``mem_states``
+    are donated, like the engine step's.
+    """
+
+    def prefill(params, cache, mem_states, tokens):
+        if mem_states is None:
+            _, new_cache = lm.decode_scan(params, cfg, cache, tokens)
+            return new_cache, None
+        _, new_cache, new_mem = lm.decode_scan(params, cfg, cache, tokens,
+                                               mem_states=mem_states)
+        return new_cache, new_mem
+
+    return jax.jit(prefill, donate_argnums=(1, 2))
+
+
+def make_lane_insert(cfg):
+    """Build the jitted single-dispatch lane insert: write one session's
+    column (KV rows, position, memory leaves) into lane ``lane`` of the
+    live batch state. Replaces the per-leaf host-side ``.at[].set`` loop
+    the engine used per admission — one compiled program whose cost no
+    longer scales with layer count, compiled once (``lane`` is traced).
+
+    Returned callable:
+        ``insert(cache, mem_states, lane, sess_cache, pos, sess_mem)
+        -> (new_cache, new_mem_states)``
+
+    * ``sess_cache``: the session's cache columns, each (L, 1, ...) —
+      lane-indexed leaves only (no "pos");
+    * ``pos``: (1,) int32 position for the lane;
+    * ``sess_mem``: per-group memory states with batch dim 1, already in
+      the live layout (None for memoryless models).
+    """
+
+    def insert(cache, mem_states, lane, sess_cache, pos, sess_mem):
+        new_cache = {
+            k: (v.at[lane].set(pos[0]) if k == "pos"
+                else jax.lax.dynamic_update_index_in_dim(
+                    v, sess_cache[k][:, 0].astype(v.dtype), lane, 1))
+            for k, v in cache.items()}
+        if mem_states is None:
+            return new_cache, None
+        new_mem = tuple(
+            jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                    full, one[0].astype(full.dtype), lane, 0),
+                live, warm)
+            for live, warm in zip(mem_states, sess_mem))
+        return new_cache, new_mem
+
+    return jax.jit(insert, donate_argnums=(0, 1))

@@ -27,7 +27,6 @@ import jax.numpy as jnp
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.distributed import mem_shard
 from repro.distributed.sharding import mesh_rules
-from repro.launch.steps import make_serve_step
 from repro.models import lm
 
 
@@ -59,45 +58,51 @@ def _select(logits, greedy: bool, key):
 def _serve(cfg, *, batch, prompt_len, gen_len, max_len, seed, greedy=True):
     key = jax.random.PRNGKey(seed)
     params = lm.init_params(key, cfg)
-    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
 
     cache = lm.init_cache(cfg, batch, max_len)
     if cfg.frontend == "audio":
-        toks = jax.random.normal(key, (batch, prompt_len, cfg.d_model))
-        step_tok = lambda t: t[:, None]          # embeds
-        prompt_iter = [toks[:, i] for i in range(prompt_len)]
+        prompt = jax.random.normal(key, (batch, prompt_len, cfg.d_model))
     else:
         prompt = jax.random.randint(key, (batch, prompt_len), 1,
                                     cfg.vocab_size)
-        prompt_iter = [prompt[:, i] for i in range(prompt_len)]
-        step_tok = lambda t: t[:, None]
 
-    # Prefill by stepping the decoder over the prompt (cache-populating
-    # path; the batched prefill kernel is exercised by the dry-run).
+    # Prefill: the whole prompt under one scanned dispatch (lm.decode_scan)
+    # with the cache donated — no per-token Python round trip.
+    prefill_fn = jax.jit(lambda p, c, xs: lm.decode_scan(p, cfg, c, xs),
+                         donate_argnums=(1,))
     t0 = time.time()
-    logits = None
-    for tok in prompt_iter:
-        logits, cache = serve_step(params, cache, step_tok(tok))
+    logits, cache = prefill_fn(params, cache, prompt)
     # JAX dispatch is async: without blocking on the result the stopwatch
     # measures enqueue time, not compute, inflating the throughput numbers.
     jax.block_until_ready(logits)
     prefill_t = time.time() - t0
 
-    out_tokens = []
     sample_key = jax.random.fold_in(key, 1)
-    tok = _select(logits, greedy, sample_key)
+
+    def decode_loop(params, cache, tok0):
+        """The whole generation under one `lax.scan`: step, select, feed
+        back — the same select-key schedule the per-token loop used
+        (token i sampled with fold_in(sample_key, i))."""
+        def body(carry, i):
+            cache, tok = carry
+            if cfg.frontend == "audio":
+                step_in = jax.nn.one_hot(tok, cfg.d_model)[:, None]
+            else:
+                step_in = tok[:, None]
+            logits, cache = lm.decode_step(params, cfg, cache, step_in)
+            nxt = _select(logits, greedy, jax.random.fold_in(sample_key, i))
+            return (cache, nxt), nxt
+
+        (cache, _), toks = jax.lax.scan(body, (cache, tok0),
+                                        jnp.arange(gen_len))
+        return cache, jnp.moveaxis(toks, 0, 1)          # (B, gen_len)
+
+    decode_fn = jax.jit(decode_loop, donate_argnums=(1,))
+    tok0 = _select(logits, greedy, sample_key)
     t0 = time.time()
-    for i in range(gen_len):
-        if cfg.frontend == "audio":
-            step_in = jax.nn.one_hot(tok, cfg.d_model)[:, None]
-        else:
-            step_in = tok[:, None]
-        logits, cache = serve_step(params, cache, step_in)
-        tok = _select(logits, greedy, jax.random.fold_in(sample_key, i))
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)       # same async-dispatch pitfall as above
+    cache, tokens = decode_fn(params, cache, tok0)
+    jax.block_until_ready(tokens)    # same async-dispatch pitfall as above
     decode_t = time.time() - t0
-    tokens = jnp.stack(out_tokens, axis=1)
     return {
         "tokens": tokens,
         "prefill_s": prefill_t,

@@ -65,6 +65,10 @@ class MemoryLayerConfig:
     # Kernel backend for the memory ops ('ref' | 'pallas' |
     # 'pallas-interpret' | registered custom; None -> env default).
     backend: "str | None" = None
+    # Storage dtype of the memory rows ('float32' | 'bfloat16'): bfloat16
+    # halves the (B, N+1, W) buffer; reads upcast to float32 before the
+    # similarity/softmax math, so compute precision is unchanged.
+    mem_dtype: str = "float32"
     # How the segment loop backpropagates (core/unroll.py): 'naive' scans
     # and checkpoints the (B, N+1, W) memory per segment; 'sparse' stores
     # only the per-segment rollback deltas; 'chunked' adds boundary

@@ -237,7 +237,8 @@ def init_memory_states(cfg: ModelConfig, batch: int, *,
     evicted and later restored into a different lane (launch/engine) then
     reproduces the uninterrupted run's usage table bit-for-bit. The ref
     kernel backend broadcasts the vector step; the fused Pallas write
-    kernel takes a scalar, so per-lane serving runs on "ref"."""
+    kernel scalar-prefetches it and stamps per batch row, so per-lane
+    serving runs on any backend."""
     if cfg.memory is None:
         return None
     n_groups = max(1, cfg.num_layers // cfg.memory.every_n_layers)
@@ -354,6 +355,39 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, mem_states=None):
     if mem_states is not None:
         return logits, new_cache, tuple(new_mem)
     return logits, new_cache
+
+
+def decode_scan(params, cfg: ModelConfig, cache, tokens, mem_states=None):
+    """Consume T tokens under **one** `lax.scan` of `decode_step` — one XLA
+    dispatch for the whole stretch instead of one Python dispatch per
+    token. tokens: (B, T) int32, or (B, T, d) frame embeds for audio
+    frontends. Callers jit this with the cache (and memory states) donated
+    so the scan carry updates in place.
+
+    Returns (logits (B, 1, V) of the *last* position, new_cache) — plus
+    new_mem_states when ``mem_states`` was given. Numerics are the scanned
+    composition of `decode_step`, so per-lane positions / per-lane memory
+    steps ride through untouched (the serving engine scans prefill
+    stretches with this; `launch/serve.py` scans whole generations)."""
+    B = tokens.shape[0]
+    xs = jnp.moveaxis(tokens, 1, 0)
+    xs = xs[:, :, None] if xs.ndim == 2 else xs[:, :, None, :]
+    logits0 = jnp.zeros((B, 1, cfg.vocab_size), _DTYPES[cfg.compute_dtype])
+
+    def body(carry, x):
+        cache, mem, _ = carry
+        if mem is None:
+            logits, cache = decode_step(params, cfg, cache, x)
+        else:
+            logits, cache, mem = decode_step(params, cfg, cache, x,
+                                             mem_states=mem)
+        return (cache, mem, logits), None
+
+    (cache, mem, logits), _ = jax.lax.scan(
+        body, (cache, mem_states, logits0), xs)
+    if mem_states is not None:
+        return logits, cache, mem
+    return logits, cache
 
 
 def prefill(params, cfg: ModelConfig, batch, max_len: Optional[int] = None):

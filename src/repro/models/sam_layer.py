@@ -83,7 +83,9 @@ def init_memory_state(cfg: ModelConfig, batch: int, *,
     m = cfg.memory
     memory, last_access = mem_shard.init_layout(
         m.num_slots, mem_shards,
-        init_scratch_memory(batch, m.num_slots, m.word_size),
+        init_scratch_memory(batch, m.num_slots, m.word_size,
+                            dtype=jnp.dtype(getattr(m, "mem_dtype",
+                                                    "float32"))),
         init_scratch_last_access(batch, m.num_slots))
     return MemoryState(
         memory=memory,

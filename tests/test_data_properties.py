@@ -63,6 +63,20 @@ def test_int8_quantization_error_bound(values):
     assert (err <= bound).all()
 
 
+def test_int8_dequantize_traces_under_jit():
+    """Regression: the dequant slice bound was computed with jnp.prod on
+    the static shape, which becomes a tracer under jit and makes the slice
+    a TypeError; the size must stay a Python int (math.prod)."""
+    from repro.distributed.compression import dequantize_int8
+    x = jax.random.normal(jax.random.PRNGKey(0), (7, 33))
+    q, scale = quantize_int8(x)
+    y = jax.jit(dequantize_int8, static_argnums=(2,))(q, scale, x.shape)
+    assert y.shape == x.shape
+    # int8_roundtrip shares the same slice logic and must also jit.
+    z = jax.jit(int8_roundtrip)(x)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(y))
+
+
 def test_curriculum_doubles_after_patience():
     c = Curriculum(start_level=2, threshold=0.1, patience=3)
     doubled = [c.update(0.05) for _ in range(3)]

@@ -166,11 +166,11 @@ def _mem_equal(a, b):
     return True, None
 
 
-def _determinism_roundtrip(mesh=None):
+def _determinism_roundtrip(mesh=None, cfg=None):
     """Serve user "u" (sampled) 8 tokens uninterrupted vs 4 + 4 across two
     engine instances sharing a SessionStore, with different neighbours and
     lanes each time. Returns both token streams and both final sessions."""
-    cfg = _cfg()
+    cfg = cfg if cfg is not None else _cfg()
     P = [3, 7, 11, 2]
     u = dict(user="u", greedy=False, sample_seed=42)
 
@@ -197,8 +197,9 @@ def _determinism_roundtrip(mesh=None):
     return tok_full, sess_full, tok_split, sess_split
 
 
-def _assert_roundtrip_deterministic(mesh=None):
-    tok_full, sess_full, tok_split, sess_split = _determinism_roundtrip(mesh)
+def _assert_roundtrip_deterministic(mesh=None, cfg=None):
+    tok_full, sess_full, tok_split, sess_split = _determinism_roundtrip(
+        mesh, cfg)
     assert tok_full == tok_split
     ok, leaf = _mem_equal(sess_full["mem"], sess_split["mem"])
     assert ok, f"memory leaf {leaf!r} diverged across evict/restore"
@@ -208,6 +209,41 @@ def _assert_roundtrip_deterministic(mesh=None):
 
 def test_evict_restore_determinism_single_device():
     _assert_roundtrip_deterministic(mesh=None)
+
+
+def test_evict_restore_determinism_pallas_backend():
+    """The engine on a Pallas-backed memory config (regression: it used to
+    refuse anything but the ref backend because the fused write kernel
+    could not take per-lane session steps). Same bit-exact evict/restore
+    contract, now through the fused kernels."""
+    import dataclasses
+    cfg = _cfg()
+    cfg = dataclasses.replace(cfg, memory=dataclasses.replace(
+        cfg.memory, backend="pallas-interpret"))
+    _assert_roundtrip_deterministic(cfg=cfg)
+
+
+def test_rejected_request_keeps_session_and_lane():
+    """Admission rejection (session + prompt + budget exceeds max_len) must
+    be loss-free: the stored session survives untouched and the lane goes
+    back to the scheduler. Regression: `take` ran before validation, so a
+    rejected request silently destroyed the user's session and leaked the
+    lane (it stayed occupied with no way to free it)."""
+    import dataclasses
+    cfg = dataclasses.replace(_cfg(), window=None)
+    with ServeEngine(cfg, lanes=2, max_len=16) as eng:
+        eng.run([Request(user="u", prompt=[3, 7], max_new_tokens=4,
+                         greedy=True)])
+        pos_before = int(np.asarray(eng.sessions.peek("u")["pos"])[0])
+        eng.submit(Request(user="u", prompt=[5], max_new_tokens=16))
+        with pytest.raises(ValueError, match="cannot fit"):
+            eng.run()
+        assert "u" in eng.sessions          # session not consumed
+        assert int(np.asarray(eng.sessions.peek("u")["pos"])[0]) == pos_before
+        assert eng.scheduler.free_lanes == 2  # lane returned, refillable
+        res = eng.run([Request(user="u", prompt=[2], max_new_tokens=2,
+                               greedy=True)])
+        assert len(res) == 1 and len(res[0]["tokens"]) == 2
 
 
 @pytest.mark.skipif(jax.device_count() < 8,

@@ -130,3 +130,82 @@ def test_ref_oracle_is_exposed():
                                          DELTA)
     assert np.array_equal(np.asarray(m1), np.asarray(m2))
     assert np.array_equal(np.asarray(l1), np.asarray(l2))
+
+
+# --------------------------- per-lane step ---------------------------------
+
+def _step_shapes(backend, B):
+    """The step layouts each path accepts: the oracle broadcasts () and
+    (B, 1) (the engine's per-lane counter layout); the Pallas wrapper also
+    normalizes a flat (B,)."""
+    col = jnp.arange(B, dtype=jnp.int32) * 7 + 3
+    shapes = [col[:, None]]
+    if backend != "ref":
+        shapes.append(col)
+    return col, shapes
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dup,overlap", [(False, False), (True, True)])
+def test_per_lane_step_matches_per_row_scalar(backend, dup, overlap):
+    """A (B, 1) per-lane step (the serving engine's session counters) must
+    stamp row b's usage exactly as a scalar-step call with step[b] would —
+    lane independence, the engine's determinism contract."""
+    mem, last, widx, ww, a, lra = _case(jax.random.PRNGKey(21), dup=dup,
+                                        lra_in_writes=overlap)
+    B = mem.shape[0]
+    col, shapes = _step_shapes(backend, B)
+    want_m, want_l = [], []
+    for b in range(B):
+        sl = slice(b, b + 1)
+        m, l = ops.sparse_write_update(mem[sl], last[sl], widx[sl], ww[sl],
+                                       a[sl], lra[sl], jnp.int32(col[b]),
+                                       delta=DELTA, backend=backend)
+        want_m.append(np.asarray(m))
+        want_l.append(np.asarray(l))
+    for step in shapes:
+        m1, l1 = ops.sparse_write_update(mem, last, widx, ww, a, lra, step,
+                                         delta=DELTA, backend=backend)
+        np.testing.assert_allclose(np.asarray(m1), np.concatenate(want_m),
+                                   atol=1e-6, err_msg=str(step.shape))
+        assert np.array_equal(np.asarray(l1), np.concatenate(want_l))
+
+
+def test_per_lane_step_parity_across_backends():
+    """Pallas vs oracle with the (B, 1) step: forward bit-level usage
+    agreement and gradient agreement through the custom VJP."""
+    mem, last, widx, ww, a, lra = _case(jax.random.PRNGKey(22), dup=True,
+                                        lra_in_writes=True)
+    B = mem.shape[0]
+    step = (jnp.arange(B, dtype=jnp.int32) * 5 + 2)[:, None]
+    m_r, l_r = ops.sparse_write_update(mem, last, widx, ww, a, lra, step,
+                                       delta=DELTA, backend="ref")
+    m_p, l_p = ops.sparse_write_update(mem, last, widx, ww, a, lra, step,
+                                       delta=DELTA,
+                                       backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(m_p), np.asarray(m_r), atol=1e-5)
+    assert np.array_equal(np.asarray(l_p), np.asarray(l_r))
+
+    tgt = jax.random.normal(jax.random.PRNGKey(23), mem.shape)
+
+    def loss(backend):
+        def f(args):
+            m, w_, a_ = args
+            m2, _ = ops.sparse_write_update(m, last, widx, w_, a_, lra,
+                                            step, delta=DELTA,
+                                            backend=backend)
+            return (m2 * tgt).sum() + (m2 ** 2).sum()
+        return f
+
+    g_ref = jax.grad(loss("ref"))((mem, ww, a))
+    g_pal = jax.grad(loss("pallas-interpret"))((mem, ww, a))
+    for gr, gp in zip(g_ref, g_pal):
+        np.testing.assert_allclose(np.asarray(gr), np.asarray(gp), atol=1e-5)
+
+
+def test_per_lane_step_rejects_wrong_length():
+    mem, last, widx, ww, a, lra = _case(jax.random.PRNGKey(24))
+    bad = jnp.arange(mem.shape[0] + 1, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="per-lane step"):
+        ops.sparse_write_update(mem, last, widx, ww, a, lra, bad,
+                                delta=DELTA, backend="pallas-interpret")
