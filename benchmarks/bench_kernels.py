@@ -20,11 +20,17 @@ would measure noise.
 
 Results go to ``experiments/bench/BENCH_kernels.json``; the
 ``layout_speedup`` rows record scratch-vs-legacy at each size, the
-evidence for the ROADMAP item this layout closed. The ``decode_step``
-rows time one full model decode step per backend and record its staged
-primitive counts — the fused-read before/after (ref composes the read
-and keeps a ``top_k`` primitive; the Pallas backends stage the whole
-read as a single ``pallas_call``).
+evidence for the ROADMAP item this layout closed. The ``read_sweep``
+rows bench one fused-read dispatch per storage dtype (``mem_dtype`` ∈
+{float32, bfloat16, int8}) with analytic ``bytes_moved`` / achieved-
+bandwidth columns (`benchmarks/roofline.py` accounting): int8 rows + f32
+scale column move ~3.6× fewer HBM bytes than f32 at W=32. The
+``decode_step`` rows time one full model decode step per backend ×
+storage dtype and record its staged primitive counts — the fused-read
+before/after (ref composes the read and keeps a ``top_k`` primitive; the
+Pallas backends stage the whole read as a single ``pallas_call``), and
+across dtypes the equal ``pallas_call`` counts show the in-kernel int8
+dequant stages no extra kernel launches.
 
 On TPU the fused backend is ``"pallas"`` (compiled); elsewhere it falls
 back to ``"pallas-interpret"``, whose absolute numbers only sanity-check
@@ -96,35 +102,50 @@ def bench_sparse_write(n: int, backend: str, layout: str = "scratch"):
     return timed(run)
 
 
-def bench_fused_read(n: int, backend: str, block_n: int = 512):
-    """One fused-read dispatch (sweep → top-K → softmax → gather)."""
+def bench_fused_read(n: int, backend: str, mem_dtype: str = "float32",
+                     block_n: int = 512):
+    """One fused-read dispatch (sweep → top-K → softmax → gather) at a
+    given storage dtype. Int8 memory streams the per-row f32 scale column
+    alongside the rows and dequantizes in-VMEM — same single dispatch,
+    ~4× less HBM row traffic (the `bytes_moved` column)."""
+    from repro.core.quant import quantize_rows
+
     q = jax.random.normal(jax.random.PRNGKey(0), (B, H, W))
-    mem = jax.random.normal(jax.random.PRNGKey(n), (B, n, W))
+    memf = jax.random.normal(jax.random.PRNGKey(n), (B, n, W))
+    scale = None
+    if mem_dtype == "int8":
+        mem, scale = quantize_rows(memf)
+    else:
+        mem = memf.astype(jnp.dtype(mem_dtype))
     beta = jnp.ones((B, H)) * 4.0
 
     @jax.jit
-    def f(q, mem, beta):
+    def f(q, mem, beta, scale):
         return ops.fused_read(q, mem, beta, K, backend=backend,
-                              block_n=block_n)
+                              block_n=block_n, mem_scale=scale)
 
-    return timed(lambda: f(q, mem, beta))
+    return timed(lambda: f(q, mem, beta, scale))
 
 
-def bench_decode_step(backend: str):
+def bench_decode_step(backend: str, mem_dtype: str = "float32"):
     """Per-token latency of a full `lm.decode_step` on the reduced
     SAM-augmented arch, plus the staged-primitive counts of the step —
     the fused-read before/after: the ref backend composes the read
     (a `top_k` primitive survives in the jaxpr), the Pallas backends
-    stage the whole read as one `pallas_call`."""
+    stage the whole read as one `pallas_call`. The staged counts are also
+    the no-extra-launches guard for the int8 path: the in-kernel dequant
+    must not add a `pallas_call` over the f32 step."""
     import dataclasses
 
+    from benchmarks.roofline import sweep_read_bytes
     from repro.configs import get_config, reduced
     from repro.kernels.introspect import count_primitives
     from repro.models import lm
 
     cfg = reduced(get_config("h2o_danube_3_4b_sam"))
     cfg = dataclasses.replace(
-        cfg, memory=dataclasses.replace(cfg.memory, backend=backend))
+        cfg, memory=dataclasses.replace(cfg.memory, backend=backend,
+                                        mem_dtype=mem_dtype))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     tok = jnp.ones((1, 1), jnp.int32)
 
@@ -142,10 +163,17 @@ def bench_decode_step(backend: str):
 
     run.state = (cache0, mem0)
     us = timed(run)
+    m = cfg.memory
+    n_groups = max(1, cfg.num_layers // m.every_n_layers)
+    bytes_moved = n_groups * sweep_read_bytes(m.num_slots, m.word_size,
+                                             mem_dtype)
     return us, {"pallas_call": counts.get("pallas_call", 0),
                 "top_k": counts.get("top_k", 0),
                 "sort": counts.get("sort", 0),
-                "eqns": sum(counts.values())}
+                "eqns": sum(counts.values()),
+                "N": m.num_slots, "mem_dtype": mem_dtype,
+                "bytes_moved": bytes_moved,
+                "achieved_gbps": bytes_moved / (us * 1e-6) / 1e9}
 
 
 def bench_topk(n: int, backend: str, block_n: int = 512):
@@ -173,6 +201,9 @@ def main(argv=None):
     sizes = args.sizes or ([4096, 16384] if args.quick
                            else [4096, 65536, 1048576])
 
+    from benchmarks.roofline import sweep_read_bytes
+
+    mem_dtypes = ("float32", "bfloat16", "int8")
     results = []
     for n in sizes:
         for be, layouts in (("ref", ("scratch",)),
@@ -182,6 +213,28 @@ def main(argv=None):
                 results.append({"op": "sparse_write_update", "backend": be,
                                 "layout": layout, "N": n, "us_per_call": us})
                 row(f"sparse_write/{be}/{layout}/N={n}", us)
+        # Read-sweep rows across the storage dtype ladder: same dispatch,
+        # bytes_moved drops with the storage width (int8 = rows + f32
+        # scale column — ~3.6× less traffic than f32 at W=32). The pallas
+        # backend joins on TPU (or at small N: interpret mode executes the
+        # N/block_n grid in Python); the analytic bytes are
+        # backend-independent.
+        for dt in mem_dtypes:
+            read_bes = ["ref"] + ([pallas_be] if on_tpu or n <= 16384
+                                  else [])
+            for be in read_bes:
+                us = bench_fused_read(n, be, dt)
+                bm = sweep_read_bytes(n, W, dt, batch=B)
+                gbps = bm / (us * 1e-6) / 1e9
+                results.append({"op": "read_sweep", "backend": be, "N": n,
+                                "mem_dtype": dt, "us_per_call": us,
+                                "bytes_moved": bm, "achieved_gbps": gbps})
+                row(f"read_sweep/{be}/{dt}/N={n}", us,
+                    f"{bm}B {gbps:.2f}GB/s")
+        f32_b = sweep_read_bytes(n, W, "float32", batch=B)
+        int8_b = sweep_read_bytes(n, W, "int8", batch=B)
+        row(f"read_sweep/bytes_reduction/N={n}", int8_b,
+            f"{f32_b / int8_b:.2f}x")
         if args.topk:
             for be in ("ref", pallas_be):
                 us = bench_topk(n, be)
@@ -193,17 +246,21 @@ def main(argv=None):
                                 "us_per_call": us})
                 row(f"fused_read/{be}/N={n}", us)
 
-    # Decode-step rows: one full model decode step per backend — per-token
-    # latency plus the staged-primitive counts showing the fused read (ref
-    # composes: top_k >= 1; pallas backends: the read is one pallas_call
-    # and zero top_k — the remaining sorts are lra_topn's tile merge).
+    # Decode-step rows: one full model decode step per backend × storage
+    # dtype — per-token latency plus the staged-primitive counts showing
+    # the fused read (ref composes: top_k >= 1; pallas backends: the read
+    # is one pallas_call and zero top_k — the remaining sorts are
+    # lra_topn's tile merge). Equal pallas_call counts across dtypes are
+    # the no-extra-launches evidence for the in-kernel int8 dequant.
     for be in ("ref", pallas_be):
-        us, counts = bench_decode_step(be)
-        results.append({"op": "decode_step", "backend": be,
-                        "us_per_token": us, **counts})
-        row(f"decode_step/{be}", us,
-            f"pallas_call={counts['pallas_call']} top_k={counts['top_k']} "
-            f"eqns={counts['eqns']}")
+        for dt in mem_dtypes:
+            us, counts = bench_decode_step(be, dt)
+            results.append({"op": "decode_step", "backend": be,
+                            "us_per_token": us, **counts})
+            row(f"decode_step/{be}/{dt}", us,
+                f"pallas_call={counts['pallas_call']} "
+                f"top_k={counts['top_k']} eqns={counts['eqns']} "
+                f"bytes={counts['bytes_moved']}")
 
     # Speedup columns. ref/fused compares backends on the scratch layout (on
     # CPU-interpret this mostly demonstrates N-independence of the fused

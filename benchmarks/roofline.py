@@ -1,6 +1,11 @@
 """Roofline report (deliverable g): read the dry-run records and emit the
 per-(arch × shape × mesh) three-term roofline table with MODEL_FLOPS
-utilization ratios. Markdown to stdout; also returns the rows."""
+utilization ratios. Markdown to stdout; also returns the rows.
+
+Also the home of the analytic HBM-traffic accounting the kernel benches
+(`benchmarks/bench_kernels.py`) reuse for their ``bytes_moved`` /
+achieved-bandwidth columns, so the bench and the roofline model cannot
+drift apart on what a memory sweep costs."""
 from __future__ import annotations
 
 import glob
@@ -12,6 +17,25 @@ from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.launch.specs import get_shape
 
 PARAMS_CACHE = {}
+
+# Storage bytes per element of a memory row, by `mem_dtype`
+# (MemoryConfig.mem_dtype / MemoryLayerConfig.mem_dtype).
+MEM_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+
+def sweep_read_bytes(n: int, w: int, mem_dtype: str, batch: int = 1) -> int:
+    """Analytic HBM traffic of one full-sweep sparse memory read: the
+    (B, N, W) row sweep at the storage dtype — the term that scales with N
+    and dominates the read's memory time. Int8 storage adds the (B, N) f32
+    per-row scale column the fused kernel streams alongside the rows
+    (docs/kernels.md, storage dtype ladder): N·W + 4N bytes vs 4·N·W for
+    f32 — a 3.56× reduction at W=32, asymptotically 4×. Query/output
+    terms are O(H·W), N-independent, and omitted."""
+    per = MEM_DTYPE_BYTES[mem_dtype]
+    total = batch * n * w * per
+    if mem_dtype == "int8":
+        total += batch * n * 4
+    return total
 
 
 def count_params(arch: str) -> tuple[int, int]:

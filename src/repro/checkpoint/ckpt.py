@@ -64,11 +64,15 @@ def _flatten_with_paths(tree):
 
 # Manifest format: 1 (implicit — no field) predates the scratch-row layout;
 # 2 = scratch-row era (un-partitioned LSH index); 3 = ownership-partitioned
-# LSH index (ANNState grew a partition axis). Each shape-based migration
-# shim applies only to checkpoints written *before* the format that
-# introduced its layout: once a checkpoint carries the marker, its shapes
-# are authoritative and any mismatch is a config error.
-MANIFEST_FORMAT = 3
+# LSH index (ANNState grew a partition axis); 4 = int8 quantized memory era
+# (states may carry a per-row `mem_scale` leaf next to an int8 `memory`
+# leaf). Each shape-based migration shim applies only to checkpoints
+# written *before* the format that introduced its layout: once a checkpoint
+# carries the marker, its shapes are authoritative and any mismatch is a
+# config error. The mem-dtype migration (float↔int8 memory, below) is
+# *dtype*-driven, not format-gated — the leaf dtypes in the manifest are
+# unambiguous in every format.
+MANIFEST_FORMAT = 4
 
 
 def save_checkpoint(directory: str, step: int, tree,
@@ -155,6 +159,33 @@ def _migrate_scratch_row(arr: np.ndarray, want_shape) -> np.ndarray:
     pad[1] = (0, 1)
     fill = LA_SCRATCH if np.issubdtype(arr.dtype, np.integer) else 0
     return np.pad(arr, pad, constant_values=fill)
+
+
+def _np_quantize_rows(arr: np.ndarray):
+    """Host-side numpy twin of `core.quant.quantize_rows`, kept in sync
+    (tested against it in tests/test_int8_memory.py): per-row symmetric
+    int8 along the last axis, ``scale = max|row| / 127`` exactly — no
+    epsilon, so all-zero rows carry scale 0.0 and dequantize to exact
+    zeros. `np.rint` and `jnp.round` are both round-half-to-even."""
+    xf = np.asarray(arr, np.float32)
+    scale = (np.max(np.abs(xf), axis=-1) / np.float32(127.0)).astype(
+        np.float32)
+    safe = np.where(scale > 0, scale, np.float32(1.0))
+    q = np.clip(np.rint(xf / safe[..., None]), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def _np_dequantize_rows(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * scale.astype(np.float32)[..., None]
+
+
+def _scale_path(mem_path: str) -> str:
+    """Manifest path of the `mem_scale` leaf next to a `memory` leaf —
+    same container, so same rendering (".memory" → ".mem_scale",
+    "memory" → "mem_scale")."""
+    prefix, _, last = mem_path.rpartition("/")
+    dot = "." if last.startswith(".") else ""
+    return (prefix + "/" if prefix else "") + dot + "mem_scale"
 
 
 def _migrate_ann_axis(arr: np.ndarray, name: str) -> np.ndarray:
@@ -254,17 +285,42 @@ def restore_checkpoint(directory: str, template, step: int = None,
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     t_paths, t_leaves, treedef = _flatten_with_paths(template)
+    ck_by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    def _leaf_name(p):
+        return p.rsplit("/", 1)[-1].lstrip(".")
+
+    def _consumed_scale(p):
+        # A checkpoint `mem_scale` leaf with no template counterpart is
+        # consumed by dequantizing its sibling int8 memory leaf into a
+        # float template leaf — not an unknown/renamed field.
+        if _leaf_name(p) != "mem_scale":
+            return False
+        prefix, _, last = p.rpartition("/")
+        mp = ((prefix + "/" if prefix else "")
+              + ("." if last.startswith(".") else "") + "memory")
+        me = ck_by_path.get(mp)
+        return (me is not None and me["dtype"] == "int8"
+                and mp in set(t_paths))
+
     if fill_missing:
-        by_path = {e["path"]: e for e in manifest["leaves"]}
-        unknown = set(by_path) - set(t_paths)
+        unknown = {p for p in set(ck_by_path) - set(t_paths)
+                   if not _consumed_scale(p)}
         if unknown:
             raise ValueError(
                 f"checkpoint leaves {sorted(unknown)} have no counterpart "
                 f"in the template — not a pure leaf-subset checkpoint")
-        entries = [by_path.get(p) for p in t_paths]
+        entries = [ck_by_path.get(p) for p in t_paths]
+    elif len(t_leaves) != len(manifest["leaves"]):
+        # The only structural drift allowed outside fill_missing is the
+        # `mem_scale` leaf appearing (float→int8 template) or disappearing
+        # (int8→float template) next to a migrating memory leaf.
+        extra_t = [p for p in t_paths if p not in ck_by_path]
+        extra_c = [p for p in ck_by_path if p not in set(t_paths)]
+        if not all(_leaf_name(p) == "mem_scale" for p in extra_t + extra_c):
+            raise AssertionError("checkpoint/template structure mismatch")
+        entries = [ck_by_path.get(p) for p in t_paths]
     else:
-        assert len(t_leaves) == len(manifest["leaves"]), \
-            "checkpoint/template structure mismatch"
         entries = manifest["leaves"]
     leaves = []
     s_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
@@ -283,8 +339,34 @@ def restore_checkpoint(directory: str, template, step: int = None,
     # re-laid-out *together* after the loop (ring order lives in the
     # cursor). parent path -> {leaf name: (slot, arr, tmpl, sharding)}.
     ann_pending: dict = {}
-    for entry, tmpl, sh in zip(entries, t_leaves, s_leaves):
-        if entry is None:            # fill_missing: keep the template value
+    # float→int8 mem-dtype migration: scales produced by quantizing a float
+    # memory leaf fill the template's `mem_scale` leaf. Flatten order is
+    # container-dependent (dicts sort keys, so "mem_scale" can precede
+    # "memory"), so the consumer slot is deferred and patched after the
+    # loop, like the ANN pairs. template scale path -> host scale array /
+    # -> (leaf slot, sharding).
+    scale_pending: dict = {}
+    scale_slots: dict = {}
+    t_by_path = dict(zip(t_paths, t_leaves))
+    for entry, t_path, tmpl, sh in zip(entries, t_paths, t_leaves, s_leaves):
+        if entry is None:
+            if _leaf_name(t_path) == "mem_scale":
+                prefix, _, last = t_path.rpartition("/")
+                mp = ((prefix + "/" if prefix else "")
+                      + ("." if last.startswith(".") else "") + "memory")
+                me, mt = ck_by_path.get(mp), t_by_path.get(mp)
+                if (me is not None and mt is not None
+                        and np.dtype(getattr(mt, "dtype", None)) == np.int8
+                        and np.issubdtype(np.dtype(me["dtype"]),
+                                          np.floating)):
+                    scale_slots[t_path] = (len(leaves), sh)
+                    leaves.append(None)          # patched after the loop
+                    continue
+            if not fill_missing:
+                raise ValueError(
+                    f"template leaf {t_path!r} is absent from the "
+                    f"checkpoint and is not a mem-dtype migration target")
+            # fill_missing: keep the template value
             leaves.append(jax.device_put(tmpl, sh) if sh is not None
                           else jax.numpy.asarray(tmpl))
             continue
@@ -347,6 +429,46 @@ def restore_checkpoint(directory: str, template, step: int = None,
                     f"checkpoints with a recorded mem_layout (or a "
                     f"declared expect_num_slots), and only to "
                     f"{sorted(_MIGRATABLE_LEAVES | _ANN_LEAVES)} leaves")
+        # ---- mem-dtype migration (float ↔ int8 memory rows) ----
+        # Runs after the shape shims, so a cross-mesh re-layout and a
+        # storage-dtype change compose in one restore. Dtype-driven, not
+        # format-gated: the manifest dtypes are unambiguous.
+        tdt = getattr(tmpl, "dtype", None)
+        if tdt is not None and arr.dtype != np.dtype(tdt):
+            leaf_name = _leaf_name(entry["path"])
+            if (leaf_name == "memory" and np.dtype(tdt) == np.int8
+                    and np.issubdtype(arr.dtype, np.floating)):
+                # float checkpoint → int8 template: quantize host-side;
+                # the derived scales fill the template's mem_scale leaf.
+                arr, s = _np_quantize_rows(arr)
+                scale_pending[_scale_path(t_path)] = s
+            elif (leaf_name == "memory" and arr.dtype == np.int8
+                    and np.issubdtype(np.dtype(tdt), np.floating)):
+                # int8 checkpoint → float template: dequantize against the
+                # sibling mem_scale leaf (re-laid-out with its memory leaf
+                # on a cross-mesh restore).
+                sp = _scale_path(entry["path"])
+                se = ck_by_path.get(sp)
+                if se is None:
+                    raise ValueError(
+                        f"checkpoint leaf {entry['path']!r} is int8 but "
+                        f"carries no sibling {sp!r} scale leaf — cannot "
+                        f"dequantize into a float template")
+                scale = np.load(os.path.join(path, se["file"]))
+                if scale.shape != arr.shape[:-1]:
+                    if mem_layout is None:
+                        raise ValueError(
+                            f"checkpoint scale leaf {sp!r} shape "
+                            f"{scale.shape} does not match its memory leaf "
+                            f"{arr.shape} and no mem_layout is recorded")
+                    scale = _relayout_mem_shard(scale, arr.shape[:-1],
+                                                mem_layout, sp)
+                arr = _np_dequantize_rows(arr, scale).astype(tdt)
+            elif (leaf_name == "memory"
+                    and np.issubdtype(arr.dtype, np.floating)
+                    and np.issubdtype(np.dtype(tdt), np.floating)):
+                # float → float storage-dtype change (f32 ↔ bf16).
+                arr = arr.astype(tdt)
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:
@@ -358,6 +480,14 @@ def restore_checkpoint(directory: str, template, step: int = None,
             slot, _, _, sh = group[name]
             leaves[slot] = (jax.device_put(out, sh) if sh is not None
                             else jax.numpy.asarray(out))
+    for sp, (slot, sh) in scale_slots.items():
+        s = scale_pending.pop(sp, None)
+        if s is None:
+            raise ValueError(
+                f"template leaf {sp!r} expected a quantization scale from "
+                f"its sibling memory leaf, but none was produced")
+        leaves[slot] = (jax.device_put(s, sh) if sh is not None
+                        else jax.numpy.asarray(s))
     return jax.tree.unflatten(treedef, leaves), step
 
 

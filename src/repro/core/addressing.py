@@ -47,9 +47,29 @@ def topk_from_sims(sims: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     return vals, idx
 
 
+def _selection_view(m: jax.Array) -> jax.Array:
+    """f32 view of the memory for *selection* sweeps (top-K, re-rank).
+
+    Cosine ranking is invariant to a positive per-row scaling, so int8
+    rows rank identically with or without their dequantization scales —
+    but the raw int8 values must still be upcast: `_safe_norm` squares
+    them, and 127² overflows int8 arithmetic. f32/bf16 buffers pass
+    through unchanged (their sweeps upcast where they always did)."""
+    if jnp.issubdtype(m.dtype, jnp.integer):
+        return m.astype(jnp.float32)
+    return m
+
+
+def gather_scales(mem_scale: jax.Array, idx: jax.Array) -> jax.Array:
+    """mem_scale: (B, N), idx: (B, ...) -> (B, ...) — the per-row scale
+    gather paired with `gather_rows`, sharing its mesh route (a width-1
+    row gather) so sharded scale leaves stay collective-correct."""
+    return gather_rows(mem_scale[..., None], idx)[..., 0]
+
+
 def sparse_read_exact(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
                       sims_fn=cosine_sim, *, backend=None,
-                      valid_n=None) -> SparseRead:
+                      valid_n=None, mem_scale=None) -> SparseRead:
     """'Linear index' SAM read: exact K nearest by similarity, softmax over the
     kept K entries only (§3.1 — remaining entries set to zero).
 
@@ -66,12 +86,25 @@ def sparse_read_exact(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
     from repro.distributed import mem_shard
     if sims_fn is cosine_sim:
         if mem_shard.route_ctx(m.shape[1]) is not None:
+            # Selection sweeps the *dequantized* f32 view. Cosine ranking
+            # is scale-invariant in exact arithmetic, but the fused
+            # single-device kernels rank on in-VMEM dequantized rows — a
+            # raw-int sweep here would break near-ties differently in fp
+            # and desync the mesh from the single-device reference
+            # (tests/test_mesh_parity.py, int8 kinds). The dequant is an
+            # elementwise broadcast, so the sharded sweep stays
+            # collective-free.
+            view = _selection_view(m)
+            if mem_scale is not None:
+                from repro.core.quant import dequantize_rows
+                view = dequantize_rows(m, mem_scale)
             _, idx = ops.topk_read(jax.lax.stop_gradient(q),
-                                   jax.lax.stop_gradient(m), k,
-                                   backend=backend, valid_n=valid_n)
-            return finish_candidate_read(q, m, beta, idx)
+                                   jax.lax.stop_gradient(view),
+                                   k, backend=backend, valid_n=valid_n)
+            return finish_candidate_read(q, m, beta, idx,
+                                         mem_scale=mem_scale)
         read, w, idx = ops.fused_read(q, m, beta, k, backend=backend,
-                                      valid_n=valid_n)
+                                      valid_n=valid_n, mem_scale=mem_scale)
         return SparseRead(indices=idx, weights=w, words=read)
     else:
         if mem_shard.route_ctx(m.shape[1]) is not None:
@@ -83,11 +116,17 @@ def sparse_read_exact(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
                 "sparse_read_exact with a custom sims_fn is not supported "
                 "on a slot-sharded memory buffer (mem_shard.memory_mesh)")
         mv = m if valid_n is None else m[:, :valid_n]
+        if mem_scale is not None:
+            # A custom similarity need not be scale-invariant: sweep the
+            # dequantized view (the oracle-path f32 copy, selection only).
+            from repro.core.quant import dequantize_rows
+            sv = mem_scale if valid_n is None else mem_scale[:, :valid_n]
+            mv = dequantize_rows(mv, sv)
         sims = sims_fn(jax.lax.stop_gradient(q), jax.lax.stop_gradient(mv))
         _, idx = topk_from_sims(sims, k)                    # (B, H, K), no grads
     # Exact-mode selections are always valid; the shared tail keeps the
     # forward numerically identical to the replay path (core/cell.py).
-    return finish_candidate_read(q, m, beta, idx)
+    return finish_candidate_read(q, m, beta, idx, mem_scale=mem_scale)
 
 
 def sparse_read_candidates(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
@@ -108,7 +147,8 @@ def sparse_read_candidates(q: jax.Array, m: jax.Array, beta: jax.Array, k: int,
 
 def select_and_read_candidates(q: jax.Array, m: jax.Array, beta: jax.Array,
                                k: int, cand_idx: jax.Array, *,
-                               backend=None) -> tuple[SparseRead, jax.Array]:
+                               backend=None,
+                               mem_scale=None) -> tuple[SparseRead, jax.Array]:
     """The ANN read as one fused kernel dispatch: dedup the raw candidate
     set, then re-rank + top-K + softmax + weighted gather in a single
     `ops.fused_read` pass (grid independent of N). Returns the read plus
@@ -118,16 +158,17 @@ def select_and_read_candidates(q: jax.Array, m: jax.Array, beta: jax.Array,
     composed select/finish pair (the gather is a shard_map collective)."""
     from repro.distributed import mem_shard
     if mem_shard.route_ctx(m.shape[1]) is not None:
-        sel = select_candidates(q, m, k, cand_idx)
-        return finish_candidate_read(q, m, beta, sel), sel
+        sel = select_candidates(q, m, k, cand_idx, mem_scale=mem_scale)
+        return finish_candidate_read(q, m, beta, sel,
+                                     mem_scale=mem_scale), sel
     read, w, sel = ops.fused_read(q, m, beta, k, cand_idx=_dedup(cand_idx),
-                                  backend=backend)
+                                  backend=backend, mem_scale=mem_scale)
     return SparseRead(indices=jnp.maximum(sel, 0), weights=w,
                       words=read), sel
 
 
 def select_candidates(q: jax.Array, m: jax.Array, k: int,
-                      cand_idx: jax.Array) -> jax.Array:
+                      cand_idx: jax.Array, *, mem_scale=None) -> jax.Array:
     """Candidate top-K selection (non-differentiable half of the ANN read):
     dedup, re-rank under stop_gradient, keep the K best. Returns *signed*
     indices (B, H, K): -1 where fewer than K valid candidates existed —
@@ -135,6 +176,14 @@ def select_candidates(q: jax.Array, m: jax.Array, k: int,
     reconstruct the same validity mask."""
     cand_idx = _dedup(cand_idx)
     cand = gather_rows(m, cand_idx)                         # (B, H, C, W)
+    if jnp.issubdtype(cand.dtype, jnp.integer):
+        cand = cand.astype(jnp.float32)
+        if mem_scale is not None:
+            # Re-rank on the dequantized candidates: scale-invariant in
+            # exact arithmetic, but the fused candidate kernel ranks on
+            # in-VMEM dequantized rows — matching its fp tie-breaking
+            # keeps the composed (mesh) route bit-consistent with it.
+            cand = cand * gather_scales(mem_scale, cand_idx)[..., None]
     sims = _rerank(jax.lax.stop_gradient(q), jax.lax.stop_gradient(cand))
     sims = jnp.where(cand_idx < 0, _NEG, sims)
     _, pos = topk_from_sims(sims, k)                        # positions in C
@@ -142,7 +191,7 @@ def select_candidates(q: jax.Array, m: jax.Array, k: int,
 
 
 def finish_candidate_read(q: jax.Array, m: jax.Array, beta: jax.Array,
-                          idx: jax.Array) -> SparseRead:
+                          idx: jax.Array, *, mem_scale=None) -> SparseRead:
     """Differentiable tail of every sparse read: gather the selected rows,
     re-rank (sparse gradients — only these K rows are touched), softmax.
 
@@ -157,8 +206,12 @@ def finish_candidate_read(q: jax.Array, m: jax.Array, beta: jax.Array,
     idx = jnp.maximum(idx, 0)
     # Read at f32 whatever the storage dtype: bf16 memory rows
     # (MemoryConfig.mem_dtype) upcast before the re-rank, matching the
-    # fused kernels and `ref.sparse_read_tail`.
+    # fused kernels and `ref.sparse_read_tail`; int8 rows additionally
+    # dequantize against their gathered per-row scales (K scale loads —
+    # the oracle-side twin of the fused kernels' in-VMEM dequant).
     words = gather_rows(m, idx).astype(jnp.float32)         # (B, H, K, W)
+    if mem_scale is not None:
+        words = words * gather_scales(mem_scale, idx)[..., None]
     sel = _rerank(q, words) * beta[..., None]
     sel = jnp.where(valid, sel, _NEG)
     w = jax.nn.softmax(sel, axis=-1)
@@ -186,17 +239,22 @@ def gather_rows(m: jax.Array, idx: jax.Array) -> jax.Array:
 
 
 def scatter_add_rows(m: jax.Array, idx: jax.Array, rows: jax.Array,
-                     *, backend=None, scratch_row=None) -> jax.Array:
+                     *, backend=None, scratch_row=None, mem_scale=None):
     """m[b, idx[b, j]] += rows[b, j]. idx: (B, J), rows: (B, J, W).
-    ``scratch_row=N`` parks duplicates on row N of a scratch-row buffer."""
+    ``scratch_row=N`` parks duplicates on row N of a scratch-row buffer.
+    With ``mem_scale`` (int8 storage) the touched rows accumulate in f32
+    and re-quantize once; returns (m', mem_scale')."""
     return ops.scatter_rows(m, idx, rows, mode="add", backend=backend,
-                            scratch_row=scratch_row)
+                            scratch_row=scratch_row, mem_scale=mem_scale)
 
 
 def scatter_set_rows(m: jax.Array, idx: jax.Array, rows: jax.Array,
-                     *, backend=None) -> jax.Array:
-    """m[b, idx[b, j]] = rows[b, j] (last duplicate wins)."""
-    return ops.scatter_rows(m, idx, rows, mode="set", backend=backend)
+                     *, backend=None, mem_scale=None, rows_scale=None):
+    """m[b, idx[b, j]] = rows[b, j] (last duplicate wins). With
+    ``mem_scale`` (int8 storage) returns (m', mem_scale'); int8 ``rows``
+    plus ``rows_scale`` restore the recorded bits exactly (rollback)."""
+    return ops.scatter_rows(m, idx, rows, mode="set", backend=backend,
+                            mem_scale=mem_scale, rows_scale=rows_scale)
 
 
 def _rerank(q: jax.Array, words: jax.Array, eps: float = 1e-6) -> jax.Array:
@@ -248,16 +306,20 @@ def least_recently_accessed(last_access: jax.Array, n: int,
 def sparse_write_update(memory: jax.Array, last_access: jax.Array,
                         write_idx: jax.Array, write_w: jax.Array,
                         a: jax.Array, lra_idx: jax.Array, step: jax.Array,
-                        delta: float, *, backend=None, scratch_row=None):
+                        delta: float, *, backend=None, scratch_row=None,
+                        mem_scale=None):
     """Fused SAM write side (eqs. 3/5/6 + the U^(2) update for the written
     rows): erase the LRA rows, scatter-add w^W a^T, stamp `step` into
     `last_access` wherever the write weight exceeds δ. One kernel dispatch
     on the Pallas backends; with ``scratch_row=N`` (the persistent
     scratch-row state) the dispatch involves no pad/slice of the memory.
-    Returns (memory', last_access')."""
+    Returns (memory', last_access'); with ``mem_scale`` (int8 storage)
+    the touched rows re-quantize in the same pass and the result is
+    (memory', last_access', mem_scale')."""
     return ops.sparse_write_update(memory, last_access, write_idx, write_w,
                                    a, lra_idx, step, delta=delta,
-                                   backend=backend, scratch_row=scratch_row)
+                                   backend=backend, scratch_row=scratch_row,
+                                   mem_scale=mem_scale)
 
 
 def dam_usage_update(usage: jax.Array, read_w: jax.Array, write_w: jax.Array,

@@ -103,20 +103,28 @@ def sam_replay_step(params, cfg: SAMConfig, s: SAMState, x: jax.Array,
     w_lra = (alpha * (1.0 - gamma))[..., None]                      # (B,H,1)
     ww = jnp.concatenate([w_read, w_lra], axis=-1).reshape(B, -1)
     lra_idx = deltas.write_idx.reshape(B, H, K + 1)[..., -1]
-    memory = apply_write(s.memory, deltas.write_idx, ww, a, lra_idx, cfg,
-                         backend=cfg.memory.backend)
+    mem_scale = s.mem_scale
+    if mem_scale is not None:
+        memory, mem_scale = apply_write(s.memory, deltas.write_idx, ww, a,
+                                        lra_idx, cfg,
+                                        backend=cfg.memory.backend,
+                                        mem_scale=mem_scale)
+    else:
+        memory = apply_write(s.memory, deltas.write_idx, ww, a, lra_idx,
+                             cfg, backend=cfg.memory.backend)
 
     # Read at the recorded indices — through the same tail as the forward
     # (`finish_candidate_read`), so the recorded *signed* indices
     # reconstruct the forward's validity mask: an LSH-mode selection with
     # no valid candidate replays with exactly zero weight and zero
     # gradient, bit-identical to the forward pass.
-    read = addr.finish_candidate_read(q, memory, beta, deltas.read_idx)
+    read = addr.finish_candidate_read(q, memory, beta, deltas.read_idx,
+                                      mem_scale=mem_scale)
     r = read.words
     y = linear(params["out"], jnp.concatenate([h, r.reshape(B, -1)], axis=-1))
     new_state = SAMState(
         memory=memory, last_access=s.last_access, read=read,
-        ctrl=ctrl, step=s.step + 1, ann=s.ann)
+        ctrl=ctrl, step=s.step + 1, ann=s.ann, mem_scale=mem_scale)
     return new_state, y
 
 
@@ -147,12 +155,21 @@ class SAMCell:
         read, ctrl = prev_small
         # Roll the memory back: restore the touched rows (§3.4). write_idx
         # only ever names logical rows, so the scratch row stays untouched.
-        memory = addr.scatter_set_rows(state.memory, deltas.write_idx,
-                                       deltas.old_rows,
-                                       backend=self.cfg.memory.backend)
+        # Int8 storage: old_rows holds the raw int8 bits and old_scale the
+        # pre-write scales, so the 'set' restore is bit-exact.
+        mem_scale = state.mem_scale
+        if mem_scale is not None:
+            memory, mem_scale = addr.scatter_set_rows(
+                state.memory, deltas.write_idx, deltas.old_rows,
+                backend=self.cfg.memory.backend, mem_scale=mem_scale,
+                rows_scale=deltas.old_scale)
+        else:
+            memory = addr.scatter_set_rows(state.memory, deltas.write_idx,
+                                           deltas.old_rows,
+                                           backend=self.cfg.memory.backend)
         return SAMState(memory=memory, last_access=state.last_access,
                         read=read, ctrl=ctrl, step=state.step - 1,
-                        ann=state.ann)
+                        ann=state.ann, mem_scale=mem_scale)
 
     def replay_step(self, params, state, x, deltas: StepDeltas):
         return sam_replay_step(params, self.cfg, state, x, deltas)

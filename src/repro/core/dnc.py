@@ -161,8 +161,15 @@ def init_state(batch: int, cfg: DNCConfig, *,
         # memory and usage table are built slot-sharded (one scratch row per
         # shard); the O(N·K_L) link matrices N_t/P_t stay replicated — slots
         # are the O(N·W) scaling axis, the links ride along whole.
+        if mem.mem_dtype == "int8":
+            raise ValueError(
+                "SDNC does not support mem_dtype='int8': the link-matrix "
+                "write scheme re-reads rows it just wrote within a step, "
+                "which would compound requantization error. Use 'bfloat16' "
+                "for reduced-precision SDNC memory, or SAM for int8.")
         memory, usage = mem_shard.init_layout(
-            N, mem_shards, init_scratch_memory(batch, N, W),
+            N, mem_shards,
+            init_scratch_memory(batch, N, W, dtype=jnp.dtype(mem.mem_dtype)),
             init_scratch_last_access(batch, N))
         return DNCState(
             memory=memory,

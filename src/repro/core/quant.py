@@ -1,0 +1,61 @@
+"""Shared per-row symmetric int8 quantization.
+
+The single home of the scale/clip/round logic for every int8 surface in
+the repo — the int8 memory-row storage (``MemoryConfig.mem_dtype =
+"int8"``: rows quantized along the word dimension, one f32 scale per
+slot) and the per-block gradient compression for cross-pod all-reduce
+(`distributed/compression.py`: gradients reshaped to (n_blocks, BLOCK)
+rows). Keeping both on one helper pins the scale dtype (``SCALE_DTYPE``,
+always float32 — a bf16 scale would quantize the *scales* and break the
+exact-zero invariant below) and keeps the two error models identical.
+
+Scheme: symmetric, per-row (last axis). ``scale = max|row| / 127``
+**exactly** — no epsilon. An all-zero row therefore quantizes to
+``(q=0, scale=0.0)`` and dequantizes back to exactly ``0.0`` (the
+exact-zero invariant: a cold memory slot reads back bit-exact zero with
+zero gradient, not a tiny epsilon-scaled residue). Nonzero rows divide
+by the scale (guarded where the scale is zero), round to nearest, and
+clip to [-127, 127]; the row-wise absolute error is bounded by
+``scale / 2 = max|row| / 254``.
+
+Gradients: ``quantize_rows``'s integer output carries no tangent (the
+round is non-differentiable by construction); the *scale* output is
+differentiable through the row-max (JAX's max subgradient), which is the
+magnitude channel the int8 memory path trains through (docs/
+memory-model.md, "storage dtype ladder"). ``dequantize_rows`` is linear
+in the scale, so gathered-row reads get exact scale gradients from plain
+autodiff.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# The one place the scale dtype is pinned. Per-row scales are always f32:
+# they carry the full dynamic range of the row and the magnitude-channel
+# gradients; storing them narrower would compound two quantizations.
+SCALE_DTYPE = jnp.float32
+QMAX = 127.0
+
+
+def quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization along the last axis.
+
+    x: (..., W) float -> (q (..., W) int8, scale (...,) f32) with
+    ``scale = max|row| / 127`` exactly (zero rows -> scale 0.0, q 0) and
+    ``q = clip(round(row / scale), -127, 127)``. The dequantized value
+    ``q * scale`` approximates ``row`` within ``scale / 2`` per element.
+    """
+    xf = x.astype(jnp.float32)
+    scale = (jnp.max(jnp.abs(xf), axis=-1) / QMAX).astype(SCALE_DTYPE)
+    # Zero rows: divide by 1 instead of 0 — q is exactly 0 either way.
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe[..., None]), -QMAX, QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """q: (..., W) int8, scale: (...,) -> (..., W) f32 rows ``q * scale``.
+    Linear in the scale (exact scale gradients under autodiff); a
+    scale-0 row dequantizes to exactly 0.0."""
+    return q.astype(jnp.float32) * scale.astype(SCALE_DTYPE)[..., None]

@@ -23,7 +23,8 @@ from repro.core import ann as ann_lib
 from repro.core.controller import linear, linear_init, lstm_init, lstm_step, lstm_zero_state
 from repro.core.types import (ANNState, ControllerConfig, MemoryConfig,
                               SAMState, SparseRead, StepDeltas,
-                              init_scratch_last_access, init_scratch_memory)
+                              init_scratch_last_access, init_scratch_memory,
+                              init_scratch_mem_scale)
 from repro.distributed import mem_shard
 
 
@@ -70,10 +71,22 @@ def init_state(batch: int, cfg: SAMConfig, params=None, *,
     # per shard, N + shards rows total (docs/sharding.md). The LSH index is
     # born ownership-partitioned to match (`ann_partitions` overrides —
     # e.g. a single-device run reproducing a mesh run's index semantics).
-    memory, last_access = mem_shard.init_layout(
-        N, mem_shards,
-        init_scratch_memory(batch, N, W, dtype=jnp.dtype(mem.mem_dtype)),
-        init_scratch_last_access(batch, N))
+    mem_scale = None
+    if mem.mem_dtype == "int8":
+        # Int8 storage: rows are symmetric per-row quantized; the f32
+        # scale leaf shards/re-lays-out with the slots it scales (it is a
+        # SLOT_LEAVES member). All-zero init -> scale 0.0 everywhere (the
+        # exact-zero invariant: cold slots dequantize to exactly 0.0).
+        memory, last_access, mem_scale = mem_shard.init_layout(
+            N, mem_shards,
+            init_scratch_memory(batch, N, W, dtype=jnp.int8),
+            init_scratch_last_access(batch, N),
+            init_scratch_mem_scale(batch, N))
+    else:
+        memory, last_access = mem_shard.init_layout(
+            N, mem_shards,
+            init_scratch_memory(batch, N, W, dtype=jnp.dtype(mem.mem_dtype)),
+            init_scratch_last_access(batch, N))
     read = SparseRead(
         indices=jnp.zeros((batch, H, K), jnp.int32),
         weights=jnp.zeros((batch, H, K)),
@@ -84,7 +97,8 @@ def init_state(batch: int, cfg: SAMConfig, params=None, *,
         ann_state = ann_lib.ann_init(batch, mem, partitions=ann_partitions)
     return SAMState(memory=memory, last_access=last_access, read=read,
                     ctrl=lstm_zero_state(batch, ctl.hidden_size),
-                    step=jnp.zeros((), jnp.int32), ann=ann_state)
+                    step=jnp.zeros((), jnp.int32), ann=ann_state,
+                    mem_scale=mem_scale)
 
 
 def _interface(params, cfg: SAMConfig, h: jax.Array):
@@ -113,7 +127,7 @@ def write_plan(cfg: SAMConfig, prev_read: SparseRead, lra_idx: jax.Array,
 
 def apply_write(memory: jax.Array, write_idx_flat: jax.Array,
                 write_w: jax.Array, a: jax.Array, lra_idx: jax.Array,
-                cfg: SAMConfig, *, backend=None):
+                cfg: SAMConfig, *, backend=None, mem_scale=None):
     """Erase the LRA rows (R_t = I^U 1^T) then scatter-add the outer product
     A_t = w^W a^T restricted to the K+1 touched rows per head.
 
@@ -121,11 +135,26 @@ def apply_write(memory: jax.Array, write_idx_flat: jax.Array,
     reconstructs usage-free gradients); `sam_step` itself uses
     `addr.sparse_write_update` to also fold in the usage update. Accepts the
     persistent scratch-row buffer (detected by shape) and then parks scatter
-    duplicates on the in-state row N — no transient pad."""
+    duplicates on the in-state row N — no transient pad.
+
+    Int8 storage (``mem_scale`` given): returns (memory', mem_scale'). The
+    replay must round exactly once per touched row — like the forward's
+    fused quantized write — so instead of the erase/add scatter pair (two
+    re-quantizations) it runs the *same* fused quantized write the forward
+    ran (same backend, same accumulate-then-requantize pass) against a
+    throwaway usage table, keeping the memory effect identical to the
+    forward step while staying usage-free."""
     B, H, _ = a.shape
     Kp1 = cfg.write_rows_per_head
     N = cfg.memory.num_slots
     scratch = mem_shard.memory_layout(N, memory.shape[1]).scratch_row
+    if mem_scale is not None:
+        la_dummy = jnp.zeros(memory.shape[:2], jnp.int32)
+        memory, _, mem_scale = addr.sparse_write_update(
+            memory, la_dummy, write_idx_flat, write_w, a, lra_idx,
+            jnp.zeros((), jnp.int32), cfg.memory.delta, backend=backend,
+            scratch_row=scratch, mem_scale=mem_scale)
+        return memory, mem_scale
     # Erase: zero LRA rows.
     zeros = jnp.zeros((B, H, memory.shape[-1]), memory.dtype)
     memory = addr.scatter_set_rows(memory, lra_idx, zeros, backend=backend)
@@ -164,14 +193,25 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
                                            valid_n=valid_n)
     widx_flat, ww_flat, widx, ww = write_plan(cfg, state.read, lra_idx,
                                               alpha, gamma)
-    old_rows = None
+    old_rows = old_scale = None
     if collect_deltas:
+        # Raw storage bits (int8 rows record int8 values) plus, under int8
+        # storage, the pre-write scales — so rollback restores bit-exactly.
         old_rows = addr.gather_rows(state.memory, widx_flat)
-    # Fused: LRA erase + w^W a^T scatter-add + write-side usage stamp.
-    memory, la = addr.sparse_write_update(state.memory, state.last_access,
-                                          widx_flat, ww_flat, a, lra_idx,
-                                          step, mem.delta, backend=be,
-                                          scratch_row=scratch)
+        if state.mem_scale is not None:
+            old_scale = addr.gather_scales(state.mem_scale, widx_flat)
+    # Fused: LRA erase + w^W a^T scatter-add + write-side usage stamp
+    # (int8 storage: + per-row re-quantization, in the same pass).
+    mem_scale = state.mem_scale
+    if mem_scale is not None:
+        memory, la, mem_scale = addr.sparse_write_update(
+            state.memory, state.last_access, widx_flat, ww_flat, a,
+            lra_idx, step, mem.delta, backend=be, scratch_row=scratch,
+            mem_scale=mem_scale)
+    else:
+        memory, la = addr.sparse_write_update(
+            state.memory, state.last_access, widx_flat, ww_flat, a,
+            lra_idx, step, mem.delta, backend=be, scratch_row=scratch)
 
     # ---- read (content-based, sparse) ----
     if mem.ann == "lsh":
@@ -183,8 +223,10 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
             # collective-free (each shard hashes and stores only the rows
             # it owns). docs/sharding.md.
             read_sel = mem_shard.lsh_candidate_topk_sharded(
-                lay.ctx, planes, state.ann, q, memory, widx_flat, K, mem)
-            read = addr.finish_candidate_read(q, memory, beta, read_sel)
+                lay.ctx, planes, state.ann, q, memory, widx_flat, K, mem,
+                mem_scale=mem_scale)
+            read = addr.finish_candidate_read(q, memory, beta, read_sel,
+                                              mem_scale=mem_scale)
             ann_state = mem_shard.ann_insert_sharded(
                 lay.ctx, planes, state.ann, widx_flat, memory, mem)
         else:
@@ -196,14 +238,18 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
             cand = ann_lib.ann_candidates(planes, state.ann, q, widx_flat,
                                           mem)
             read, read_sel = addr.select_and_read_candidates(
-                q, memory, beta, K, cand, backend=be)
-            ann_state = ann_lib.ann_insert(
-                planes, state.ann, widx_flat,
-                jax.lax.stop_gradient(addr.gather_rows(memory, widx_flat)),
-                mem)
+                q, memory, beta, K, cand, backend=be, mem_scale=mem_scale)
+            ins_rows = jax.lax.stop_gradient(
+                addr.gather_rows(memory, widx_flat))
+            if jnp.issubdtype(ins_rows.dtype, jnp.integer):
+                # int8 storage: hash raw rows upcast to f32 — projection
+                # signs are invariant to the positive per-row scale.
+                ins_rows = ins_rows.astype(jnp.float32)
+            ann_state = ann_lib.ann_insert(planes, state.ann, widx_flat,
+                                           ins_rows, mem)
     else:
         read = addr.sparse_read_exact(q, memory, beta, K, backend=be,
-                                      valid_n=valid_n)
+                                      valid_n=valid_n, mem_scale=mem_scale)
         read_sel = read.indices
         ann_state = state.ann
 
@@ -214,13 +260,14 @@ def sam_step(params, cfg: SAMConfig, state: SAMState, x: jax.Array,
     y = linear(params["out"], jnp.concatenate([h, read.words.reshape(B, -1)],
                                               axis=-1))
     new_state = SAMState(memory=memory, last_access=la, read=read, ctrl=ctrl,
-                         step=step, ann=ann_state)
+                         step=step, ann=ann_state, mem_scale=mem_scale)
     if collect_deltas:
         # read_idx is recorded *signed* (-1 = no valid candidate, LSH mode)
         # so the rollback replay reconstructs the same validity mask.
         return new_state, y, StepDeltas(write_idx=widx_flat,
                                         old_rows=old_rows,
-                                        read_idx=read_sel)
+                                        read_idx=read_sel,
+                                        old_scale=old_scale)
     return new_state, y
 
 

@@ -38,7 +38,10 @@ LA_SCRATCH = 2 ** 31 - 1
 # mem_shard.py) and the checkpoint migration/re-layout shims
 # (checkpoint/ckpt.py). A new slot-sharded state field must be added HERE
 # so the live transforms and the checkpoint path cannot drift apart.
-SLOT_LEAVES = frozenset({"memory", "last_access", "usage"})
+# ``mem_scale`` is the per-row f32 dequantization scale carried alongside
+# int8 memory rows (mem_dtype="int8"): it shards, re-lays-out, and
+# checkpoints with the slots it scales.
+SLOT_LEAVES = frozenset({"memory", "last_access", "usage", "mem_scale"})
 # Field names of the ANN index leaves (ANNState). Like SLOT_LEAVES, the
 # single source shared by the mem-shard sharding specs (the LSH bucket
 # tables shard over their partition dimension) and the checkpoint
@@ -58,10 +61,23 @@ def init_scratch_memory(batch: int, num_slots: int, word_size: int,
 
     ``dtype`` is the *storage* dtype of the rows (``MemoryConfig.mem_dtype``
     / ``MemoryLayerConfig.mem_dtype``): bfloat16 halves the dominant state
-    buffer; every read path upcasts gathered rows to float32 before the
-    similarity/softmax math, so compute precision is unchanged."""
+    buffer, int8 quarters it (rows then carry a per-row f32 scale leaf —
+    `init_scratch_mem_scale`); every read path upcasts/dequantizes gathered
+    rows to float32 before the similarity/softmax math, so compute
+    precision is unchanged."""
     return jnp.zeros((batch, num_slots + SCRATCH_ROWS, word_size),
                      dtype=dtype)
+
+
+def init_scratch_mem_scale(batch: int, num_slots: int) -> jax.Array:
+    """(B, N+1) f32 per-row dequantization scales for int8 memory storage
+    (``mem_dtype="int8"``), in the scratch-row layout. All-zero rows carry
+    scale 0.0 — the exact-zero invariant (`core/quant.py`): a cold slot
+    dequantizes to exactly 0.0 with zero gradient. The scratch entry is
+    pinned to 0.0 too, so the (never-read) scratch row dequantizes to
+    zeros no matter what the write kernels park there."""
+    from repro.core.quant import SCALE_DTYPE
+    return jnp.zeros((batch, num_slots + SCRATCH_ROWS), SCALE_DTYPE)
 
 
 def init_scratch_last_access(batch: int, num_slots: int) -> jax.Array:
@@ -92,10 +108,15 @@ class MemoryConfig:
     # custom name (repro.kernels.registry). None -> $REPRO_KERNEL_BACKEND
     # -> 'ref'. Trace-time static; threaded through every memory op.
     backend: Optional[str] = None
-    # Storage dtype of the memory rows: 'float32' | 'bfloat16'. Reads
-    # upcast gathered rows to float32 before the similarity/softmax math,
-    # so bfloat16 halves the (B, N+1, W) buffer at unchanged compute
-    # precision (writes round once per slot update).
+    # Storage dtype of the memory rows: 'float32' | 'bfloat16' | 'int8'.
+    # Reads upcast gathered rows to float32 before the similarity/softmax
+    # math, so bfloat16 halves the (B, N+1, W) buffer at unchanged compute
+    # precision (writes round once per slot update). 'int8' quarters it:
+    # rows store symmetric per-row quantized values with an f32 scale per
+    # slot (`SAMState.mem_scale`), reads dequantize inside the fused
+    # kernels, writes re-quantize the touched rows in the same pass, and
+    # gradients follow the straight-through scheme in docs/memory-model.md
+    # ("storage dtype ladder").
     mem_dtype: str = "float32"
     lsh_tables: int = 4
     lsh_bits: int = 8              # buckets per table = 2**bits
@@ -161,6 +182,10 @@ class SAMState(NamedTuple):
     ctrl: LSTMState
     step: jax.Array          # () int32
     ann: Optional[ANNState]  # None in 'exact' mode
+    # Per-row f32 dequantization scales, (B, N+1) — only with int8 memory
+    # storage (mem_dtype="int8"); None otherwise, which keeps the pytree
+    # leaf set (and every existing checkpoint) unchanged for f32/bf16.
+    mem_scale: Optional[jax.Array] = None
 
 
 class DenseState(NamedTuple):
@@ -184,11 +209,17 @@ class StepDeltas(NamedTuple):
     link state as well."""
 
     write_idx: jax.Array     # (B, Hw) int32 rows touched by the write
-    old_rows: jax.Array      # (B, Hw, W) their pre-write contents
+    old_rows: jax.Array      # (B, Hw, W) their pre-write contents (raw
+    #                          storage dtype: int8 rows record int8 bits,
+    #                          so rollback is bit-exact)
     read_idx: jax.Array      # (B, H, K) int32 rows selected by the read,
     #                          *signed*: -1 = no valid candidate (cold LSH
     #                          index) — the replay reconstructs the zero-
     #                          weight validity mask from the sign
+    # Pre-write per-row scales of the touched rows, (B, Hw) f32 — recorded
+    # only under int8 memory storage (None otherwise) so rollback restores
+    # the (row, scale) pair bit-exactly.
+    old_scale: Optional[jax.Array] = None
 
 
 def tree_bytes(tree) -> int:

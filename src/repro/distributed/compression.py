@@ -15,24 +15,30 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import dequantize_rows, quantize_rows
+
 BLOCK = 256
 
 
 def quantize_int8(x: jax.Array):
-    """Per-block symmetric int8 quantization. Returns (q, scales)."""
+    """Per-block symmetric int8 quantization. Returns (q, scales).
+
+    The scale/clip/round logic lives in `core.quant.quantize_rows` (one
+    gradient block = one "row" of length ``BLOCK``) — the same helper the
+    int8 memory-row storage uses, so the error model and the f32 scale
+    dtype are pinned in one place. Scales keep the (n_blocks, 1) keepdims
+    shape this module always returned."""
     flat = x.reshape(-1)
     pad = (-flat.size) % BLOCK
     flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, BLOCK).astype(jnp.float32)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    q, scale = quantize_rows(flat.reshape(-1, BLOCK))
+    return q, scale[:, None]
 
 
 def dequantize_int8(q, scale, shape):
     # math.prod keeps the size a Python int: jnp.prod would produce a
     # tracer under jit, and a traced slice bound is a TypeError.
-    out = (q.astype(jnp.float32) * scale).reshape(-1)
+    out = dequantize_rows(q, scale.reshape(-1)).reshape(-1)
     return out[:math.prod(shape)].reshape(shape)
 
 

@@ -195,7 +195,13 @@ def memory_layout(num_slots: int, buf_rows: int) -> MemLayout:
 # --------------------------------------------------------------------------
 
 def _fill_value(dtype) -> int:
-    return LA_SCRATCH if jnp.issubdtype(jnp.dtype(dtype), jnp.integer) else 0
+    """Scratch-row fill: `LA_SCRATCH` for int32 usage tables, 0 for
+    everything else. Keyed on the itemsize, not bare integer-ness: int8
+    *memory* rows (mem_dtype="int8") are integer leaves too, and
+    LA_SCRATCH does not even fit in them."""
+    dt = jnp.dtype(dtype)
+    return LA_SCRATCH if (jnp.issubdtype(dt, jnp.integer)
+                          and dt.itemsize >= 4) else 0
 
 
 def to_shard_layout(x, num_slots: int, shards: int):
@@ -234,7 +240,8 @@ def np_relayout(arr: np.ndarray, num_slots: int, from_shards: int,
         if s < 1 or N % s:
             raise ValueError(f"invalid shard count {s} for num_slots={N}")
     B, tail = arr.shape[0], arr.shape[2:]
-    fill = LA_SCRATCH if np.issubdtype(arr.dtype, np.integer) else 0
+    fill = LA_SCRATCH if (np.issubdtype(arr.dtype, np.integer)
+                          and arr.dtype.itemsize >= 4) else 0
     blocks = arr.reshape((B, from_shards, N // from_shards + SCRATCH_ROWS)
                          + tail)
     logical = blocks[:, :, :N // from_shards].reshape((B, N) + tail)
@@ -608,19 +615,48 @@ def gather_rows_sharded(ctx: MemShardCtx, mem, idx):
         own, lidx = _own_local(ctx, idx, s)
         b = jnp.arange(mem_l.shape[0])[:, None]
         rows = mem_l[b, lidx]
-        return jax.lax.psum(jnp.where(own[..., None], rows, 0.0), ctx.axis)
+        # zeros_like, not the literal 0.0: int8 rows (mem_dtype="int8")
+        # must mask and psum in their own dtype (exactly one shard owns
+        # each row, so the int sum never overflows).
+        masked = jnp.where(own[..., None], rows, jnp.zeros_like(rows))
+        return jax.lax.psum(masked, ctx.axis)
 
     return _smap(ctx, body, (_mem_spec(ctx), P()), P())(mem, idx)
 
 
 def scatter_rows_sharded(ctx: MemShardCtx, mem, idx, rows, mode: str, *,
-                         backend=None):
+                         backend=None, mem_scale=None, rows_scale=None):
     """Mesh-native `ops.scatter_rows`: no collective at all — each shard
     scatters the (index, row) pairs it owns through the ordinary kernel
     dispatch (scratch_row=local_n); non-owned pairs land on the shard's
     scratch row ('add' with the row masked to zero, so the scratch row and
     its cotangent stay clean; 'set' values are irrelevant there by the
-    scratch contract)."""
+    scratch contract). With ``mem_scale`` (int8 storage) the scale leaf
+    shards with the rows and the result is (mem', mem_scale')."""
+
+    if mem_scale is not None:
+        # rows_scale enters as an explicit (replicated) operand — shard_map
+        # bodies must not close over traced arrays. A None rows_scale rides
+        # along as a zero-width dummy.
+        rs = rows_scale if rows_scale is not None \
+            else jnp.zeros(idx.shape[:1] + (0,), jnp.float32)
+
+        def body_q(mem_l, scale_l, idx, rows, rs):
+            s = jax.lax.axis_index(ctx.axis)
+            own, lidx = _own_local(ctx, idx, s)
+            r = rows
+            if mode == "add":
+                r = jnp.where(own[..., None], r, jnp.zeros_like(r))
+            return _ops.scatter_rows(mem_l, lidx, r, mode=mode,
+                                     backend=backend,
+                                     scratch_row=ctx.local_n,
+                                     mem_scale=scale_l,
+                                     rows_scale=rs if rs.shape[-1] else None)
+
+        return _smap(ctx, body_q,
+                     (_mem_spec(ctx), _vec_spec(ctx), P(), P(), P()),
+                     (_mem_spec(ctx), _vec_spec(ctx)))(
+                         mem, mem_scale, idx, rows, rs)
 
     def body(mem_l, idx, rows):
         s = jax.lax.axis_index(ctx.axis)
@@ -636,13 +672,38 @@ def scatter_rows_sharded(ctx: MemShardCtx, mem, idx, rows, mode: str, *,
 
 def sparse_write_update_sharded(ctx: MemShardCtx, mem, la, write_idx,
                                 write_w, a, lra_idx, step, *, delta: float,
-                                backend=None):
+                                backend=None, mem_scale=None):
     """Mesh-native fused SAM write: writes route to their owning shard by
     masking (weight zeroed elsewhere), the LRA erase routes the same way,
     and each shard runs the ordinary fused kernel on its local block — no
     collective in the forward pass. The usage stamp is shard-local too
     (zero-weight non-owned entries never exceed delta; the scratch entry is
-    pinned at LA_SCRATCH and scatter-max can never lower it)."""
+    pinned at LA_SCRATCH and scatter-max can never lower it). With
+    ``mem_scale`` (int8 storage) the scale leaf shards with the rows —
+    each shard re-quantizes its owned rows locally — and the result is
+    (mem', la', mem_scale'). A zero-weight non-owned contribution leaves
+    the row's accumulated f32 value unchanged, and `core.quant`'s
+    round-trip is the identity on its own output (the max entry always
+    re-quantizes to ±127), so non-owning shards do not drift their copy —
+    they never store one anyway."""
+
+    if mem_scale is not None:
+        def body_q(mem_l, la_l, scale_l, widx, ww, a, lra, step):
+            s = jax.lax.axis_index(ctx.axis)
+            own_w, l_widx = _own_local(ctx, widx, s)
+            l_ww = jnp.where(own_w, ww, 0.0)
+            _, l_lra = _own_local(ctx, lra, s)
+            return _ops.sparse_write_update(
+                mem_l, la_l, l_widx, l_ww, a, l_lra, step, delta=delta,
+                backend=backend, scratch_row=ctx.local_n,
+                mem_scale=scale_l)
+
+        return _smap(ctx, body_q,
+                     (_mem_spec(ctx), _vec_spec(ctx), _vec_spec(ctx),
+                      P(), P(), P(), P(), P()),
+                     (_mem_spec(ctx), _vec_spec(ctx), _vec_spec(ctx)))(
+                         mem, la, mem_scale, write_idx, write_w, a,
+                         lra_idx, step)
 
     def body(mem_l, la_l, widx, ww, a, lra, step):
         s = jax.lax.axis_index(ctx.axis)
@@ -696,6 +757,10 @@ def ann_insert_sharded(ctx: MemShardCtx, planes, state, idx, mem, cfg):
         s = jax.lax.axis_index(ctx.axis)
         own, lidx = _own_local(ctx, idx, s)
         rows = mem_l[jnp.arange(B)[:, None], lidx]            # (B, J, W)
+        if jnp.issubdtype(rows.dtype, jnp.integer):
+            # int8 storage: hash the raw rows upcast to f32 — projection
+            # signs are invariant to the positive per-row dequant scale.
+            rows = rows.astype(jnp.float32)
         ids = ann_lib.lsh_hash(planes, rows, backend=cfg.backend)  # (B,J,T)
         b = jnp.arange(B)[:, None, None]
         t = jnp.arange(T)[None, None, :]
@@ -723,7 +788,7 @@ def ann_insert_sharded(ctx: MemShardCtx, planes, state, idx, mem, cfg):
 
 
 def lsh_candidate_topk_sharded(ctx: MemShardCtx, planes, state, q, mem,
-                               extra_idx, k: int, cfg):
+                               extra_idx, k: int, cfg, mem_scale=None):
     """Mesh-native LSH candidate selection: each shard hashes the
     (replicated) queries, gathers its local sub-rings' candidates plus the
     owned entries of `extra_idx` (the freshly written rows), re-ranks them
@@ -745,7 +810,7 @@ def lsh_candidate_topk_sharded(ctx: MemShardCtx, planes, state, q, mem,
             f"top-{k} LSH read needs K <= per-shard candidates "
             f"{c_local} (= tables*bucket_size/shards + write rows)")
 
-    def body(planes, q, mem_l, buckets_l, widx):
+    def body(planes, q, mem_l, buckets_l, widx, scale_l):
         B, H, _ = q.shape
         s = jax.lax.axis_index(ctx.axis)
         ids = ann_lib.lsh_hash(planes, q, backend=cfg.backend)  # (B, H, T)
@@ -760,6 +825,16 @@ def lsh_candidate_topk_sharded(ctx: MemShardCtx, planes, state, q, mem,
         cand = addr_lib._dedup(cand)
         lidx = jnp.where(cand >= 0, cand - s * ctx.local_n, ctx.local_n)
         rows = mem_l[jnp.arange(B)[:, None, None], lidx]        # (B,H,C_l,W)
+        if jnp.issubdtype(rows.dtype, jnp.integer):
+            rows = rows.astype(jnp.float32)
+            if scale_l.shape[-1]:
+                # Re-rank on *dequantized* rows: scale-invariant in exact
+                # arithmetic, but the fused candidate kernel ranks on
+                # in-VMEM dequantized values — matching its fp
+                # tie-breaking keeps the mesh selection bit-consistent
+                # with the single-device reference.
+                rows = rows * scale_l[jnp.arange(B)[:, None, None],
+                                      lidx][..., None]
         sims = addr_lib._rerank(jax.lax.stop_gradient(q),
                                 jax.lax.stop_gradient(rows))
         sims = jnp.where(cand < 0, addr_lib._NEG, sims)
@@ -771,8 +846,15 @@ def lsh_candidate_topk_sharded(ctx: MemShardCtx, planes, state, q, mem,
         return jnp.take_along_axis(ai, mpos, axis=-1)
 
     bspec, _ = _ann_specs(ctx)
-    return _smap(ctx, body, (P(), P(), _mem_spec(ctx), bspec, P()),
-                 P())(planes, q, mem, state.buckets, extra_idx)
+    if mem_scale is None:
+        # Zero-width dummy keeps the operand list (and specs) static —
+        # the scale branch in `body` folds away on `scale_l.shape[-1]`.
+        mem_scale = jnp.zeros(mem.shape[:1] + (0,), jnp.float32)
+        sspec = P()
+    else:
+        sspec = _vec_spec(ctx)
+    return _smap(ctx, body, (P(), P(), _mem_spec(ctx), bspec, P(), sspec),
+                 P())(planes, q, mem, state.buckets, extra_idx, mem_scale)
 
 
 def ann_build_sharded(ctx: MemShardCtx, planes, memory, cfg, *,

@@ -24,9 +24,12 @@ These kernels collapse the whole read into **one** `pallas_call`:
   through with weight exactly 0, matching
   `addressing.finish_candidate_read`'s validity contract.
 
-Both kernels compute in f32 regardless of the memory dtype (bf16 rows are
-upcast tile-by-tile in VMEM — the scaled-read half of the compressed-
-memory story), tie-break identically to `jax.lax.top_k` (value descending,
+Both kernels compute in f32 regardless of the memory dtype: bf16 rows are
+upcast tile-by-tile in VMEM, and int8 rows (``mem_scale=`` given) are
+dequantized in VMEM against their per-row f32 scale — the scaled-read
+half of the compressed-memory story: the HBM stream is the quantized
+rows plus one scalar per row (~4x less traffic than f32 at W=32). They
+tie-break identically to `jax.lax.top_k` (value descending,
 then lowest index / candidate position), and return (read, weights,
 signed indices). Selection is non-differentiable by construction;
 `kernels/ops.py` wraps both in a residual-light `jax.custom_vjp` whose
@@ -79,9 +82,13 @@ def _softmax_tail(vals, valid, beta):
 # Exact read: one sequential sweep, running top-K + rows in scratch
 # --------------------------------------------------------------------------
 
-def _sweep_kernel(q_ref, m_ref, beta_ref, read_ref, w_ref, idx_ref,
-                  vals_s, idx_s, rows_s, *, k: int, block_n: int,
-                  tiles: int):
+def _sweep_kernel(q_ref, m_ref, beta_ref, *rest, k: int, block_n: int,
+                  tiles: int, quantized: bool):
+    if quantized:
+        s_ref, read_ref, w_ref, idx_ref, vals_s, idx_s, rows_s = rest
+    else:
+        s_ref = None
+        read_ref, w_ref, idx_ref, vals_s, idx_s, rows_s = rest
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -92,6 +99,11 @@ def _sweep_kernel(q_ref, m_ref, beta_ref, read_ref, w_ref, idx_ref,
 
     q = q_ref[0, :].astype(jnp.float32)
     m = m_ref[0, :, :].astype(jnp.float32)
+    if quantized:
+        # In-VMEM dequantization: the HBM stream stays int8 rows + one f32
+        # scale per row (~4x less traffic than f32 rows); everything after
+        # this multiply is the unquantized kernel unchanged.
+        m = m * s_ref[0, :][:, None]
     qn = _norm_row(q)
     mnorm = jax.lax.rsqrt(jnp.sum(m * m, axis=-1) + 1e-6)
     sims = jnp.dot(m, qn, preferred_element_type=jnp.float32) * mnorm
@@ -135,12 +147,16 @@ def _sweep_kernel(q_ref, m_ref, beta_ref, read_ref, w_ref, idx_ref,
                                              "valid_n"))
 def fused_read_sweep(q: jax.Array, mem: jax.Array, beta: jax.Array, *,
                      k: int, block_n: int = 512, interpret: bool = True,
-                     valid_n: Optional[int] = None):
+                     valid_n: Optional[int] = None,
+                     mem_scale: Optional[jax.Array] = None):
     """q: (B, H, W), mem: (B, N, W), beta: (B, H) -> (read (B, H, W) f32,
     weights (B, H, K) f32, indices (B, H, K) int32). One kernel dispatch;
     numerically matches `ref.fused_read_ref` (= the composed
     topk_read → finish_candidate_read path). ``valid_n`` restricts the
-    sweep to rows [0, valid_n) of a scratch-row buffer."""
+    sweep to rows [0, valid_n) of a scratch-row buffer. ``mem_scale``
+    (B, N) marks int8 rows: each tile's rows are dequantized in VMEM
+    (``row * scale``) — still one dispatch, the HBM stream drops to int8
+    rows plus one f32 scalar per row."""
     B, H, W = q.shape
     N = mem.shape[1] if valid_n is None else valid_n
     assert N % block_n == 0, (N, block_n)
@@ -148,15 +164,24 @@ def fused_read_sweep(q: jax.Array, mem: jax.Array, beta: jax.Array, *,
     tiles = N // block_n
     qf = q.reshape(B * H, W)
     bf = beta.reshape(B * H, 1).astype(jnp.float32)
+    quantized = mem_scale is not None
+
+    in_specs = [
+        pl.BlockSpec((1, W), lambda bh, t: (bh, 0)),
+        pl.BlockSpec((1, block_n, W), lambda bh, t: (bh // H, t, 0)),
+        pl.BlockSpec((1, 1), lambda bh, t: (bh, 0)),
+    ]
+    operands = [qf, mem, bf]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda bh, t: (bh // H, t)))
+        operands.append(mem_scale.astype(jnp.float32))
 
     read, w, idx = pl.pallas_call(
-        functools.partial(_sweep_kernel, k=k, block_n=block_n, tiles=tiles),
+        functools.partial(_sweep_kernel, k=k, block_n=block_n, tiles=tiles,
+                          quantized=quantized),
         grid=(B * H, tiles),
-        in_specs=[
-            pl.BlockSpec((1, W), lambda bh, t: (bh, 0)),
-            pl.BlockSpec((1, block_n, W), lambda bh, t: (bh // H, t, 0)),
-            pl.BlockSpec((1, 1), lambda bh, t: (bh, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, W), lambda bh, t: (bh, 0)),
             pl.BlockSpec((1, k), lambda bh, t: (bh, 0)),
@@ -173,7 +198,7 @@ def fused_read_sweep(q: jax.Array, mem: jax.Array, beta: jax.Array, *,
             pltpu.VMEM((k, W), jnp.float32),
         ],
         interpret=interpret,
-    )(qf, mem, bf)
+    )(*operands)
     return (read.reshape(B, H, W), w.reshape(B, H, k),
             idx.reshape(B, H, k))
 
@@ -182,9 +207,13 @@ def fused_read_sweep(q: jax.Array, mem: jax.Array, beta: jax.Array, *,
 # ANN read: scalar-prefetched candidates, grid independent of N
 # --------------------------------------------------------------------------
 
-def _cand_kernel(cc_ref, cs_ref, q_ref, beta_ref, m_ref,
-                 read_ref, w_ref, idx_ref,
-                 vals_s, pos_s, sig_s, rows_s, *, k: int, C: int):
+def _cand_kernel(cc_ref, cs_ref, q_ref, beta_ref, m_ref, *rest,
+                 k: int, C: int, quantized: bool):
+    if quantized:
+        s_ref, read_ref, w_ref, idx_ref, vals_s, pos_s, sig_s, rows_s = rest
+    else:
+        s_ref = None
+        read_ref, w_ref, idx_ref, vals_s, pos_s, sig_s, rows_s = rest
     bh = pl.program_id(0)
     c = pl.program_id(1)
 
@@ -198,6 +227,11 @@ def _cand_kernel(cc_ref, cs_ref, q_ref, beta_ref, m_ref,
         rows_s[:, :] = jnp.zeros(rows_s.shape, jnp.float32)
 
     row = m_ref[0, 0, :].astype(jnp.float32)
+    if quantized:
+        # Per-candidate dequantization: the scale block map follows the
+        # same prefetched clamped id as the row block, so one int8 row and
+        # one f32 scalar move per candidate — still a single dispatch.
+        row = row * s_ref[0, 0]
     qn = _norm_row(q_ref[0, :].astype(jnp.float32))
     sim = jnp.dot(row, qn, preferred_element_type=jnp.float32) \
         * jax.lax.rsqrt(jnp.sum(row * row) + 1e-6)
@@ -243,13 +277,16 @@ def _cand_kernel(cc_ref, cs_ref, q_ref, beta_ref, m_ref,
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def fused_read_candidates(q: jax.Array, mem: jax.Array, beta: jax.Array,
                           cand_idx: jax.Array, *, k: int,
-                          interpret: bool = True):
+                          interpret: bool = True,
+                          mem_scale: Optional[jax.Array] = None):
     """ANN-mode fused read. q: (B, H, W), mem: (B, N, W), beta: (B, H),
     cand_idx: (B, H, C) *signed, pre-deduped* candidate ids (-1 = invalid).
     Returns (read (B, H, W) f32, weights (B, H, K) f32, signed indices
     (B, H, K) int32) — numerically matches `ref.fused_read_candidates_ref`
     (= select_candidates → finish_candidate_read on deduped candidates).
-    Grid is (B·H, C): independent of N. Requires C >= k."""
+    Grid is (B·H, C): independent of N. Requires C >= k. ``mem_scale``
+    (B, N) marks int8 rows: the per-candidate scale is fetched through the
+    same prefetched block map as the row and applied in VMEM."""
     B, H, W = q.shape
     C = cand_idx.shape[-1]
     assert C >= k, (C, k)
@@ -257,15 +294,23 @@ def fused_read_candidates(q: jax.Array, mem: jax.Array, beta: jax.Array,
     bf = beta.reshape(B * H, 1).astype(jnp.float32)
     cs = cand_idx.reshape(B * H, C).astype(jnp.int32)
     cc = jnp.maximum(cs, 0)          # clamped: drives the mem block map
+    quantized = mem_scale is not None
+
+    in_specs = [
+        pl.BlockSpec((1, W), lambda bh, c, *_: (bh, 0)),
+        pl.BlockSpec((1, 1), lambda bh, c, *_: (bh, 0)),
+        pl.BlockSpec((1, 1, W), lambda bh, c, cc, _cs: (bh // H, cc[bh, c], 0)),
+    ]
+    operands = [qf, bf, mem]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda bh, c, cc, _cs: (bh // H, cc[bh, c])))
+        operands.append(mem_scale.astype(jnp.float32))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,       # clamped ids, signed ids
         grid=(B * H, C),
-        in_specs=[
-            pl.BlockSpec((1, W), lambda bh, c, *_: (bh, 0)),
-            pl.BlockSpec((1, 1), lambda bh, c, *_: (bh, 0)),
-            pl.BlockSpec((1, 1, W), lambda bh, c, cc, _cs: (bh // H, cc[bh, c], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, W), lambda bh, c, *_: (bh, 0)),
             pl.BlockSpec((1, k), lambda bh, c, *_: (bh, 0)),
@@ -279,7 +324,7 @@ def fused_read_candidates(q: jax.Array, mem: jax.Array, beta: jax.Array,
         ],
     )
     read, w, idx = pl.pallas_call(
-        functools.partial(_cand_kernel, k=k, C=C),
+        functools.partial(_cand_kernel, k=k, C=C, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B * H, W), jnp.float32),
@@ -287,6 +332,6 @@ def fused_read_candidates(q: jax.Array, mem: jax.Array, beta: jax.Array,
             jax.ShapeDtypeStruct((B * H, k), jnp.int32),
         ],
         interpret=interpret,
-    )(cc, cs, qf, bf, mem)
+    )(cc, cs, *operands)
     return (read.reshape(B, H, W), w.reshape(B, H, k),
             idx.reshape(B, H, k))

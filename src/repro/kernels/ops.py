@@ -226,7 +226,7 @@ def lra_topn(last_access, n: int, *, backend: BackendSpec = None,
 
 def fused_read(q, mem, beta, k: int, *, cand_idx=None,
                backend: BackendSpec = None, block_n: int = 512,
-               valid_n: int = None):
+               valid_n: int = None, mem_scale=None):
     """The whole sparse read in one kernel dispatch. q: (B, H, W),
     mem: (B, N, W), beta: (B, H) -> (read (B, H, W) f32, weights (B, H, K),
     signed indices (B, H, K) int32).
@@ -241,6 +241,14 @@ def fused_read(q, mem, beta, k: int, *, cand_idx=None,
     not divisible by the clamped block size (exact) or C < k (ANN) —
     identical results, composed execution.
 
+    Int8 memory storage: ``mem_scale`` (B, N) f32 per-row scales mark int8
+    rows. Both Pallas kernels dequantize **inside** the (still single)
+    dispatch; gradients flow to q/beta exactly and to the scales through
+    the dequantized gather (the rows themselves are integer: float0 —
+    docs/memory-model.md, "storage dtype ladder"). Backend ``overrides``
+    that predate ``mem_scale`` are bypassed for int8 buffers (they would
+    misread raw quantized rows); the built-in kernels/oracle run instead.
+
     Slot-sharded buffers (`mem_shard.memory_mesh`) have no fused route:
     the caller (core/addressing.py) keeps the composed
     shard_map path there."""
@@ -250,39 +258,59 @@ def fused_read(q, mem, beta, k: int, *, cand_idx=None,
             "topk_read/gather path (core.addressing falls back to it "
             "under an active memory_mesh)")
     be = resolve(backend)
-    if (impl := be.impl("fused_read")) is not None:
+    impl = be.impl("fused_read")
+    if impl is not None and mem_scale is not None \
+            and not _accepts_kw(impl, "mem_scale"):
+        impl = None                      # pre-int8 override: use built-ins
+    if impl is not None:
+        kw = _opt_kw(mem_scale=mem_scale)
         if valid_n is not None and not _accepts_kw(impl, "valid_n"):
             out = impl(q, mem[:, :valid_n], beta, k, cand_idx=cand_idx,
-                       block_n=block_n)
+                       block_n=block_n, **kw)
         else:
             out = impl(q, mem, beta, k, cand_idx=cand_idx, block_n=block_n,
-                       **_opt_kw(valid_n=valid_n))
+                       **_opt_kw(valid_n=valid_n, mem_scale=mem_scale))
         read, w, idx = out
         return read, w, _detach_int(idx)
     if cand_idx is not None:
         if be.use_pallas and cand_idx.shape[-1] >= k:
-            out = _fused_read_cand_vjp(q, mem, beta, cand_idx, k,
-                                       be.interpret)
+            if mem_scale is not None:
+                out = _fused_read_cand_q_vjp(q, mem, mem_scale, beta,
+                                             cand_idx, k, be.interpret)
+            else:
+                out = _fused_read_cand_vjp(q, mem, beta, cand_idx, k,
+                                           be.interpret)
         else:
-            out = ref.fused_read_candidates_ref(q, mem, beta, k, cand_idx)
+            out = ref.fused_read_candidates_ref(q, mem, beta, k, cand_idx,
+                                                mem_scale=mem_scale)
         read, w, idx = out
         return read, w, _detach_int(idx)
     if be.impl("topk_read") is not None:
         # Partial backend: it accelerates the composed sweep but has no
         # fused read — honor its override by composing (identical results,
-        # composed execution; the docs/kernels.md extension contract).
+        # composed execution; the docs/kernels.md extension contract). An
+        # int8 buffer hands the override a dequantized f32 sweep view (the
+        # override predates quantized rows).
+        mv = mem if mem_scale is None \
+            else ref._deq_view(mem, mem_scale)
         _, idx = topk_read(jax.lax.stop_gradient(q),
-                           jax.lax.stop_gradient(mem), k, backend=be,
+                           jax.lax.stop_gradient(mv), k, backend=be,
                            block_n=block_n, valid_n=valid_n)
-        read, w = ref.sparse_read_tail(q, mem, beta, idx)
+        read, w = ref.sparse_read_tail(q, mem, beta, idx,
+                                       mem_scale=mem_scale)
         return read, w, _detach_int(idx)
     nv = mem.shape[1] if valid_n is None else valid_n
     bn = min(block_n, nv)
     if be.use_pallas and nv % bn == 0 and bn >= k:
-        out = _fused_read_sweep_vjp(q, mem, beta, k, bn, be.interpret,
-                                    valid_n)
+        if mem_scale is not None:
+            out = _fused_read_sweep_q_vjp(q, mem, mem_scale, beta, k, bn,
+                                          be.interpret, valid_n)
+        else:
+            out = _fused_read_sweep_vjp(q, mem, beta, k, bn, be.interpret,
+                                        valid_n)
     else:
-        out = ref.fused_read_ref(q, mem, beta, k, valid_n=valid_n)
+        out = ref.fused_read_ref(q, mem, beta, k, valid_n=valid_n,
+                                 mem_scale=mem_scale)
     read, w, idx = out
     return read, w, _detach_int(idx)
 
@@ -336,26 +364,101 @@ def _fused_read_cand_bwd(k, interpret, res, ct):
 _fused_read_cand_vjp.defvjp(_fused_read_cand_fwd, _fused_read_cand_bwd)
 
 
+# Int8 variants: same kernels with the per-row scale operand. The memory
+# argument is integer, so its cotangent is float0 (the direction channel is
+# straight-through-truncated — docs/memory-model.md); the f32 scale leaf
+# gets the exact gradient of the dequantized gather via the ref tail.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _fused_read_sweep_q_vjp(q, mem, mem_scale, beta, k, block_n, interpret,
+                            valid_n):
+    return fused_read_pallas(q, mem, beta, k=k, block_n=block_n,
+                             interpret=interpret, valid_n=valid_n,
+                             mem_scale=mem_scale)
+
+
+def _fused_read_sweep_q_fwd(q, mem, mem_scale, beta, k, block_n, interpret,
+                            valid_n):
+    out = _fused_read_sweep_q_vjp(q, mem, mem_scale, beta, k, block_n,
+                                  interpret, valid_n)
+    return out, (q, mem, mem_scale, beta, out[2])
+
+
+def _fused_read_sweep_q_bwd(k, block_n, interpret, valid_n, res, ct):
+    q, mem, mem_scale, beta, idx = res
+    g_read, g_w, _ = ct                               # idx is int: float0 ct
+    _, vjp_fn = jax.vjp(
+        lambda q_, s_, b_: ref.sparse_read_tail(q_, mem, b_, idx,
+                                                mem_scale=s_),
+        q, mem_scale, beta)
+    g_q, g_s, g_beta = vjp_fn((g_read, g_w))
+    return g_q, _zero_ct(mem), g_s, g_beta
+
+
+_fused_read_sweep_q_vjp.defvjp(_fused_read_sweep_q_fwd,
+                               _fused_read_sweep_q_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _fused_read_cand_q_vjp(q, mem, mem_scale, beta, cand_idx, k, interpret):
+    return fused_read_cand_pallas(q, mem, beta, cand_idx, k=k,
+                                  interpret=interpret, mem_scale=mem_scale)
+
+
+def _fused_read_cand_q_fwd(q, mem, mem_scale, beta, cand_idx, k, interpret):
+    out = _fused_read_cand_q_vjp(q, mem, mem_scale, beta, cand_idx, k,
+                                 interpret)
+    return out, (q, mem, mem_scale, beta, cand_idx, out[2])
+
+
+def _fused_read_cand_q_bwd(k, interpret, res, ct):
+    q, mem, mem_scale, beta, cand_idx, idx = res
+    g_read, g_w, _ = ct
+    _, vjp_fn = jax.vjp(
+        lambda q_, s_, b_: ref.sparse_read_tail(q_, mem, b_, idx,
+                                                mem_scale=s_),
+        q, mem_scale, beta)
+    g_q, g_s, g_beta = vjp_fn((g_read, g_w))
+    return g_q, _zero_ct(mem), g_s, g_beta, _zero_ct(cand_idx)
+
+
+_fused_read_cand_q_vjp.defvjp(_fused_read_cand_q_fwd, _fused_read_cand_q_bwd)
+
+
 # --------------------------------------------------------------------------
 # scatter_rows (differentiable)
 # --------------------------------------------------------------------------
 
 def scatter_rows(mem, idx, rows, mode: str = "add", *,
-                 backend: BackendSpec = None, scratch_row: int = None):
+                 backend: BackendSpec = None, scratch_row: int = None,
+                 mem_scale=None, rows_scale=None):
     """mem: (B,N,W), idx: (B,J) int32, rows: (B,J,W) -> updated memory.
 
     'add' accumulates duplicate indices; 'set' takes the last write
     (sequential semantics, j ascending). ``scratch_row=N`` marks a
     persistent (B, N+1, W) scratch-row buffer: 'add' parks duplicates on
-    row N in place instead of padding a transient row."""
+    row N in place instead of padding a transient row.
+
+    Int8 storage (``mem_scale`` (B, N) f32 given): routes to
+    `ref.scatter_rows_q_ref` and returns (mem', mem_scale'). With int8
+    ``rows`` + ``rows_scale``, 'set' restores the recorded (row, scale)
+    bits exactly (rollback); float rows are re-quantized — once per
+    target row ('add' accumulates all duplicates in f32 first). The jnp
+    oracle is plainly differentiable (scale/value gradients via autodiff;
+    the int8 leaves carry float0), so no Pallas variant or custom VJP is
+    needed — scatter traffic is O(J·W) either way."""
     if (ctx := _mesh_route(mem.shape[1])) is not None:
         from repro.distributed import mem_shard
         if scratch_row is not None:
             raise ValueError("scratch_row is meaningless on a slot-sharded "
                              "buffer: each shard parks on its own local "
                              "scratch row")
-        return mem_shard.scatter_rows_sharded(ctx, mem, idx, rows, mode,
-                                              backend=backend)
+        return mem_shard.scatter_rows_sharded(
+            ctx, mem, idx, rows, mode, backend=backend,
+            **_opt_kw(mem_scale=mem_scale, rows_scale=rows_scale))
+    if mem_scale is not None:
+        return ref.scatter_rows_q_ref(mem, mem_scale, idx, rows,
+                                      rows_scale=rows_scale, mode=mode)
     # Cast OUTSIDE the custom_vjp below: the astype's transpose then
     # converts the (bf16) memory cotangent back to the caller's rows dtype;
     # casting inside would leak a bf16 cotangent against an f32 primal.
@@ -409,7 +512,7 @@ _scatter_rows_vjp.defvjp(_scatter_rows_fwd, _scatter_rows_bwd)
 
 def sparse_write_update(mem, last_access, write_idx, write_w, a, lra_idx,
                         step, *, delta: float, backend: BackendSpec = None,
-                        scratch_row: int = None):
+                        scratch_row: int = None, mem_scale=None):
     """Fused LRA erase + scatter-add of w^W a^T + last-access update.
 
     See `ref.sparse_write_update_ref` for the exact contract. Returns
@@ -419,18 +522,50 @@ def sparse_write_update(mem, last_access, write_idx, write_w, a, lra_idx,
     update; the jnp oracle never touches it because every index is < N).
     The usage output is non-differentiable (the paper passes no gradients
     through U^(2)) and is explicitly detached so downstream integer scatter
-    ops never see a tangent tracer."""
+    ops never see a tangent tracer.
+
+    Int8 storage (``mem_scale`` (B, rows) f32 given): the touched rows are
+    dequantized, updated, and re-quantized once in the same pass
+    (`kernels/sparse_write._kernel_q` / `ref.sparse_write_update_q_ref`);
+    returns (mem', last_access', mem_scale'). Gradients: mem'/la' are
+    integer (float0 — straight-through truncation through the stored
+    rows); mem_scale' carries exact autodiff gradients to mem_scale,
+    write_w, and a (the Pallas path's custom VJP re-runs the jnp oracle's
+    scale output under `jax.vjp`). Backend overrides that predate
+    ``mem_scale`` are bypassed for int8 buffers."""
     if (ctx := _mesh_route(mem.shape[1])) is not None:
         from repro.distributed import mem_shard
         if scratch_row is not None:
             raise ValueError("scratch_row is meaningless on a slot-sharded "
                              "buffer: each shard parks on its own local "
                              "scratch row")
+        if mem_scale is not None:
+            mem_out, la_out, scale_out = \
+                mem_shard.sparse_write_update_sharded(
+                    ctx, mem, last_access, write_idx, write_w, a, lra_idx,
+                    step, delta=delta, backend=backend, mem_scale=mem_scale)
+            return mem_out, _detach_int(la_out), scale_out
         mem_out, la_out = mem_shard.sparse_write_update_sharded(
             ctx, mem, last_access, write_idx, write_w, a, lra_idx, step,
             delta=delta, backend=backend)
         return mem_out, _detach_int(la_out)
     be = resolve(backend)
+    if mem_scale is not None:
+        impl = be.impl("sparse_write_update")
+        if impl is not None and _accepts_kw(impl, "mem_scale"):
+            out = impl(mem, last_access, write_idx, write_w, a, lra_idx,
+                       step, delta=delta, mem_scale=mem_scale,
+                       **_opt_kw(scratch_row=scratch_row))
+        elif be.use_pallas:
+            out = _sparse_write_q_vjp(mem, last_access, mem_scale,
+                                      write_idx, write_w, a, lra_idx, step,
+                                      delta, be.interpret, scratch_row)
+        else:
+            out = ref.sparse_write_update_q_ref(mem, mem_scale, last_access,
+                                                write_idx, write_w, a,
+                                                lra_idx, step, delta)
+        mem_out, la_out, scale_out = out
+        return mem_out, _detach_int(la_out), scale_out
     if (impl := be.impl("sparse_write_update")) is not None:
         if scratch_row is not None and not _accepts_kw(impl, "scratch_row"):
             out = impl(mem, last_access, write_idx, write_w, a, lra_idx,
@@ -485,3 +620,45 @@ def _sparse_write_bwd(delta, interpret, scratch_row, res, ct):
 
 
 _sparse_write_vjp.defvjp(_sparse_write_fwd, _sparse_write_bwd)
+
+
+# Int8 variant. Outputs: mem' (int8) and la' (int32) carry float0
+# cotangents — only the f32 mem_scale' output is differentiable. Its
+# backward re-runs the jnp oracle's scale output under `jax.vjp`, which
+# yields the exact gradients to (mem_scale, write_w, a): the scale of a
+# touched row is max|new_f|/127 with new_f = dequant(old) [unless erased]
+# + accumulated w_j·a_h, so the magnitude channel trains while the stored
+# direction bits are straight-through-truncated (docs/memory-model.md).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10))
+def _sparse_write_q_vjp(mem, last_access, mem_scale, write_idx, write_w, a,
+                        lra_idx, step, delta, interpret, scratch_row):
+    return sparse_write_pallas(mem, last_access, write_idx, write_w, a,
+                               lra_idx, step, delta=delta,
+                               interpret=interpret, scratch_row=scratch_row,
+                               mem_scale=mem_scale)
+
+
+def _sparse_write_q_fwd(mem, last_access, mem_scale, write_idx, write_w, a,
+                        lra_idx, step, delta, interpret, scratch_row):
+    out = _sparse_write_q_vjp(mem, last_access, mem_scale, write_idx,
+                              write_w, a, lra_idx, step, delta, interpret,
+                              scratch_row)
+    return out, (mem, last_access, mem_scale, write_idx, write_w, a,
+                 lra_idx, step)
+
+
+def _sparse_write_q_bwd(delta, interpret, scratch_row, res, ct):
+    mem, last_access, mem_scale, write_idx, write_w, a, lra_idx, step = res
+    _, _, g_scale_out = ct                # mem'/la' are int: float0 cts
+    _, vjp_fn = jax.vjp(
+        lambda s_, w_, a_: ref.sparse_write_update_q_ref(
+            mem, s_, last_access, write_idx, w_, a_, lra_idx, step,
+            delta)[2],
+        mem_scale, write_w, a)
+    g_s, g_w, g_a = vjp_fn(g_scale_out)
+    return (_zero_ct(mem), _zero_ct(last_access), g_s, _zero_ct(write_idx),
+            g_w, g_a, _zero_ct(lra_idx), _zero_ct(step))
+
+
+_sparse_write_q_vjp.defvjp(_sparse_write_q_fwd, _sparse_write_q_bwd)

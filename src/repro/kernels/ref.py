@@ -13,6 +13,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import dequantize_rows, quantize_rows
+
+
+def _deq_view(mem: jax.Array, mem_scale):
+    """f32 view of a memory buffer: plain upcast for f32/bf16, per-row
+    dequantization when an int8 buffer's scale leaf is provided. The
+    oracle-side twin of the fused kernels' in-VMEM dequant."""
+    if mem_scale is None:
+        return mem.astype(jnp.float32)
+    return dequantize_rows(mem, mem_scale)
+
 
 def topk_read_ref(q: jax.Array, mem: jax.Array, k: int):
     """Content-based top-K addressing oracle.
@@ -26,7 +37,7 @@ def topk_read_ref(q: jax.Array, mem: jax.Array, k: int):
 
 
 def sparse_read_tail(q: jax.Array, mem: jax.Array, beta: jax.Array,
-                     idx: jax.Array):
+                     idx: jax.Array, mem_scale=None):
     """Differentiable tail of a sparse read from recorded signed indices —
     the jnp twin of `core.addressing.finish_candidate_read` (kept here so
     the fused-read custom-VJPs in `kernels/ops.py` can re-derive gradients
@@ -34,11 +45,16 @@ def sparse_read_tail(q: jax.Array, mem: jax.Array, beta: jax.Array,
 
     q: (B, H, W), mem: (B, N, W), beta: (B, H), idx: (B, H, K) signed
     (-1 = invalid: clamped for the gather, weight exactly 0). Rows are
-    upcast to f32 before the re-rank (bf16 memory storage reads at f32).
+    upcast to f32 before the re-rank (bf16 memory storage reads at f32);
+    with ``mem_scale`` (B, N) the rows are int8 and the gathered words are
+    dequantized ``row * scale`` — the scale gather is differentiable, so
+    the int8 path's exact scale gradients come out of plain autodiff.
     Returns (read (B, H, K->W weighted sum), weights (B, H, K))."""
     valid = idx >= 0
     b = jnp.arange(mem.shape[0])[:, None, None]
     words = mem[b, jnp.maximum(idx, 0)].astype(jnp.float32)   # (B, H, K, W)
+    if mem_scale is not None:
+        words = words * mem_scale[b, jnp.maximum(idx, 0)][..., None]
     qn = q * jax.lax.rsqrt(jnp.sum(q * q, -1, keepdims=True) + 1e-6)
     wn = words * jax.lax.rsqrt(jnp.sum(words * words, -1, keepdims=True)
                                + 1e-6)
@@ -52,30 +68,37 @@ def sparse_read_tail(q: jax.Array, mem: jax.Array, beta: jax.Array,
 
 
 def fused_read_ref(q: jax.Array, mem: jax.Array, beta: jax.Array, k: int,
-                   valid_n=None):
+                   valid_n=None, mem_scale=None):
     """Oracle for the fused exact read: the composed
     topk_read → finish_candidate_read path in one call. The selection sweep
-    runs on a stop-gradient f32 view of rows [0, valid_n); the tail
-    gathers from the full (differentiable) memory. Returns
+    runs on a stop-gradient f32 view of rows [0, valid_n) — dequantized
+    when ``mem_scale`` marks int8 storage; the tail gathers from the full
+    (differentiable) memory. Returns
     (read (B,H,W), weights (B,H,K), indices (B,H,K) int32)."""
     mv = mem if valid_n is None else mem[:, :valid_n]
+    sv = None if mem_scale is None else mem_scale[:, :mv.shape[1]]
     _, idx = topk_read_ref(
         jax.lax.stop_gradient(q).astype(jnp.float32),
-        jax.lax.stop_gradient(mv).astype(jnp.float32), k)
-    read, w = sparse_read_tail(q, mem, beta, idx)
+        jax.lax.stop_gradient(_deq_view(mv, sv)), k)
+    read, w = sparse_read_tail(q, mem, beta, idx, mem_scale=mem_scale)
     return read, w, idx
 
 
 def fused_read_candidates_ref(q: jax.Array, mem: jax.Array, beta: jax.Array,
-                              k: int, cand_idx: jax.Array):
+                              k: int, cand_idx: jax.Array, mem_scale=None):
     """Oracle for the fused ANN read: re-rank a *pre-deduped* signed
     candidate set (B, H, C), keep the top-K by (sim desc, position asc),
     then the shared tail. Invalid candidates (-1) re-rank at -1e9 —
     selectable only when fewer than K valid candidates exist, and then
-    with exactly zero weight. Returns (read, weights, signed idx)."""
+    with exactly zero weight. ``mem_scale`` marks int8 rows (dequantized
+    per candidate). Returns (read, weights, signed idx)."""
     b = jnp.arange(mem.shape[0])[:, None, None]
     cand = jax.lax.stop_gradient(mem)[b, jnp.maximum(cand_idx, 0)]
     cand = cand.astype(jnp.float32)                           # (B, H, C, W)
+    if mem_scale is not None:
+        cs = jax.lax.stop_gradient(mem_scale)[
+            jnp.arange(mem.shape[0])[:, None, None], jnp.maximum(cand_idx, 0)]
+        cand = cand * cs[..., None]
     qs = jax.lax.stop_gradient(q).astype(jnp.float32)
     qn = qs * jax.lax.rsqrt(jnp.sum(qs * qs, -1, keepdims=True) + 1e-6)
     cn = cand * jax.lax.rsqrt(jnp.sum(cand * cand, -1, keepdims=True) + 1e-6)
@@ -83,7 +106,7 @@ def fused_read_candidates_ref(q: jax.Array, mem: jax.Array, beta: jax.Array,
     sims = jnp.where(cand_idx < 0, -1e9, sims)
     _, pos = jax.lax.top_k(sims, k)
     idx = jnp.take_along_axis(cand_idx, pos, axis=-1)         # (B, H, K)
-    read, w = sparse_read_tail(q, mem, beta, idx)
+    read, w = sparse_read_tail(q, mem, beta, idx, mem_scale=mem_scale)
     return read, w, idx
 
 
@@ -162,3 +185,94 @@ def sparse_write_update_ref(mem: jax.Array, last_access: jax.Array,
     upd = jnp.where(write_w > delta, step, last_access[b, write_idx])
     la = last_access.at[b, write_idx].max(upd)
     return mem, la
+
+
+def _lane_step(step: jax.Array, batch: int) -> jax.Array:
+    """Usage-stamp step as a broadcastable shape: () stays scalar, per-lane
+    (B,)/(B, 1) vectors become (B, 1) — the jnp twin of the Pallas
+    kernel's `_as_lane_step`."""
+    step = jnp.asarray(step)
+    return step if step.ndim == 0 else step.reshape(batch, 1)
+
+
+def sparse_write_update_q_ref(mem: jax.Array, mem_scale: jax.Array,
+                              last_access: jax.Array, write_idx: jax.Array,
+                              write_w: jax.Array, a: jax.Array,
+                              lra_idx: jax.Array, step: jax.Array,
+                              delta: float):
+    """Oracle for the fused SAM write under int8 memory storage.
+
+    mem: (B, N, W) int8 rows; mem_scale: (B, N) f32 per-row scales; the
+    other arguments match `sparse_write_update_ref`. Semantics: dequantize
+    the touched rows only, apply the erase + w^W a^T accumulation in f32
+    (duplicates accumulate into the same row), then re-quantize each
+    touched row **once** (`core.quant.quantize_rows`) and scatter the new
+    (int8 row, f32 scale) pair back. Untouched rows keep their exact bits.
+    Returns (mem', last_access', mem_scale').
+
+    Precondition (shared with the fused Pallas kernel): every lra_idx row
+    also appears in write_idx — SAM's write plan puts the LRA slot in each
+    head's K+1 columns, so erase-only rows do not exist.
+
+    Gradients: the int8 scatter is non-differentiable, but the new scales
+    are plain jnp (`max|row| / 127`), so autodiff carries exact
+    magnitude-channel gradients to ``write_w``/``a`` and through the old
+    scales — the straight-through scheme of docs/memory-model.md. No
+    custom VJP is needed on this reference path."""
+    B, H, W = a.shape
+    J = write_idx.shape[1]
+    kp1 = J // H
+    b = jnp.arange(B)[:, None]
+    old_q = mem[b, write_idx]                                 # (B, J, W) int8
+    old_s = mem_scale[b, write_idx]                           # (B, J)
+    old_f = old_q.astype(jnp.float32) * old_s[..., None]
+    erased = (write_idx[:, :, None] == lra_idx[:, None, :]).any(-1)
+    base = jnp.where(erased[..., None], 0.0, old_f)
+    add = (write_w.reshape(B, H, kp1)[..., None]
+           * a[:, :, None, :]).reshape(B, J, W).astype(jnp.float32)
+    # Each column j rebuilds its *whole* target row: sum every column that
+    # lands on the same slot, so duplicates produce identical rows and the
+    # scatter-set below is order-independent (cf. `scatter_rows_ref`).
+    eq = (write_idx[:, :, None] == write_idx[:, None, :]).astype(jnp.float32)
+    new_f = base + jnp.einsum("bjk,bkw->bjw", eq, add)
+    new_q, new_s = quantize_rows(new_f)                       # one rounding
+    mem = mem.at[b, write_idx].set(new_q)
+    mem_scale = mem_scale.at[b, write_idx].set(new_s)
+    upd = jnp.where(write_w > delta, _lane_step(step, B),
+                    last_access[b, write_idx])
+    la = last_access.at[b, write_idx].max(upd)
+    return mem, la, mem_scale
+
+
+def scatter_rows_q_ref(mem: jax.Array, mem_scale: jax.Array, idx: jax.Array,
+                       rows: jax.Array, rows_scale=None, mode: str = "add"):
+    """`scatter_rows_ref` for int8 memory: every touched row is rebuilt in
+    f32 and re-quantized once; untouched rows keep their exact bits.
+    Returns (mem', mem_scale').
+
+    'set' with int8 ``rows`` + ``rows_scale``: a bit-exact restore (the
+    rollback path scatters recorded pre-write (row, scale) pairs; last
+    duplicate wins, like `scatter_rows_ref`). 'set' with float rows:
+    quantize then scatter. 'add': dequantize the target rows, accumulate
+    every duplicate's contribution, re-quantize once."""
+    b = jnp.arange(mem.shape[0])[:, None]
+    J = idx.shape[1]
+    if mode == "set":
+        if rows.dtype == jnp.int8:
+            assert rows_scale is not None, \
+                "int8 'set' rows need their recorded scales"
+            q, s = rows, rows_scale.astype(mem_scale.dtype)
+        else:
+            q, s = quantize_rows(rows)
+        # Last duplicate wins, made order-independent as in scatter_rows_ref.
+        eq = idx[:, :, None] == idx[:, None, :]
+        last = jnp.argmax(jnp.where(eq, jnp.arange(J)[None, None, :], -1), -1)
+        q = jnp.take_along_axis(q, last[..., None], axis=1)
+        s = jnp.take_along_axis(s, last, axis=1)
+        return mem.at[b, idx].set(q), mem_scale.at[b, idx].set(s)
+    old_f = mem[b, idx].astype(jnp.float32) * mem_scale[b, idx][..., None]
+    eq = (idx[:, :, None] == idx[:, None, :]).astype(jnp.float32)
+    new_f = old_f + jnp.einsum("bjk,bkw->bjw", eq,
+                               rows.astype(jnp.float32))
+    q, s = quantize_rows(new_f)
+    return mem.at[b, idx].set(q), mem_scale.at[b, idx].set(s)

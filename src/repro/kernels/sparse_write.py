@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.quant import quantize_rows
 from repro.kernels.scatter_rows import first_occurrence
 
 
@@ -86,13 +87,49 @@ def _kernel(uidx_ref, widx_ref, erase_ref, w_ref, step_ref,
                                  la_ref[0, 0])
 
 
+def _kernel_q(uidx_ref, widx_ref, erase_ref, w_ref, step_ref,
+              mem_ref, la_ref, scale_ref, a_ref,
+              out_mem_ref, out_la_ref, out_scale_ref,
+              *, J: int, kp1: int, delta: float):
+    """Int8 variant: dequantize the owned row against its f32 scale,
+    accumulate every matching write's contribution in f32, re-quantize
+    **once** (`core.quant.quantize_rows`), and emit the new (int8 row,
+    scale) pair — the read-modify-write touches only the J owned rows.
+    Parked duplicate lanes write their scratch row's original bits back
+    (a dequantize→requantize round-trip is not the identity on int8, so
+    the fixed-point contract is kept explicitly)."""
+    b = pl.program_id(0)
+    u = pl.program_id(1)
+    row = uidx_ref[b, u]
+    parked = row != widx_ref[b, u]         # duplicate lane → scratch row
+
+    old_q = mem_ref[0, 0, :]
+    old_s = scale_ref[0, 0]
+    acc = jnp.where(erase_ref[b, u] > 0, 0.0,
+                    old_q.astype(jnp.float32) * old_s)
+    touched = None
+    for j in range(J):                     # J ≈ 20, statically unrolled
+        match = widx_ref[b, j] == row
+        wj = w_ref[b, j]
+        acc = acc + jnp.where(match, wj, 0.0) * a_ref[0, j // kp1, :]
+        hit = match & (wj > delta)
+        touched = hit if touched is None else (touched | hit)
+    new_q, new_s = quantize_rows(acc)      # one rounding per touched row
+    out_mem_ref[0, 0, :] = jnp.where(parked, old_q, new_q)
+    out_scale_ref[0, 0] = jnp.where(parked, old_s, new_s)
+    out_la_ref[0, 0] = jnp.where(touched,
+                                 jnp.maximum(step_ref[b], la_ref[0, 0]),
+                                 la_ref[0, 0])
+
+
 @functools.partial(jax.jit,
                    static_argnames=("delta", "interpret", "scratch_row"))
 def sparse_write_update(mem: jax.Array, last_access: jax.Array,
                         write_idx: jax.Array, write_w: jax.Array,
                         a: jax.Array, lra_idx: jax.Array, step: jax.Array,
                         *, delta: float, interpret: bool = True,
-                        scratch_row: Optional[int] = None):
+                        scratch_row: Optional[int] = None,
+                        mem_scale: Optional[jax.Array] = None):
     """Fused erase + outer-product scatter-add + usage update.
 
     Scratch-row layout (``scratch_row=N``): mem: (B, N+1, W);
@@ -116,23 +153,31 @@ def sparse_write_update(mem: jax.Array, last_access: jax.Array,
     would not be erased (the reference erases unconditionally). SAM's
     write plan guarantees this by construction: the LRA slot is the last
     of each head's K+1 write rows (`write_plan`, eq. 5).
+
+    Int8 storage (``mem_scale`` (B, rows) f32 given): the owned rows are
+    dequantized, updated in f32, and re-quantized once in the same pass
+    (`_kernel_q`); returns (mem', last_access', mem_scale'). Numerically
+    matches `ref.sparse_write_update_q_ref`.
     """
     B, rows, W = mem.shape
     _, J = write_idx.shape
     H = a.shape[1]
     kp1 = J // H
     assert kp1 * H == J, (J, H)
+    quantized = mem_scale is not None
 
     if scratch_row is None:
         # Legacy layout: transient scratch row N, padded on / sliced off.
         N = rows
         mem_p = jnp.pad(mem, ((0, 0), (0, 1), (0, 0)))
         la_p = jnp.pad(last_access, ((0, 0), (0, 1)))
+        scale_p = None if not quantized else jnp.pad(mem_scale,
+                                                     ((0, 0), (0, 1)))
         dummy = N
     else:
         assert scratch_row == rows - 1 == last_access.shape[1] - 1, \
             (scratch_row, mem.shape, last_access.shape)
-        mem_p, la_p, dummy = mem, last_access, scratch_row
+        mem_p, la_p, scale_p, dummy = mem, last_access, mem_scale, scratch_row
 
     # Unique-first row ownership: duplicates are parked on the scratch row.
     write_idx = write_idx.astype(jnp.int32)
@@ -141,18 +186,37 @@ def sparse_write_update(mem: jax.Array, last_access: jax.Array,
     erase = (uidx[:, :, None] == lra_idx[:, None, :]).any(-1).astype(jnp.int32)
     step_arr = _as_lane_step(step, B)
 
+    row_spec = pl.BlockSpec((1, 1, W), lambda b, u, ui, *_: (b, ui[b, u], 0))
+    cell_spec = pl.BlockSpec((1, 1), lambda b, u, ui, *_: (b, ui[b, u]))
+    a_spec = pl.BlockSpec((1, H, W), lambda b, u, *_: (b, 0, 0))
+
+    if quantized:
+        # Compute in f32; the kernel re-quantizes the owned row itself.
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,   # uidx, write_idx, erase, write_w, step
+            grid=(B, J),
+            in_specs=[row_spec, cell_spec, cell_spec, a_spec],
+            out_specs=[row_spec, cell_spec, cell_spec],
+        )
+        out_mem, out_la, out_scale = pl.pallas_call(
+            functools.partial(_kernel_q, J=J, kp1=kp1, delta=delta),
+            grid_spec=grid_spec,
+            out_shape=[jax.ShapeDtypeStruct(mem_p.shape, mem.dtype),
+                       jax.ShapeDtypeStruct(la_p.shape, last_access.dtype),
+                       jax.ShapeDtypeStruct(scale_p.shape, scale_p.dtype)],
+            input_output_aliases={5: 0, 6: 1, 7: 2},
+            interpret=interpret,
+        )(uidx, write_idx, erase, write_w.astype(jnp.float32), step_arr,
+          mem_p, la_p, scale_p, a.astype(jnp.float32))
+        if scratch_row is None:
+            return out_mem[:, :rows], out_la[:, :rows], out_scale[:, :rows]
+        return out_mem, out_la, out_scale
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,   # uidx, write_idx, erase, write_w, step
         grid=(B, J),
-        in_specs=[
-            pl.BlockSpec((1, 1, W), lambda b, u, ui, *_: (b, ui[b, u], 0)),
-            pl.BlockSpec((1, 1), lambda b, u, ui, *_: (b, ui[b, u])),
-            pl.BlockSpec((1, H, W), lambda b, u, *_: (b, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, W), lambda b, u, ui, *_: (b, ui[b, u], 0)),
-            pl.BlockSpec((1, 1), lambda b, u, ui, *_: (b, ui[b, u])),
-        ],
+        in_specs=[row_spec, cell_spec, a_spec],
+        out_specs=[row_spec, cell_spec],
     )
     out_mem, out_la = pl.pallas_call(
         functools.partial(_kernel, J=J, kp1=kp1, delta=delta),

@@ -15,7 +15,13 @@ canonical tree back out to the live mesh's shard count on admission. The
 logical rows round-trip bit-exactly; scratch rows are reinitialized (their
 contents are meaningless by contract, docs/memory-model.md). ANN
 (buckets, cursor) pairs re-partition by the same ownership remap the
-checkpoint path uses (`mem_shard.np_relayout_ann`).
+checkpoint path uses (`mem_shard.np_relayout_ann`). Int8 memory storage
+(``mem_dtype="int8"``) extends the bit-exactness guarantee to the
+quantized pair: the int8 ``memory`` bits and the f32 ``mem_scale`` leaf
+are both in `core.types.SLOT_LEAVES`, so they re-lay-out, spill, and
+restore together without ever being de/re-quantized — an evicted session
+resumes with the exact rows the uninterrupted run would hold
+(tests/test_int8_memory.py).
 
 Spill
 -----

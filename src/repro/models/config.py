@@ -65,9 +65,13 @@ class MemoryLayerConfig:
     # Kernel backend for the memory ops ('ref' | 'pallas' |
     # 'pallas-interpret' | registered custom; None -> env default).
     backend: "str | None" = None
-    # Storage dtype of the memory rows ('float32' | 'bfloat16'): bfloat16
-    # halves the (B, N+1, W) buffer; reads upcast to float32 before the
-    # similarity/softmax math, so compute precision is unchanged.
+    # Storage dtype of the memory rows ('float32' | 'bfloat16' | 'int8'):
+    # bfloat16 halves the (B, N+1, W) buffer; 'int8' quarters it, storing
+    # per-row symmetric int8 words plus an f32 scale leaf (MemoryState.
+    # mem_scale) that the fused kernels dequantize in-VMEM. Reads upcast to
+    # float32 before the similarity/softmax math on every storage dtype;
+    # see docs/memory-model.md ("storage dtype ladder") for the error
+    # model and gradient semantics.
     mem_dtype: str = "float32"
     # How the segment loop backpropagates (core/unroll.py): 'naive' scans
     # and checkpoints the (B, N+1, W) memory per segment; 'sparse' stores

@@ -20,7 +20,7 @@ segment — `MemoryLayerConfig.unroll_mode` selects naive / sparse / chunked.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.core import addressing as addr
 from repro.core import unroll as unroll_lib
 from repro.core.types import (SCRATCH_ROWS, init_scratch_last_access,
-                              init_scratch_memory)
+                              init_scratch_mem_scale, init_scratch_memory)
 from repro.distributed import mem_shard
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
@@ -44,6 +44,9 @@ class MemoryState(NamedTuple):
     read_idx: jax.Array      # (B, H, K) previous read locations
     read_w: jax.Array        # (B, H, K)
     step: jax.Array          # () int32
+    # Per-row f32 dequantization scales, (B, N+1) — only with int8 memory
+    # storage (mem_dtype="int8"); None otherwise (pytree unchanged).
+    mem_scale: Optional[jax.Array] = None
 
 
 class MemDeltas(NamedTuple):
@@ -51,9 +54,13 @@ class MemDeltas(NamedTuple):
     LM memory layer (indices recorded, touched rows' pre-write contents)."""
 
     write_idx: jax.Array     # (B, H·(K+1)) int32
-    old_rows: jax.Array      # (B, H·(K+1), W)
+    old_rows: jax.Array      # (B, H·(K+1), W) — raw storage dtype (int8
+    #                          rows record int8 bits: bit-exact rollback)
     lra: jax.Array           # (B, H) int32
     read_idx: jax.Array      # (B, H, K) int32
+    # Pre-write per-row scales of the touched rows, (B, H·(K+1)) f32 —
+    # recorded only under int8 storage (None otherwise).
+    old_scale: Optional[jax.Array] = None
 
 
 def memory_defs(cfg: ModelConfig):
@@ -70,29 +77,41 @@ def memory_defs(cfg: ModelConfig):
 def memory_state_shapes(cfg: ModelConfig, batch: int):
     m = cfg.memory
     rows = m.num_slots + SCRATCH_ROWS * mem_shard.default_shards(m.num_slots)
-    return {
+    shapes = {
         "memory": (batch, rows, m.word_size),
         "last_access": (batch, rows),
         "read_idx": (batch, m.num_heads, m.k),
         "read_w": (batch, m.num_heads, m.k),
     }
+    if m.mem_dtype == "int8":
+        shapes["mem_scale"] = (batch, rows)
+    return shapes
 
 
 def init_memory_state(cfg: ModelConfig, batch: int, *,
                       mem_shards: int = None) -> MemoryState:
     m = cfg.memory
-    memory, last_access = mem_shard.init_layout(
-        m.num_slots, mem_shards,
-        init_scratch_memory(batch, m.num_slots, m.word_size,
-                            dtype=jnp.dtype(getattr(m, "mem_dtype",
-                                                    "float32"))),
-        init_scratch_last_access(batch, m.num_slots))
+    mem_scale = None
+    if m.mem_dtype == "int8":
+        memory, last_access, mem_scale = mem_shard.init_layout(
+            m.num_slots, mem_shards,
+            init_scratch_memory(batch, m.num_slots, m.word_size,
+                                dtype=jnp.int8),
+            init_scratch_last_access(batch, m.num_slots),
+            init_scratch_mem_scale(batch, m.num_slots))
+    else:
+        memory, last_access = mem_shard.init_layout(
+            m.num_slots, mem_shards,
+            init_scratch_memory(batch, m.num_slots, m.word_size,
+                                dtype=jnp.dtype(m.mem_dtype)),
+            init_scratch_last_access(batch, m.num_slots))
     return MemoryState(
         memory=memory,
         last_access=last_access,
         read_idx=jnp.zeros((batch, m.num_heads, m.k), jnp.int32),
         read_w=jnp.zeros((batch, m.num_heads, m.k)),
         step=jnp.zeros((), jnp.int32),
+        mem_scale=mem_scale,
     )
 
 
@@ -119,7 +138,7 @@ def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState,
                   *, collect_deltas: bool = False):
     """One SAM read+write for a segment summary `pooled` (B, d).
 
-    Returns (read_out (B, d), new_state[, deltas])."""
+    Returns (new_state, read_out (B, d)[, deltas])."""
     m = cfg.memory
     B = pooled.shape[0]
     H, K = m.num_heads, m.k
@@ -134,12 +153,22 @@ def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState,
     lra = addr.least_recently_accessed(state.last_access, H, backend=be,
                                        valid_n=valid_n)
     widx_flat, ww_flat = _write_weights(cfg, state, lra, alpha, gamma)
-    old_rows = None
+    mem_scale = state.mem_scale
+    old_rows = old_scale = None
     if collect_deltas:
         old_rows = addr.gather_rows(state.memory, widx_flat)
-    memory, la = addr.sparse_write_update(
-        state.memory, state.last_access, widx_flat, ww_flat, a, lra, step,
-        m.delta, backend=be, scratch_row=lay.scratch_row)
+        if mem_scale is not None:
+            old_scale = addr.gather_scales(mem_scale, widx_flat)
+    if mem_scale is not None:
+        memory, la, mem_scale = addr.sparse_write_update(
+            state.memory, state.last_access, widx_flat, ww_flat, a, lra,
+            step, m.delta, backend=be, scratch_row=lay.scratch_row,
+            mem_scale=mem_scale)
+        mem_scale = shard(mem_scale, "batch", "mem_slots")
+    else:
+        memory, la = addr.sparse_write_update(
+            state.memory, state.last_access, widx_flat, ww_flat, a, lra,
+            step, m.delta, backend=be, scratch_row=lay.scratch_row)
     # Soft GSPMD constraint. Under the mesh-native path ("mesh" layout) the
     # slot dim is N + shards and the "mem_slots" rule shards it exactly;
     # otherwise the rule replicates (with a warning) — the old dynamically-
@@ -149,18 +178,19 @@ def memory_access(p, cfg: ModelConfig, pooled, state: MemoryState,
 
     # ---- sparse content read (§3.1) ----
     read = addr.sparse_read_exact(q, memory, beta, K, backend=be,
-                                  valid_n=valid_n)
+                                  valid_n=valid_n, mem_scale=mem_scale)
     la = addr.update_last_access(la, read.indices.reshape(B, -1),
                                  read.weights.reshape(B, -1), step, m.delta)
 
     out = jnp.einsum("bhw,hwd->bd", read.words, p["wr"])
     new_state = MemoryState(memory=memory, last_access=la,
                             read_idx=read.indices, read_w=read.weights,
-                            step=step)
+                            step=step, mem_scale=mem_scale)
     if collect_deltas:
         return new_state, out, MemDeltas(write_idx=widx_flat,
                                          old_rows=old_rows, lra=lra,
-                                         read_idx=read.indices)
+                                         read_idx=read.indices,
+                                         old_scale=old_scale)
     return new_state, out
 
 
@@ -178,24 +208,42 @@ def memory_replay(p, cfg: ModelConfig, pooled, state: MemoryState,
     N = m.num_slots
     scratch = mem_shard.memory_layout(N, state.memory.shape[1]).scratch_row
     Kp1 = m.k + 1
-    zeros = jnp.zeros((B, m.num_heads, state.memory.shape[-1]),
-                      state.memory.dtype)
-    memory = addr.scatter_set_rows(state.memory, deltas.lra, zeros, backend=be)
-    add_rows = ww_flat.reshape(B, m.num_heads, Kp1)[..., None] \
-        * a[:, :, None, :]
-    memory = addr.scatter_add_rows(memory, deltas.write_idx,
-                                   add_rows.reshape(B, -1, a.shape[-1]),
-                                   backend=be, scratch_row=scratch)
+    mem_scale = state.mem_scale
+    if mem_scale is not None:
+        # Int8 storage: the replay must round exactly once per touched row,
+        # like the forward's fused quantized write — run the *same* fused
+        # write against a throwaway usage table (step 0) instead of the
+        # erase/add scatter pair, which would re-quantize twice.
+        la_dummy = jnp.zeros(state.memory.shape[:2], jnp.int32)
+        memory, _, mem_scale = addr.sparse_write_update(
+            state.memory, la_dummy, deltas.write_idx, ww_flat, a,
+            deltas.lra, jnp.zeros((), jnp.int32), m.delta, backend=be,
+            scratch_row=scratch, mem_scale=mem_scale)
+        mem_scale = shard(mem_scale, "batch", "mem_slots")
+    else:
+        zeros = jnp.zeros((B, m.num_heads, state.memory.shape[-1]),
+                          state.memory.dtype)
+        memory = addr.scatter_set_rows(state.memory, deltas.lra, zeros,
+                                       backend=be)
+        add_rows = ww_flat.reshape(B, m.num_heads, Kp1)[..., None] \
+            * a[:, :, None, :]
+        memory = addr.scatter_add_rows(memory, deltas.write_idx,
+                                       add_rows.reshape(B, -1, a.shape[-1]),
+                                       backend=be, scratch_row=scratch)
     memory = shard(memory, "batch", "mem_slots", "mem_word")
 
     words = addr.gather_rows(memory, deltas.read_idx)            # (B,H,K,W)
+    words = words.astype(jnp.float32)
+    if mem_scale is not None:
+        words = words * addr.gather_scales(mem_scale,
+                                           deltas.read_idx)[..., None]
     sel = addr._rerank(q, words) * beta[..., None]
     rw = jax.nn.softmax(sel, axis=-1)
     r = jnp.einsum("bhk,bhkw->bhw", rw, words)
     out = jnp.einsum("bhw,hwd->bd", r, p["wr"])
     new_state = MemoryState(memory=memory, last_access=state.last_access,
                             read_idx=deltas.read_idx, read_w=rw,
-                            step=state.step + 1)
+                            step=state.step + 1, mem_scale=mem_scale)
     return new_state, out
 
 
@@ -224,12 +272,21 @@ class LMMemoryCell:
 
     def rollback(self, state: MemoryState, prev_small, deltas: MemDeltas):
         read_idx, read_w = prev_small
-        memory = addr.scatter_set_rows(state.memory, deltas.write_idx,
-                                       deltas.old_rows,
-                                       backend=self.cfg.memory.backend)
+        # Int8 storage: old_rows/old_scale hold the raw pre-write bits, so
+        # the 'set' restore is bit-exact.
+        mem_scale = state.mem_scale
+        if mem_scale is not None:
+            memory, mem_scale = addr.scatter_set_rows(
+                state.memory, deltas.write_idx, deltas.old_rows,
+                backend=self.cfg.memory.backend, mem_scale=mem_scale,
+                rows_scale=deltas.old_scale)
+        else:
+            memory = addr.scatter_set_rows(state.memory, deltas.write_idx,
+                                           deltas.old_rows,
+                                           backend=self.cfg.memory.backend)
         return MemoryState(memory=memory, last_access=state.last_access,
                            read_idx=read_idx, read_w=read_w,
-                           step=state.step - 1)
+                           step=state.step - 1, mem_scale=mem_scale)
 
     def replay_step(self, params, state, pooled, deltas: MemDeltas):
         return memory_replay(params, self.cfg, pooled, state, deltas)

@@ -1,0 +1,511 @@
+"""Int8 quantized memory rows (``mem_dtype="int8"``): the shared per-row
+symmetric quantizer, in-kernel dequant fused reads (forward + STE grads,
+exact and candidate modes, error bounded by the per-row scale), the
+quantized fused write, SAM-cell BPTT parity and bit-exact rollback, the LM
+memory layer, SDNC dtype handling, checkpoint mem-dtype migration and
+cross-mesh re-layout, SessionStore bit-exact evict/restore, and the
+structural no-extra-kernel-launches guard.
+
+The forced-8-device mesh lane for int8 (sharded parity + mesh session
+round-trip) lives in tests/test_mesh_parity.py with the rest of the mesh
+suite, driven by tests/test_sharding_optim.py.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core import addressing as addr
+from repro.core import dnc as dnc_lib
+from repro.core import sam as sam_lib
+from repro.core import unroll as unroll_lib
+from repro.core.cell import SAMCell, SDNCCell
+from repro.core.quant import SCALE_DTYPE, dequantize_rows, quantize_rows
+from repro.core.types import ControllerConfig, MemoryConfig
+from repro.kernels import ops
+from repro.kernels.introspect import count_primitives
+from repro.launch.engine.sessions import SessionStore
+from repro.models import sam_layer
+from repro.models.config import MemoryLayerConfig, ModelConfig
+
+BACKENDS = ["ref", "pallas-interpret"]
+
+
+# --------------------------------------------------------------------------
+# Quantizer invariants (core/quant.py)
+# --------------------------------------------------------------------------
+
+def _rows(key, shape=(3, 5, 16), zero_row=True):
+    x = np.array(jax.random.normal(key, shape), np.float32)
+    if zero_row:
+        x[..., 0, :] = 0.0            # exercise the exact-zero invariant
+    return jnp.asarray(x)
+
+
+def test_quantize_error_bound(rng_key):
+    x = _rows(rng_key) * 7.3
+    q, s = quantize_rows(x)
+    assert q.dtype == jnp.int8 and s.dtype == SCALE_DTYPE
+    err = np.abs(np.asarray(dequantize_rows(q, s)) - np.asarray(x))
+    bound = np.asarray(s)[..., None] / 2 + 1e-7
+    assert (err <= bound).all()
+    # scale is exactly max|row| / 127
+    np.testing.assert_array_equal(
+        np.asarray(s), np.max(np.abs(np.asarray(x)), -1) / np.float32(127))
+
+
+def test_quantize_roundtrip_is_identity(rng_key):
+    """`quantize_rows` always emits max|q| = 127 (or an all-zero row), so
+    requantizing its own dequantized output is bit-identical — the
+    property that keeps non-owning shards and zero-add scatter passes
+    from drifting the stored bits."""
+    q, s = quantize_rows(_rows(rng_key))
+    q2, s2 = quantize_rows(dequantize_rows(q, s))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s2))
+
+
+def test_exact_zero_invariant(rng_key):
+    q, s = quantize_rows(jnp.zeros((2, 4, 8)))
+    np.testing.assert_array_equal(np.asarray(s), 0.0)
+    np.testing.assert_array_equal(np.asarray(dequantize_rows(q, s)), 0.0)
+
+
+def test_ckpt_numpy_twin_matches_jax_quantizer(rng_key):
+    x = np.array(jax.random.normal(rng_key, (6, 16)), np.float32)
+    x[2] = 0.0
+    qn, sn = ckpt._np_quantize_rows(x)
+    qj, sj = quantize_rows(jnp.asarray(x))
+    np.testing.assert_array_equal(qn, np.asarray(qj))
+    np.testing.assert_array_equal(sn, np.asarray(sj))
+    np.testing.assert_array_equal(ckpt._np_dequantize_rows(qn, sn),
+                                  np.asarray(dequantize_rows(qj, sj)))
+
+
+# --------------------------------------------------------------------------
+# Fused read: in-kernel dequant parity (forward + STE gradients)
+# --------------------------------------------------------------------------
+
+def _read_case(key, B=2, H=3, N=64, W=16):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, W))
+    memf = jax.random.normal(ks[1], (B, N, W)) * 3.0
+    beta = jax.random.uniform(ks[2], (B, H), minval=1.0, maxval=3.0)
+    mem8, scale = quantize_rows(memf)
+    return q, memf, mem8, scale, beta
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_int8_exact_read_matches_dequantized_f32(backend):
+    """The in-kernel dequant read equals the f32 read of the dequantized
+    buffer (cosine ranking is invariant to the positive per-row scale, so
+    selection is identical; the tail sees identical values)."""
+    q, _, mem8, scale, beta = _read_case(jax.random.PRNGKey(0))
+    r8, w8, i8 = ops.fused_read(q, mem8, beta, 4, backend=backend,
+                                mem_scale=scale)
+    deq = dequantize_rows(mem8, scale)
+    rf, wf, if_ = ops.fused_read(q, deq, beta, 4, backend=backend)
+    np.testing.assert_array_equal(np.asarray(i8), np.asarray(if_))
+    np.testing.assert_allclose(np.asarray(w8), np.asarray(wf), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r8), np.asarray(rf), atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_int8_read_within_scale_bound_of_f32(backend):
+    """Row-norm-scaled parity with the unquantized read: the read word is
+    a convex combination of rows each within scale_i/2 per element, so
+    the error is bounded by the largest per-row scale (= max|row|/127)."""
+    q, memf, mem8, scale, beta = _read_case(jax.random.PRNGKey(1))
+    r8, _, _ = ops.fused_read(q, mem8, beta, 4, backend=backend,
+                              mem_scale=scale)
+    rf, _, _ = ops.fused_read(q, memf, beta, 4, backend=backend)
+    tol = float(np.max(np.asarray(scale)))
+    np.testing.assert_allclose(np.asarray(r8), np.asarray(rf), atol=tol)
+
+
+def test_int8_read_grads_match_ref_oracle():
+    """STE gradients: the Pallas custom VJP (backward re-runs the jnp
+    oracle) matches plain autodiff through the ref backend for every
+    float input — q, beta, and the f32 mem_scale (the magnitude channel
+    the int8 memory trains through)."""
+    q, _, mem8, scale, beta = _read_case(jax.random.PRNGKey(2))
+    tr = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 16))
+
+    def loss(q, beta, scale, backend):
+        r, w, _ = ops.fused_read(q, mem8, beta, 4, backend=backend,
+                                 mem_scale=scale)
+        return jnp.sum(r * tr) + jnp.sum(w ** 2)
+
+    g_ref = jax.grad(loss, argnums=(0, 1, 2))(q, beta, scale, "ref")
+    g_pal = jax.grad(loss, argnums=(0, 1, 2))(q, beta, scale,
+                                              "pallas-interpret")
+    for a, b in zip(g_ref, g_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert all(np.isfinite(np.asarray(g)).all() for g in g_ref)
+    assert float(jnp.abs(g_ref[2]).sum()) > 0    # scale channel is live
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_int8_candidate_read_with_duplicates(backend):
+    """LSH-candidate mode: duplicate and invalid (-1) candidates under
+    int8 storage behave exactly like the f32 read of the dequantized
+    buffer — duplicates deduped, invalid slots zero-weighted."""
+    q, _, mem8, scale, beta = _read_case(jax.random.PRNGKey(4))
+    cand = jnp.array([[[3, 3, 7, -1, 9, 12], [5, 5, 5, 2, -1, 1],
+                       [0, 1, 2, 3, 4, 5]]] * 2, jnp.int32)
+    r8, w8, i8 = ops.fused_read(q, mem8, beta, 4, cand_idx=cand,
+                                backend=backend, mem_scale=scale)
+    deq = dequantize_rows(mem8, scale)
+    rf, wf, if_ = ops.fused_read(q, deq, beta, 4, cand_idx=cand,
+                                 backend=backend)
+    np.testing.assert_array_equal(np.asarray(i8), np.asarray(if_))
+    np.testing.assert_allclose(np.asarray(w8), np.asarray(wf), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r8), np.asarray(rf), atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_zero_memory_reads_exact_zero(backend):
+    """Exact-zero invariant end to end: all-zero rows carry scale 0, the
+    fused read returns exactly 0.0, and no gradient flows into the scale
+    (the dequantized rows are identically zero)."""
+    B, H, N, W = 2, 2, 32, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, W))
+    mem8, scale = quantize_rows(jnp.zeros((B, N, W)))
+    beta = jnp.ones((B, H))
+
+    def loss(q, scale):
+        r, _, _ = ops.fused_read(q, mem8, beta, 4, backend=backend,
+                                 mem_scale=scale)
+        return jnp.abs(r).sum()
+
+    val, (gq, gs) = jax.value_and_grad(loss, argnums=(0, 1))(q, scale)
+    assert float(val) == 0.0
+    np.testing.assert_array_equal(np.asarray(gs), 0.0)
+
+
+# --------------------------------------------------------------------------
+# Structural guard: in-kernel dequant stages no extra kernel launches
+# --------------------------------------------------------------------------
+
+def test_int8_read_is_still_one_dispatch():
+    q, _, mem8, scale, beta = _read_case(jax.random.PRNGKey(5))
+    deq = dequantize_rows(mem8, scale)
+    c8 = count_primitives(
+        lambda: ops.fused_read(q, mem8, beta, 4, backend="pallas",
+                               mem_scale=scale))
+    cf = count_primitives(
+        lambda: ops.fused_read(q, deq, beta, 4, backend="pallas"))
+    assert c8["pallas_call"] == cf["pallas_call"] == 1
+    assert c8["top_k"] == c8["sort"] == 0
+    cand = jnp.zeros((2, 3, 6), jnp.int32)
+    c8c = count_primitives(
+        lambda: ops.fused_read(q, mem8, beta, 4, cand_idx=cand,
+                               backend="pallas", mem_scale=scale))
+    assert c8c["pallas_call"] == 1
+
+
+def test_int8_write_is_still_one_dispatch():
+    B, N, W, H, K = 2, 64, 16, 2, 2
+    J = H * (K + 1)
+    memf = jax.random.normal(jax.random.PRNGKey(0), (B, N + 1, W))
+    mem8, scale = quantize_rows(memf)
+    la = jnp.zeros((B, N + 1), jnp.int32)
+    widx = jax.random.randint(jax.random.PRNGKey(1), (B, J), 0, N)
+    lra = widx.reshape(B, H, K + 1)[..., -1]
+    ww = jax.random.uniform(jax.random.PRNGKey(2), (B, J))
+    a = jax.random.normal(jax.random.PRNGKey(3), (B, H, W))
+
+    def write(mem_scale):
+        return ops.sparse_write_update(mem8, la, widx, ww, a, lra,
+                                       jnp.int32(1), delta=0.005,
+                                       backend="pallas", scratch_row=N,
+                                       mem_scale=mem_scale)
+
+    c8 = count_primitives(write, scale)
+    cf = count_primitives(
+        lambda: ops.sparse_write_update(memf, la, widx, ww, a, lra,
+                                        jnp.int32(1), delta=0.005,
+                                        backend="pallas", scratch_row=N))
+    assert c8["pallas_call"] == cf["pallas_call"] == 1
+
+
+# --------------------------------------------------------------------------
+# SAM cell: BPTT parity and bit-exact rollback
+# --------------------------------------------------------------------------
+
+N, W, H, K, B, T, D = 32, 16, 2, 2, 2, 4, 6
+CTL = ControllerConfig(D, 16, D)
+
+
+def _sam_cell(ann, backend):
+    mem = MemoryConfig(num_slots=N, word_size=W, num_heads=H, k=K, ann=ann,
+                       mem_dtype="int8", backend=backend,
+                       lsh_tables=2, lsh_bits=3, lsh_bucket_size=8)
+    return SAMCell(sam_lib.SAMConfig(mem, CTL))
+
+
+def _unroll_loss(cell, params, state, mode, chunk=None):
+    xs = jax.random.normal(jax.random.PRNGKey(1), (T, B, D))
+    st, ys = unroll_lib.unroll(cell, params, state, xs, mode=mode,
+                               chunk=chunk)
+    return (ys ** 2).sum(), st
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("ann", ["exact", "lsh"])
+def test_sam_int8_sparse_bptt_matches_naive(ann, backend):
+    cell = _sam_cell(ann, backend)
+    params = cell.init_params(jax.random.PRNGKey(0))
+    state = cell.init_state(B)
+    assert state.memory.dtype == jnp.int8
+    assert state.mem_scale.dtype == SCALE_DTYPE
+
+    def run(mode, chunk=None):
+        return jax.value_and_grad(
+            lambda p: _unroll_loss(cell, p, cell.init_state(B), mode,
+                                   chunk)[0])(params)
+
+    ln, gn = run("naive")
+    for mode, chunk in [("sparse", None), ("chunked", 2)]:
+        ls, gs = run(mode, chunk)
+        np.testing.assert_allclose(float(ln), float(ls), atol=1e-5)
+        for a, b in zip(jax.tree.leaves(gn), jax.tree.leaves(gs)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sam_int8_rollback_bit_exact(backend):
+    """§3.4 rollback under int8 storage: old_rows record the raw int8
+    bits and old_scale the pre-write scales, so rolling back restores the
+    logical rows *bit-exactly* — integer equality, not a tolerance."""
+    cell = _sam_cell("exact", backend)
+    params = cell.init_params(jax.random.PRNGKey(0))
+    s0 = cell.init_state(B)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+    # Two steps so the memory is non-trivial before the rolled-back step.
+    s1, _, _ = sam_lib.sam_step(params, cell.cfg, s0, x,
+                                collect_deltas=True)
+    s2, _, d2 = sam_lib.sam_step(params, cell.cfg, s1, x * 0.5,
+                                 collect_deltas=True)
+    assert d2.old_rows.dtype == jnp.int8
+    assert d2.old_scale is not None
+    back = cell.rollback(s2, cell.residual_state(s1), d2)
+    np.testing.assert_array_equal(np.asarray(back.memory[:, :N]),
+                                  np.asarray(s1.memory[:, :N]))
+    np.testing.assert_array_equal(np.asarray(back.mem_scale[:, :N]),
+                                  np.asarray(s1.mem_scale[:, :N]))
+
+
+# --------------------------------------------------------------------------
+# LM memory layer (models/sam_layer.py)
+# --------------------------------------------------------------------------
+
+def _lm_cfg(mem_dtype, backend="ref", unroll_mode="sparse"):
+    return ModelConfig(
+        name="t", num_layers=2, d_model=16, num_heads=2, num_kv_heads=2,
+        d_ff=32, vocab_size=64,
+        memory=MemoryLayerConfig(num_slots=N, word_size=8, num_heads=2,
+                                 k=2, segment=4, backend=backend,
+                                 mem_dtype=mem_dtype,
+                                 unroll_mode=unroll_mode))
+
+
+def test_lm_memory_state_is_first_class_mem_dtype():
+    """Satellite: `mem_dtype` is read directly off the config (no getattr
+    fallback) and honored for every storage dtype."""
+    for dt, want in [("float32", jnp.float32), ("bfloat16", jnp.bfloat16),
+                     ("int8", jnp.int8)]:
+        st = sam_layer.init_memory_state(_lm_cfg(dt), B)
+        assert st.memory.dtype == want, dt
+    st = sam_layer.init_memory_state(_lm_cfg("int8"), B)
+    assert st.mem_scale is not None and st.mem_scale.dtype == SCALE_DTYPE
+    shapes = sam_layer.memory_state_shapes(_lm_cfg("int8"), B)
+    assert shapes["mem_scale"] == shapes["last_access"]
+    assert "mem_scale" not in sam_layer.memory_state_shapes(
+        _lm_cfg("float32"), B)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lm_int8_sparse_unroll_matches_naive(backend):
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 16, 16))
+    cell = sam_layer.LMMemoryCell(_lm_cfg("int8", backend))
+    p = cell.init_params(jax.random.PRNGKey(0))
+
+    def loss(p, mode):
+        c = _lm_cfg("int8", backend, mode)
+        y, _ = sam_layer.memory_layer_seq(
+            p, c, x, sam_layer.init_memory_state(c, B))
+        return (y ** 2).mean()
+
+    ln, gn = jax.value_and_grad(lambda p: loss(p, "naive"))(p)
+    ls, gs = jax.value_and_grad(lambda p: loss(p, "sparse"))(p)
+    np.testing.assert_allclose(float(ln), float(ls), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(gn), jax.tree.leaves(gs)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# SDNC: first-class mem_dtype (satellite), int8 explicitly rejected
+# --------------------------------------------------------------------------
+
+def _sdnc_cfg(mem_dtype):
+    mem = MemoryConfig(num_slots=N, word_size=W, num_heads=H, k=K,
+                       mem_dtype=mem_dtype)
+    return dnc_lib.DNCConfig(mem, CTL, k_l=4, sparse=True)
+
+
+def test_sdnc_honors_bf16_mem_dtype(rng_key):
+    cell = SDNCCell(_sdnc_cfg("bfloat16"))
+    params = cell.init_params(rng_key)
+    state = cell.init_state(B)
+    assert state.memory.dtype == jnp.bfloat16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+    st, y = cell.step(params, state, x)
+    assert st.memory.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_sdnc_rejects_int8():
+    with pytest.raises(ValueError, match="int8"):
+        SDNCCell(_sdnc_cfg("int8")).init_state(B)
+
+
+# --------------------------------------------------------------------------
+# Checkpoint: mem-dtype migration + cross-mesh re-layout
+# --------------------------------------------------------------------------
+
+def _filled_lm_state(cfg, key):
+    st = sam_layer.init_memory_state(cfg, B)
+    memf = jax.random.normal(key, st.memory.shape)
+    if cfg.memory.mem_dtype == "int8":
+        q, s = quantize_rows(memf)
+        return st._replace(memory=q, mem_scale=s)
+    return st._replace(memory=memf.astype(st.memory.dtype))
+
+
+def test_ckpt_float_to_int8_migration(rng_key, tmp_path):
+    st32 = _filled_lm_state(_lm_cfg("float32"), rng_key)
+    tmpl8 = sam_layer.init_memory_state(_lm_cfg("int8"), B)
+    ckpt.save_checkpoint(str(tmp_path), 0, st32._asdict(), mem_layout=(N, 1))
+    r8, _ = ckpt.restore_checkpoint(str(tmp_path), tmpl8._asdict(),
+                                    expect_num_slots=N)
+    q, s = quantize_rows(st32.memory)
+    np.testing.assert_array_equal(np.asarray(r8["memory"]), np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(r8["mem_scale"]),
+                                  np.asarray(s))
+
+
+def test_ckpt_int8_round_trips_through_float(rng_key, tmp_path):
+    """f32 → int8 → f32 → int8: the second quantization is the identity
+    (round-trip property), so the int8 bits and scales survive a detour
+    through a float checkpoint unchanged."""
+    st8 = _filled_lm_state(_lm_cfg("int8"), rng_key)
+    tmpl32 = sam_layer.init_memory_state(_lm_cfg("float32"), B)
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    ckpt.save_checkpoint(d1, 0, st8._asdict(), mem_layout=(N, 1))
+    r32, _ = ckpt.restore_checkpoint(d1, tmpl32._asdict(),
+                                     expect_num_slots=N)
+    assert r32["memory"].dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(r32["memory"]),
+        np.asarray(dequantize_rows(st8.memory, st8.mem_scale)))
+    ckpt.save_checkpoint(d2, 0, r32, mem_layout=(N, 1))
+    tmpl8 = sam_layer.init_memory_state(_lm_cfg("int8"), B)
+    back, _ = ckpt.restore_checkpoint(d2, tmpl8._asdict(),
+                                      expect_num_slots=N)
+    np.testing.assert_array_equal(np.asarray(back["memory"]),
+                                  np.asarray(st8.memory))
+    np.testing.assert_array_equal(np.asarray(back["mem_scale"]),
+                                  np.asarray(st8.mem_scale))
+
+
+def test_ckpt_int8_cross_mesh_relayout(rng_key, tmp_path):
+    """An int8 checkpoint saved in the canonical layout restores into an
+    8-shard slot layout (and back), the int8 bits and f32 scales moving
+    together — host-side np_relayout, no devices needed."""
+    st8 = _filled_lm_state(_lm_cfg("int8"), rng_key)
+    ckpt.save_checkpoint(str(tmp_path), 0, st8._asdict(), mem_layout=(N, 1))
+    tmpl = {k: jax.ShapeDtypeStruct(
+        (v.shape[0], N + 8) + v.shape[2:], v.dtype)
+        if k in ("memory", "last_access", "mem_scale") else v
+        for k, v in st8._asdict().items()}
+    r, _ = ckpt.restore_checkpoint(str(tmp_path), tmpl, expect_num_slots=N)
+    from repro.distributed.mem_shard import np_relayout
+    for k in ("memory", "mem_scale", "last_access"):
+        got_back = np_relayout(np.asarray(r[k]), N, 8, 1)[:, :N]
+        np.testing.assert_array_equal(got_back,
+                                      np.asarray(st8._asdict()[k])[:, :N])
+
+
+# --------------------------------------------------------------------------
+# SessionStore: bit-exact int8 evict/restore (single-device lane)
+# --------------------------------------------------------------------------
+
+def test_session_store_int8_bit_exact(rng_key, tmp_path):
+    st = _filled_lm_state(_lm_cfg("int8"), rng_key)
+    store = SessionStore(num_slots=N, capacity=1, spill_dir=str(tmp_path))
+    store.put("u1", st._asdict())
+    store.put("u2", st._asdict())          # evicts u1 to disk
+    assert store.spills == 1
+    for user in ("u1", "u2"):              # u1 spilled, u2 hot
+        back = store.take(user)
+        for k, v in st._asdict().items():
+            np.testing.assert_array_equal(np.asarray(back[k]),
+                                          np.asarray(v), err_msg=k)
+        assert back["memory"].dtype == np.int8
+
+
+def test_decode_sessions_int8_bit_exact_resume(rng_key, tmp_path):
+    """Serving-shaped end-to-end: decode a few memory steps, evict the
+    session through the store (spill + restore), continue — the
+    continuation matches the uninterrupted run bit-exactly on the int8
+    memory bits, scales, and usage table."""
+    cfg = _lm_cfg("int8")
+    cell = sam_layer.LMMemoryCell(cfg)
+    p = cell.init_params(rng_key)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (6, B, 16))
+
+    def advance(state, lo, hi):
+        for t in range(lo, hi):
+            state, _ = sam_layer.memory_access(p, cfg, xs[t], state)
+        return state
+
+    full = advance(sam_layer.init_memory_state(cfg, B), 0, 6)
+    half = advance(sam_layer.init_memory_state(cfg, B), 0, 3)
+    store = SessionStore(num_slots=cfg.memory.num_slots, capacity=1,
+                         spill_dir=str(tmp_path))
+    store.put("u", jax.tree.map(np.asarray, half._asdict()))
+    store.put("other", {"x": np.zeros(3)})       # force the spill of "u"
+    assert store.spills == 1
+    back = sam_layer.MemoryState(**{
+        k: None if v is None else jnp.asarray(v)
+        for k, v in store.take("u").items()})
+    resumed = advance(back, 3, 6)
+    np.testing.assert_array_equal(np.asarray(resumed.memory),
+                                  np.asarray(full.memory))
+    np.testing.assert_array_equal(np.asarray(resumed.mem_scale),
+                                  np.asarray(full.mem_scale))
+    np.testing.assert_array_equal(np.asarray(resumed.last_access),
+                                  np.asarray(full.last_access))
+
+
+# --------------------------------------------------------------------------
+# Compression shares the quantizer (satellite)
+# --------------------------------------------------------------------------
+
+def test_compression_uses_shared_quantizer(rng_key):
+    from repro.distributed import compression
+    g = jax.random.normal(rng_key, (300,)) * 0.01
+    q, scale = compression.quantize_int8(g)
+    assert q.dtype == jnp.int8 and scale.dtype == SCALE_DTYPE
+    back = compression.dequantize_int8(q, scale, g.shape)
+    err = np.abs(np.asarray(back) - np.asarray(g))
+    assert err.max() <= float(np.asarray(scale).max()) / 2 + 1e-8
+    # all-zero gradient blocks round-trip to exact zero (no epsilon floor)
+    np.testing.assert_array_equal(
+        np.asarray(compression.int8_roundtrip(jnp.zeros((300,)))), 0.0)

@@ -18,7 +18,10 @@ These tests need 8 devices; the tier-1 driver in tests/test_sharding_optim.py
     a single device, bit-exact on the logical rows; the LSH index
     re-partitions with its per-bucket candidate sets preserved;
   * the streaming trainer under a mesh reproduces the single-device loss
-    trajectory exactly.
+    trajectory exactly;
+  * int8 quantized memory (mem_dtype="int8") on the mesh: sharded parity
+    with bit-exact stored rows, and a mesh session spilled through the
+    serving SessionStore restores bit-identically (docs/memory-model.md).
 """
 import functools
 import os
@@ -64,6 +67,7 @@ def _mesh24():
 def _cell(kind: str):
     mem = MemoryConfig(num_slots=N, word_size=W, num_heads=H, k=K,
                        ann="lsh" if kind.endswith("_lsh") else "exact",
+                       mem_dtype="int8" if "int8" in kind else "float32",
                        lsh_tables=2, lsh_bits=3, lsh_bucket_size=8)
     if kind.startswith("sdnc"):
         return SDNCCell(dnc_lib.DNCConfig(mem, CTL, k_l=4, sparse=True))
@@ -119,7 +123,8 @@ def _assert_state_matches(canon, ref):
 MODES = [("naive", None), ("sparse", None), ("chunked", 3)]
 
 
-@pytest.mark.parametrize("kind", ["sam", "sdnc", "sam_lsh", "sdnc_lsh"])
+@pytest.mark.parametrize("kind", ["sam", "sdnc", "sam_lsh", "sdnc_lsh",
+                                  "sam_int8", "sam_int8_lsh"])
 @pytest.mark.parametrize("mode,chunk", MODES, ids=[m for m, _ in MODES])
 def test_forward_grad_bptt_parity(kind, mode, chunk):
     """SAM and SDNC, exact and LSH reads: the mesh run (memory slot-sharded,
@@ -127,7 +132,10 @@ def test_forward_grad_bptt_parity(kind, mode, chunk):
     reference at 1e-5 on outputs, final state, and gradients — the LSH
     kinds additionally assert the final ANN index (buckets *and* cursors)
     bit-exactly, which pins the collective-free sharded insert to the
-    canonical partitioned insert."""
+    canonical partitioned insert. The int8 kinds run the quantized storage
+    path on the mesh: the int8 memory leaf is integer, so the state
+    comparison is *bit-exact* on the stored rows (and the f32 mem_scale
+    column shards/compares alongside them)."""
     cell = _cell(kind)
     params, ref_st, ref_ys, ref_g = _reference(kind, mode, chunk)
     with mem_shard.memory_mesh(_mesh8(), N):
@@ -338,6 +346,40 @@ def test_checkpoint_ann_index_relayout(tmp_path):
     s1 = r1["carry"]
     s1, _ = sam_lib.sam_step(params, cfg, s1, _xs()[0])
     assert bool(jnp.isfinite(s1.read.words).all())
+
+
+# --------------------------------------------------------------------------
+# Serving sessions: int8 memory evicts/restores bit-exactly off a mesh
+# --------------------------------------------------------------------------
+
+def test_session_store_int8_mesh_roundtrip(tmp_path):
+    """A mesh-sharded int8 session spilled through the SessionStore (which
+    canonicalizes to shards=1 on `put`) restores bit-identically to the
+    canonical form of the live state: the int8 row bits, the f32 mem_scale
+    column, and the usage table move through relayout/spill/restore with
+    no de/re-quantization anywhere."""
+    from repro.launch.engine.sessions import SessionStore
+    cell = _cell("sam_int8")
+    params = cell.init_params(jax.random.PRNGKey(0))
+    with mem_shard.memory_mesh(_mesh8(), N):
+        state = mem_shard.place_state(_init_state(cell, "sam_int8"))
+        step = jax.jit(functools.partial(sam_lib.sam_step, params, cell.cfg))
+        for x in _xs():
+            state, _ = step(state, x)
+        assert state.memory.dtype == jnp.int8
+        canon = mem_shard.from_shard_state(state)
+        store = SessionStore(num_slots=N, capacity=1,
+                             spill_dir=str(tmp_path))
+        store.put("u", state._asdict())
+        store.put("v", {"x": np.zeros(2)})     # force "u" onto disk
+        assert store.spills == 1
+        back = store.take("u")
+    for got, want in zip(jax.tree.leaves(back),
+                         jax.tree.leaves(canon._asdict())):
+        g, w = np.asarray(got), np.asarray(want)
+        if g.ndim >= 2 and g.shape[1] == N + 1:
+            g, w = g[:, :N], w[:, :N]
+        np.testing.assert_array_equal(g, w)
 
 
 # --------------------------------------------------------------------------
