@@ -10,10 +10,13 @@ is a distinct user with a random prompt; a fraction of users return for a
 second request, exercising the persistent-session path (evict → session
 store → restore) under load.
 
-Two lanes: single-device, and a forced-8-host-device mesh running the
-mesh-native slot-sharded memory path (the arch is SAM-augmented, so every
-decode step drives a sparse memory read+write per group). Results append
-to ``experiments/bench/BENCH_serve.json``.
+Lanes: single-device; a forced-8-host-device mesh running the mesh-native
+slot-sharded memory path (the arch is SAM-augmented, so every decode step
+drives a sparse memory read+write per group); and a replica-count sweep —
+fixed per-replica lane count, offered load scaled with the replica count —
+recording tok/s and p50/p99 vs replicas (the multi-replica scheduler with
+session-to-replica affinity). Results append to
+``experiments/bench/BENCH_serve.json``.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
 """
@@ -61,11 +64,13 @@ def make_workload(cfg, *, requests: int, rate_hz: float, prompt_len: int,
     return out
 
 
-def run_lane(cfg, workload, *, lanes: int, max_len: int, mesh=None) -> dict:
+def run_lane(cfg, workload, *, lanes: int, max_len: int, mesh=None,
+             replicas: int = None) -> dict:
     """Serve `workload` open-loop and return the lane's metrics."""
     from repro.launch.engine import ServeEngine
 
-    with ServeEngine(cfg, lanes=lanes, max_len=max_len, mesh=mesh) as eng:
+    with ServeEngine(cfg, lanes=lanes, max_len=max_len, mesh=mesh,
+                     replicas=replicas) as eng:
         # Warm the jit caches off the clock: one throwaway request.
         from repro.launch.engine import Request
         eng.run([Request(user="__warmup__", prompt=[1], max_new_tokens=1)])
@@ -152,9 +157,30 @@ def main(argv=None):
                        mesh=mesh)
         rec.update(lane=name, arch=args.arch, lanes=args.lanes,
                    backend=backend, rate_hz=rate, prompt_len=prompt_len,
-                   gen_len=gen_len, smoke=bool(args.smoke))
+                   gen_len=gen_len, smoke=bool(args.smoke),
+                   replicas=1, lanes_per_replica=args.lanes)
         records.append(rec)
         row(f"serve/{name}", rec["latency_p50_ms"] * 1e3,
+            f"{rec['tok_per_s']:.1f}tok/s p99={rec['latency_p99_ms']:.0f}ms")
+
+    # Replica scaling: fixed per-replica lane count, offered load scaled
+    # with the replica count — what a multi-replica deployment sees when a
+    # replica joins (throughput should scale, tails should hold). Replicas
+    # are host-side lane pools (scheduler affinity), so the sweep runs on
+    # any device count.
+    for replicas in ([1, 2] if args.smoke else [1, 2, 4]):
+        workload = make_workload(cfg, requests=requests * replicas,
+                                 rate_hz=rate * replicas,
+                                 prompt_len=prompt_len, gen_len=gen_len)
+        rec = run_lane(cfg, workload, lanes=args.lanes * replicas,
+                       max_len=max_len, replicas=replicas)
+        rec.update(lane=f"replicas{replicas}", arch=args.arch,
+                   lanes=args.lanes * replicas, backend=backend,
+                   rate_hz=rate * replicas, prompt_len=prompt_len,
+                   gen_len=gen_len, smoke=bool(args.smoke),
+                   replicas=replicas, lanes_per_replica=args.lanes)
+        records.append(rec)
+        row(f"serve/replicas{replicas}", rec["latency_p50_ms"] * 1e3,
             f"{rec['tok_per_s']:.1f}tok/s p99={rec['latency_p99_ms']:.0f}ms")
 
     os.makedirs("experiments/bench", exist_ok=True)

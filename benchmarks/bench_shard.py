@@ -17,6 +17,14 @@ O(C·W) candidate rows per step), per-device bucket-table bytes must drop
 by exactly the shard factor vs the replicated control, and `ann_build` on
 a sharded buffer must compile with no O(N·W) all-gather.
 
+The 2D (data × model) lanes compose batch sharding with slot sharding on
+meshes carved from the same 8 forced devices: per-device collective bytes
+must stay flat in N *and* in global B (growing the batch along the data
+axis is free per device), every collective in the compiled step must group
+on the model axis only — ``collective_groups`` proves zero data-axis
+traffic on the memory path — and a replicated-batch control on the same
+2D mesh must pay ~data× more per device.
+
 All properties are asserted here and recorded to
 ``experiments/bench/BENCH_shard.json``.
 
@@ -45,7 +53,7 @@ from benchmarks.common import row
 from repro.core import sam as sam_lib
 from repro.core.types import ControllerConfig, MemoryConfig
 from repro.distributed import mem_shard
-from repro.launch.hlo_cost import HloCostModel
+from repro.launch.hlo_cost import HloCostModel, collective_groups
 
 OUT_DIR = "experiments/bench"
 OUT_PATH = os.path.join(OUT_DIR, "BENCH_shard.json")
@@ -133,6 +141,52 @@ def compile_lsh_build(mesh, num_slots: int) -> dict:
         hlo = build.lower(planes, state.memory).compile().as_text()
     rec = _collective_record(hlo)
     rec.update(path="lsh_build", N=num_slots)
+    return rec
+
+
+def _submesh(shape: tuple) -> jax.sharding.Mesh:
+    """A ("data", "model") mesh over the first prod(shape) devices — lets
+    one forced-8-device process carve both a (1,4) and a (2,4) mesh so the
+    2D lanes compare per-device traffic at equal model degree."""
+    import numpy as np
+    n = shape[0] * shape[1]
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:n]).reshape(shape), ("data", "model"))
+
+
+def compile_mesh_step_2d(mesh, num_slots: int, global_b: int, *,
+                         data_parallel: bool = True) -> dict:
+    """One `sam_step` compile on a 2D (data × model) mesh.
+
+    ``data_parallel=True`` composes batch sharding with slot sharding:
+    every state leaf lands (B over "data", rows over "model"), the input
+    batch-sharded to match, so the compiled per-device program sees
+    B_local = B/data rows and its collectives group on the model axis
+    only. ``data_parallel=False`` is the positive control: the same mesh
+    and the same global batch, but memory_mesh built with ``data_axes=()``
+    so the batch replicates across the data axis — every device pays the
+    full-B score all-gather, ~data× the per-device bytes."""
+    cfg = _cfg(num_slots)
+    data_axes = ("pod", "data") if data_parallel else ()
+    with mem_shard.memory_mesh(mesh, num_slots, data_axes=data_axes):
+        ctx = mem_shard.current()
+        params = sam_lib.init_params(jax.random.PRNGKey(0), cfg)
+        state = mem_shard.place_state(sam_lib.init_state(global_b, cfg))
+        xspec = P("data") if ctx.data_degree > 1 else P()
+        x = jax.device_put(jnp.zeros((global_b, D)),
+                           NamedSharding(mesh, xspec))
+        step = jax.jit(lambda p, s, x: sam_lib.sam_step(p, cfg, s, x))
+        hlo = step.lower(params, state, x).compile().as_text()
+    rec = _collective_record(hlo)
+    groups = collective_groups(hlo)
+    rec.update(
+        path=("mesh2d" if data_parallel else "mesh2d_replicated"),
+        N=num_slots, B=global_b,
+        data=int(mesh.shape["data"]), model=int(mesh.shape["model"]),
+        data_degree=ctx.data_degree,
+        collective_group_sizes=sorted(
+            {g["group_size"] for g in groups},
+            key=lambda s: (s is None, s if s is not None else 0)))
     return rec
 
 
@@ -235,6 +289,55 @@ def main(argv=None):
         assert big < buf / 8, \
             f"ann_build on a sharded buffer moves a {big}B collective " \
             f"(buffer {buf}B)"
+
+    # --- 2D (data × model) composition ------------------------------------
+    # Same model degree (4) on both meshes so the per-device comparison is
+    # apples-to-apples: (1,4) serves B=2, (2,4) serves global B=4 with
+    # B_local=2 per data shard.
+    model2d = 4
+    mesh14, mesh24 = _submesh((1, model2d)), _submesh((2, model2d))
+    for n in sizes:
+        for rec in (compile_mesh_step_2d(mesh14, n, B),
+                    compile_mesh_step_2d(mesh24, n, 2 * B),
+                    compile_mesh_step_2d(mesh24, n, 2 * B,
+                                         data_parallel=False)):
+            results.append(rec)
+            row(f"shard/{rec['path']}/N={n}/B={rec['B']}/data={rec['data']}",
+                0.0, f"{rec['bytes_total']:.0f}B collective, groups "
+                f"{rec['collective_group_sizes']}")
+    by2 = {(r["path"], r["N"], r["B"]): r
+           for r in results if r["path"].startswith("mesh2d")}
+    d1_hi = by2[("mesh2d", n_hi, B)]
+    d2_lo, d2_hi = by2[("mesh2d", n_lo, 2 * B)], by2[("mesh2d", n_hi, 2 * B)]
+    repl_hi = by2[("mesh2d_replicated", n_hi, 2 * B)]
+    row("shard/mesh2d/N_scaling", 0.0,
+        f"{d2_hi['bytes_total'] / max(d2_lo['bytes_total'], 1):.2f}x over "
+        f"{n_hi // n_lo}x slots")
+    row("shard/mesh2d/B_scaling", 0.0,
+        f"{d2_hi['bytes_total'] / max(d1_hi['bytes_total'], 1):.2f}x "
+        f"per-device over 2x global batch (replicated control "
+        f"{repl_hi['bytes_total'] / max(d2_hi['bytes_total'], 1):.2f}x)")
+    # Per-device collective bytes flat in N...
+    assert d2_hi["bytes_total"] <= d2_lo["bytes_total"] * 1.25, \
+        f"2D collective bytes grew with N: " \
+        f"{d2_lo['bytes_total']} -> {d2_hi['bytes_total']}"
+    # ...and flat in global B: doubling B along the data axis must not
+    # change what each device moves...
+    assert d2_hi["bytes_total"] <= d1_hi["bytes_total"] * 1.25, \
+        f"2D per-device collective bytes grew with global B: " \
+        f"{d1_hi['bytes_total']} -> {d2_hi['bytes_total']}"
+    # ...while the replicated-batch control on the same mesh pays ~data×
+    # per device (or the comparison is measuring nothing)...
+    assert repl_hi["bytes_total"] >= d2_hi["bytes_total"] * 1.7, \
+        f"replicated-batch control not ~2x the 2D lane: " \
+        f"{d2_hi['bytes_total']} vs {repl_hi['bytes_total']}"
+    # ...and every collective in the 2D step groups on the model axis
+    # only — group size == model degree proves zero data-axis collectives
+    # on the memory path (a None means an unparsed/global group: dirty).
+    for n in sizes:
+        gs = by2[("mesh2d", n, 2 * B)]["collective_group_sizes"]
+        assert gs == [model2d], \
+            f"2D step N={n} has non-model-axis collectives: groups {gs}"
 
     os.makedirs(OUT_DIR, exist_ok=True)
     record = {

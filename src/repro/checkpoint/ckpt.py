@@ -81,7 +81,11 @@ def save_checkpoint(directory: str, step: int, tree,
 
     ``mem_layout=(num_slots, shards)`` records the mem-shard layout of the
     tree's memory/usage leaves (module docstring) so a restore on a
-    different mesh can re-lay them out. When omitted, the active
+    different mesh can re-lay them out. An optional third element — the
+    2D mesh's data degree, as `mem_shard.ckpt_layout()` now produces —
+    is recorded as provenance under ``"data"``; it never affects restore
+    (the data degree is placement, not row layout), and manifests without
+    it restore identically. When omitted, the active
     `mem_shard.memory_mesh` context (if any, on the *calling* thread) is
     recorded automatically — so every save made under the mesh-native path
     stays cross-mesh restorable, whichever code path wrote it."""
@@ -97,9 +101,11 @@ def save_checkpoint(directory: str, step: int, tree,
     paths, leaves, _ = _flatten_with_paths(tree)
     manifest = {"step": step, "format": MANIFEST_FORMAT, "leaves": []}
     if mem_layout is not None:
-        num_slots, shards = mem_layout
+        num_slots, shards = mem_layout[0], mem_layout[1]
         manifest["mem_layout"] = {"num_slots": int(num_slots),
                                   "shards": int(shards)}
+        if len(mem_layout) > 2:
+            manifest["mem_layout"]["data"] = int(mem_layout[2])
     for i, (p, leaf) in enumerate(zip(paths, leaves)):
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)

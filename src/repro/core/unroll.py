@@ -114,8 +114,12 @@ def unroll_naive(cell, params, state, xs):
 def _collect_scan(cell, params, state, xs):
     """Forward scan that also emits the per-step rollback residuals:
     (residual_state(s_{t-1}), deltas_t) — O(K·W) per step. The stacked
-    residuals are explicitly replicated under a mem_shard context (sparse
-    index/row records every shard consumes during the rollback)."""
+    residuals are constrained under a mem_shard context: on a 1D (model)
+    mesh they are explicitly replicated (sparse index/row records every
+    shard consumes during the rollback); on a 2D (data × model) mesh the
+    batch dim of every leaf instead follows the data axes and the non-slot
+    stacks are left to GSPMD propagation — `mem_shard.constrain_state`
+    resolves both cases."""
     def body(s, x):
         ns, y, deltas = cell.step(params, s, x, collect_deltas=True)
         return ns, (y, (cell.residual_state(s), deltas))
@@ -206,8 +210,10 @@ def make_chunked_unroll(cell):
         stateT, (ys, boundaries) = jax.lax.scan(seg, state0, xs)
         # Shard the boundary-checkpoint stack like the live state: under a
         # mem_shard context the stacked memory leaves (S_seg, B, N+S, W)
-        # put the slot-row dimension on the mesh axis, so the checkpoint
-        # stack costs O(T/C · state/S) per device, not O(T/C · state).
+        # put the slot-row dimension on the mesh axis — and on a 2D
+        # (data × model) mesh the B dim on the data axes — so the
+        # checkpoint stack costs O(T/C · state/(S·data)) per device, not
+        # O(T/C · state).
         boundaries = mem_shard.constrain_state(boundaries)
         return (stateT, ys), (params, boundaries, xs)
 

@@ -43,6 +43,34 @@ def relayout_memory_state(tree, num_slots: int, new_shards: int):
     return mem_shard.relayout_state(tree, num_slots, new_shards)
 
 
+def rescale_to_mesh(tree, axes_tree, new_mesh, *, num_slots: int = None,
+                    model_axis: str = "model"):
+    """One-call live scale event: a replica (or device) joining or leaving
+    becomes a state move, not an episode restart.
+
+    Re-layouts the slot-dimension leaves of `tree` to `new_mesh`'s model
+    degree (`relayout_memory_state` — ANN index re-partition included),
+    then re-shards every leaf onto the new mesh per its logical axes
+    (`reshard_tree`). A *data*-degree change needs only the second step —
+    the slot layout is identical on every data replica — so scaling the
+    data axis is pure placement plus `rescale_batch` for the batch
+    dimension. `ResilientLoop.on_reshard` (fault_tolerance.py) and the
+    serving engine's `ServeEngine.rescale` are the two callers: the
+    trainer carry and live serving sessions ride the same move.
+
+    Pass `num_slots` for memory-carrying trees; without it only the
+    logical-axis re-placement runs. Note `launch.mesh.make_mesh_for` warns
+    loudly when the degree it builds differs from the one requested —
+    check the warning before assuming the slot-sharding degree survived
+    the event."""
+    if num_slots is not None:
+        axis_names = getattr(new_mesh, "axis_names", ())
+        new_shards = (int(new_mesh.shape[model_axis])
+                      if model_axis in axis_names else 1)
+        tree = relayout_memory_state(tree, num_slots, new_shards)
+    return reshard_tree(tree, axes_tree, new_mesh)
+
+
 def rescale_batch(global_batch: int, old_data_degree: int,
                   new_data_degree: int) -> int:
     """Keep per-device batch constant across a scale event.

@@ -36,6 +36,16 @@ class StragglerPolicy:
         self._times: list = []
         self._slow = 0
 
+    def reset(self):
+        """Forget the timing baseline and the slow-step streak — called on
+        the 'reshard' transition. The new (usually smaller) mesh has a
+        different nominal step time: judging its first steps against the
+        old mesh's median would flag every one of them as slow and
+        re-trigger a reshard immediately. After a reset the detector
+        re-baselines (the first `window/4` steps are observation-only)."""
+        self._times = []
+        self._slow = 0
+
     def observe(self, dt: float) -> str:
         """Returns 'ok' | 'slow' | 'reshard'."""
         self._times.append(dt)
@@ -44,7 +54,7 @@ class StragglerPolicy:
         if len(self._times) >= 8 and dt > self.deadline_factor * med:
             self._slow += 1
             if self._slow >= self.max_slow_steps:
-                self._slow = 0
+                self.reset()
                 return "reshard"
             return "slow"
         self._slow = 0

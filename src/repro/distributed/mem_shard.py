@@ -22,6 +22,16 @@ each shard), and the only cross-shard traffic is
 Per-step collective traffic is therefore O(B·K·W), never O(B·N·W)
 (asserted against the compiled HLO by benchmarks/bench_shard.py).
 
+On a 2D (data × model) mesh the batch dimension additionally shards over
+the data axes (``memory_mesh(..., data_axes=...)``): every state leaf and
+batch-leading operand splits its B rows across data replicas, the
+shard_map bodies run on the local batch block, and all of the collectives
+above still name only the model axis — B above becomes B_local = B/data,
+and the data axes carry zero memory-path collective traffic (the HLO guard
+asserts this). The slot layout is identical on every replica, so the data
+degree is pure placement: re-laying a state across data degrees is a
+`device_put`, never a row remap (distributed/elastic.py).
+
 Sharded scratch-row layout
 --------------------------
 The canonical single-device layout is a (B, N+1, W) buffer with one
@@ -78,12 +88,17 @@ from repro.kernels import ops as _ops
 class MemShardCtx:
     """Active slot-sharding of the sparse memory: N logical slots split into
     `shards` contiguous blocks over mesh axis `axis`, one scratch row per
-    shard (module docstring)."""
+    shard (module docstring). `data_axes`/`data_degree` describe the
+    orthogonal data-parallel axes the *batch* dimension shards over in a 2D
+    (data × model) mesh: the slot layout is identical on every data replica
+    — the data degree is pure placement, never a row-layout parameter."""
 
     mesh: Mesh
     axis: str
     num_slots: int
     shards: int
+    data_axes: tuple = ()
+    data_degree: int = 1
 
     @property
     def local_n(self) -> int:
@@ -104,18 +119,30 @@ _CTX = _Ctx()
 
 
 @contextlib.contextmanager
-def memory_mesh(mesh: Mesh, num_slots: int, axis: str = "model"):
+def memory_mesh(mesh: Mesh, num_slots: int, axis: str = "model",
+                data_axes: tuple = ("pod", "data")):
     """Activate mesh-native sparse memory for `num_slots` slots sharded over
     `axis` (falling back to 1 shard when the mesh lacks the axis — the S=1
     layout is the canonical single-scratch-row buffer, so everything keeps
-    working, just unsharded)."""
+    working, just unsharded). `data_axes` names the orthogonal
+    data-parallel axes of a 2D (data × model) mesh: axes actually present
+    shard the *batch* dimension of every memory operand and state leaf,
+    composing data parallelism with slot sharding (pass ``data_axes=()``
+    for a replicated batch on a 2D mesh)."""
     shards = int(mesh.shape[axis]) if axis in mesh.axis_names else 1
     if num_slots % shards:
         raise ValueError(
             f"num_slots={num_slots} not divisible by the {shards}-way "
             f"{axis!r} mesh axis — slot sharding needs equal blocks")
+    data_axes = tuple(a for a in data_axes
+                      if a != axis and a in mesh.axis_names)
+    degree = 1
+    for a in data_axes:
+        degree *= int(mesh.shape[a])
+    if degree == 1:
+        data_axes = ()
     ctx = MemShardCtx(mesh=mesh, axis=axis, num_slots=num_slots,
-                      shards=shards)
+                      shards=shards, data_axes=data_axes, data_degree=degree)
     old = _CTX.ctx
     _CTX.ctx = ctx
     try:
@@ -451,6 +478,12 @@ def _relayout_ann_leaves(tree, num_slots: int, to_partitions: int):
 # State specs ("shard-consistent state specs" for jit/device_put/constraints)
 # --------------------------------------------------------------------------
 
+def _data_entry(ctx: MemShardCtx):
+    """The PartitionSpec entry for a data-sharded batch dim (a single axis
+    name, or the axis tuple when the batch spans several data axes)."""
+    return ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+
+
 def leaf_spec(ctx: MemShardCtx, dim: Optional[int], shape,
               extent: Optional[int] = None) -> P:
     """PartitionSpec placing the mesh axis on `dim` — the sharding axis a
@@ -461,12 +494,23 @@ def leaf_spec(ctx: MemShardCtx, dim: Optional[int], shape,
     table). ``extent`` is the size the dim must have to shard (default:
     the sharded row count; the ANN leaves pass the shard count). Anything
     else — including a slot leaf whose dim size does not match the
-    context's layout — is explicitly replicated."""
+    context's layout — is explicitly replicated.
+
+    Under a 2D (data × model) context, the leaf's batch dim — a fixed
+    offset from `dim`: rows dim − 1 for memory/usage leaves, partition
+    dim − 3 for the (B, T, nb, P[, d]) ANN leaves, so stacked variants
+    resolve correctly too — additionally shards over the data axes
+    whenever its size divides the data degree."""
     if extent is None:
         extent = ctx.sharded_rows
     if dim is None or shape[dim] != extent:
         return P()
-    return P(*(ctx.axis if i == dim else None for i in range(len(shape))))
+    entries = [ctx.axis if i == dim else None for i in range(len(shape))]
+    bdim = dim - (3 if extent == ctx.shards else 1)
+    if (ctx.data_degree > 1 and bdim >= 0
+            and shape[bdim] % ctx.data_degree == 0):
+        entries[bdim] = _data_entry(ctx)
+    return P(*entries)
 
 
 def state_shardings(tree, ctx: Optional[MemShardCtx] = None):
@@ -477,8 +521,22 @@ def state_shardings(tree, ctx: Optional[MemShardCtx] = None):
     ctx = ctx or current()
     if ctx is None or ctx.shards == 1:
         return None
+
+    def spec(name, dim, leaf):
+        if dim is None:
+            # Live (batch-leading) non-slot leaves follow the batch onto
+            # the data axes in a 2D context; scalars (step counters) and
+            # indivisible batches stay replicated. This helper is for
+            # *live* states — stacked (T, B, ...) trees go through
+            # `constrain_state`, which leaves non-slot leaves to GSPMD.
+            if (ctx.data_degree > 1 and getattr(leaf, "ndim", 0) >= 1
+                    and leaf.shape[0] % ctx.data_degree == 0):
+                return P(_data_entry(ctx))
+            return P()
+        return leaf_spec(ctx, dim, leaf.shape, _leaf_extent(ctx, name))
+
     return _map_slot_leaves(tree, lambda name, dim, leaf: NamedSharding(
-        ctx.mesh, leaf_spec(ctx, dim, leaf.shape, _leaf_extent(ctx, name))))
+        ctx.mesh, spec(name, dim, leaf)))
 
 
 def constrain_state(tree):
@@ -487,16 +545,27 @@ def constrain_state(tree):
     replication elsewhere (this is what keeps the chunked engine's
     O(C·K·W) delta stacks replicated and its dense boundary checkpoints —
     the ANN state riding along — sharded like the live state). No-op
-    without an active distributed context."""
+    without an active distributed context.
+
+    Under a 2D (data × model) context the non-slot leaves pass through
+    *unconstrained* instead: their batch dim position is ambiguous (dim 0
+    live, dim 1 stacked), and pinning them to explicit replication would
+    force a data-axis all-gather of batch-sharded activations — GSPMD
+    propagates their placement from the operands. Slot leaves keep their
+    full (batch over data, rows/partitions over model) constraint, which
+    `leaf_spec` resolves for live and stacked shapes alike."""
     ctx = current()
     if ctx is None or ctx.shards == 1:
         return tree
-    return _map_slot_leaves(tree, lambda name, dim, leaf:
-                            jax.lax.with_sharding_constraint(
-                                leaf, NamedSharding(
-                                    ctx.mesh,
-                                    leaf_spec(ctx, dim, leaf.shape,
-                                              _leaf_extent(ctx, name)))))
+
+    def visit(name, dim, leaf):
+        if dim is None and ctx.data_degree > 1:
+            return leaf
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(ctx.mesh,
+                                leaf_spec(ctx, dim, leaf.shape,
+                                          _leaf_extent(ctx, name))))
+    return _map_slot_leaves(tree, visit)
 
 
 def place_state(tree, ctx: Optional[MemShardCtx] = None):
@@ -507,9 +576,13 @@ def place_state(tree, ctx: Optional[MemShardCtx] = None):
 
 
 def ckpt_layout(ctx: Optional[MemShardCtx] = None):
-    """(num_slots, shards) to record in a checkpoint manifest, or None."""
+    """(num_slots, shards, data_degree) to record in a checkpoint manifest,
+    or None. Only the first two determine the row layout; the data degree
+    is recorded for provenance (placement at save time) — restore accepts
+    2-tuples from older callers unchanged."""
     ctx = ctx or current()
-    return None if ctx is None else (ctx.num_slots, ctx.shards)
+    return None if ctx is None else (ctx.num_slots, ctx.shards,
+                                     ctx.data_degree)
 
 
 # --------------------------------------------------------------------------
@@ -517,24 +590,57 @@ def ckpt_layout(ctx: Optional[MemShardCtx] = None):
 # --------------------------------------------------------------------------
 #
 # Conventions: `mem`/`la` enter sharded over ctx.axis on the row dimension;
-# every other operand (queries, indices, weights, step) is replicated.
-# Indices crossing the boundary are global; inside a body, shard s owns
-# global rows [s·local_n, (s+1)·local_n) and its local scratch row is
-# local_n. Inner kernel calls use the caller's ``backend`` untouched, with
-# valid_n/scratch_row = local_n — exactly the canonical dispatch, one shard
-# at a time.
+# every other operand (queries, indices, weights, step) is replicated over
+# the model axis. In a 2D (data × model) context every batch-leading
+# operand — memory buffers and queries/indices/weights alike — additionally
+# shards its batch dim over the data axes (`_bentry`), so the bodies run on
+# the local batch block and *every* collective below still names only
+# ctx.axis: the data axes carry zero memory-path collective traffic by
+# construction (asserted against the compiled HLO by
+# benchmarks/bench_shard.py). Indices crossing the boundary are global;
+# inside a body, shard s owns global rows [s·local_n, (s+1)·local_n) and
+# its local scratch row is local_n. Inner kernel calls use the caller's
+# ``backend`` untouched, with valid_n/scratch_row = local_n — exactly the
+# canonical dispatch, one shard at a time.
 
 def _smap(ctx, body, in_specs, out_specs):
     return shard_map(body, mesh=ctx.mesh, in_specs=in_specs,
                      out_specs=out_specs, check_rep=False)
 
 
-def _mem_spec(ctx) -> P:
-    return P(None, ctx.axis, None)
+def _bentry(ctx, batch: int):
+    """PartitionSpec entry for a batch dim of `batch` rows: the data axes
+    when the context has them and they divide the batch, else None (a
+    replicated batch — the 1D behavior, and the graceful fallback for an
+    odd batch on a 2D mesh)."""
+    if ctx.data_degree > 1 and batch % ctx.data_degree == 0:
+        return _data_entry(ctx)
+    return None
 
 
-def _vec_spec(ctx) -> P:
-    return P(None, ctx.axis)
+def _bspec(be) -> P:
+    """Spec for a model-replicated, batch-leading operand (queries,
+    indices, weights): batch over the data axes, everything else
+    replicated. `P()` when the batch itself is replicated."""
+    return P() if be is None else P(be)
+
+
+def _step_spec(be, step, batch: int) -> P:
+    """Spec for a step counter that is either a scalar (training: one
+    global step) or a (B, 1) per-lane vector (serving:
+    `init_memory_states(per_lane_step=True)`): the vector form follows the
+    batch onto the data axes, the scalar stays replicated."""
+    if getattr(step, "ndim", 0) >= 1 and step.shape[0] == batch:
+        return _bspec(be)
+    return P()
+
+
+def _mem_spec(ctx, be=None) -> P:
+    return P(be, ctx.axis, None)
+
+
+def _vec_spec(ctx, be=None) -> P:
+    return P(be, ctx.axis)
 
 
 def _concat_shards(x, axis_name: str):
@@ -577,7 +683,9 @@ def topk_read_sharded(ctx: MemShardCtx, q, mem, k: int, *, backend=None,
         mvals, pos = jax.lax.top_k(av, k)
         return mvals, jnp.take_along_axis(ai, pos, axis=-1)
 
-    return _smap(ctx, body, (P(), _mem_spec(ctx)), (P(), P()))(q, mem)
+    be = _bentry(ctx, mem.shape[0])
+    return _smap(ctx, body, (_bspec(be), _mem_spec(ctx, be)),
+                 (_bspec(be), _bspec(be)))(q, mem)
 
 
 def lra_topn_sharded(ctx: MemShardCtx, la, n: int, *, backend=None):
@@ -597,7 +705,8 @@ def lra_topn_sharded(ctx: MemShardCtx, la, n: int, *, backend=None):
         _, pos = jax.lax.top_k(-av, n)
         return jnp.take_along_axis(ai, pos, axis=-1)
 
-    return _smap(ctx, body, (_vec_spec(ctx),), P())(la)
+    be = _bentry(ctx, la.shape[0])
+    return _smap(ctx, body, (_vec_spec(ctx, be),), _bspec(be))(la)
 
 
 def usage_argmin_sharded(ctx: MemShardCtx, la, *, backend=None):
@@ -621,7 +730,9 @@ def gather_rows_sharded(ctx: MemShardCtx, mem, idx):
         masked = jnp.where(own[..., None], rows, jnp.zeros_like(rows))
         return jax.lax.psum(masked, ctx.axis)
 
-    return _smap(ctx, body, (_mem_spec(ctx), P()), P())(mem, idx)
+    be = _bentry(ctx, mem.shape[0])
+    return _smap(ctx, body, (_mem_spec(ctx, be), _bspec(be)),
+                 _bspec(be))(mem, idx)
 
 
 def scatter_rows_sharded(ctx: MemShardCtx, mem, idx, rows, mode: str, *,
@@ -653,9 +764,11 @@ def scatter_rows_sharded(ctx: MemShardCtx, mem, idx, rows, mode: str, *,
                                      mem_scale=scale_l,
                                      rows_scale=rs if rs.shape[-1] else None)
 
+        be = _bentry(ctx, mem.shape[0])
         return _smap(ctx, body_q,
-                     (_mem_spec(ctx), _vec_spec(ctx), P(), P(), P()),
-                     (_mem_spec(ctx), _vec_spec(ctx)))(
+                     (_mem_spec(ctx, be), _vec_spec(ctx, be), _bspec(be),
+                      _bspec(be), _bspec(be)),
+                     (_mem_spec(ctx, be), _vec_spec(ctx, be)))(
                          mem, mem_scale, idx, rows, rs)
 
     def body(mem_l, idx, rows):
@@ -666,8 +779,9 @@ def scatter_rows_sharded(ctx: MemShardCtx, mem, idx, rows, mode: str, *,
         return _ops.scatter_rows(mem_l, lidx, rows, mode=mode,
                                  backend=backend, scratch_row=ctx.local_n)
 
-    return _smap(ctx, body, (_mem_spec(ctx), P(), P()),
-                 _mem_spec(ctx))(mem, idx, rows)
+    be = _bentry(ctx, mem.shape[0])
+    return _smap(ctx, body, (_mem_spec(ctx, be), _bspec(be), _bspec(be)),
+                 _mem_spec(ctx, be))(mem, idx, rows)
 
 
 def sparse_write_update_sharded(ctx: MemShardCtx, mem, la, write_idx,
@@ -698,10 +812,14 @@ def sparse_write_update_sharded(ctx: MemShardCtx, mem, la, write_idx,
                 backend=backend, scratch_row=ctx.local_n,
                 mem_scale=scale_l)
 
+        be = _bentry(ctx, mem.shape[0])
+        sspec = _step_spec(be, step, mem.shape[0])
         return _smap(ctx, body_q,
-                     (_mem_spec(ctx), _vec_spec(ctx), _vec_spec(ctx),
-                      P(), P(), P(), P(), P()),
-                     (_mem_spec(ctx), _vec_spec(ctx), _vec_spec(ctx)))(
+                     (_mem_spec(ctx, be), _vec_spec(ctx, be),
+                      _vec_spec(ctx, be), _bspec(be), _bspec(be),
+                      _bspec(be), _bspec(be), sspec),
+                     (_mem_spec(ctx, be), _vec_spec(ctx, be),
+                      _vec_spec(ctx, be)))(
                          mem, la, mem_scale, write_idx, write_w, a,
                          lra_idx, step)
 
@@ -714,9 +832,12 @@ def sparse_write_update_sharded(ctx: MemShardCtx, mem, la, write_idx,
             mem_l, la_l, l_widx, l_ww, a, l_lra, step, delta=delta,
             backend=backend, scratch_row=ctx.local_n)
 
+    be = _bentry(ctx, mem.shape[0])
+    sspec = _step_spec(be, step, mem.shape[0])
     return _smap(ctx, body,
-                 (_mem_spec(ctx), _vec_spec(ctx), P(), P(), P(), P(), P()),
-                 (_mem_spec(ctx), _vec_spec(ctx)))(
+                 (_mem_spec(ctx, be), _vec_spec(ctx, be), _bspec(be),
+                  _bspec(be), _bspec(be), _bspec(be), sspec),
+                 (_mem_spec(ctx, be), _vec_spec(ctx, be)))(
                      mem, la, write_idx, write_w, a, lra_idx, step)
 
 
@@ -735,10 +856,11 @@ def sparse_write_update_sharded(ctx: MemShardCtx, mem, la, write_idx,
 # local candidate is an owned slot), and merge per-shard top-K sets through
 # the same O(B·K) score+index all-gather the exact-read path uses.
 
-def _ann_specs(ctx):
-    """(buckets, cursor) PartitionSpecs: partition dim on the mesh axis."""
-    return (P(None, None, None, ctx.axis, None),
-            P(None, None, None, ctx.axis))
+def _ann_specs(ctx, be=None):
+    """(buckets, cursor) PartitionSpecs: partition dim on the mesh axis,
+    batch dim on the data axes when active."""
+    return (P(be, None, None, ctx.axis, None),
+            P(be, None, None, ctx.axis))
 
 
 def ann_insert_sharded(ctx: MemShardCtx, planes, state, idx, mem, cfg):
@@ -780,9 +902,10 @@ def ann_insert_sharded(ctx: MemShardCtx, planes, state, idx, mem, cfg):
                                                mode="drop")
         return buckets, cursor
 
-    bspec, cspec = _ann_specs(ctx)
+    be = _bentry(ctx, mem.shape[0])
+    bspec, cspec = _ann_specs(ctx, be)
     buckets, cursor = _smap(
-        ctx, body, (P(), bspec, cspec, P(), _mem_spec(ctx)),
+        ctx, body, (P(), bspec, cspec, _bspec(be), _mem_spec(ctx, be)),
         (bspec, cspec))(planes, state.buckets, state.cursor, idx, mem)
     return type(state)(buckets=buckets, cursor=cursor)
 
@@ -845,16 +968,20 @@ def lsh_candidate_topk_sharded(ctx: MemShardCtx, planes, state, q, mem,
         _, mpos = jax.lax.top_k(av, k)
         return jnp.take_along_axis(ai, mpos, axis=-1)
 
-    bspec, _ = _ann_specs(ctx)
+    be = _bentry(ctx, mem.shape[0])
+    bspec, _ = _ann_specs(ctx, be)
     if mem_scale is None:
         # Zero-width dummy keeps the operand list (and specs) static —
         # the scale branch in `body` folds away on `scale_l.shape[-1]`.
         mem_scale = jnp.zeros(mem.shape[:1] + (0,), jnp.float32)
-        sspec = P()
+        sspec = _bspec(be)
     else:
-        sspec = _vec_spec(ctx)
-    return _smap(ctx, body, (P(), P(), _mem_spec(ctx), bspec, P(), sspec),
-                 P())(planes, q, mem, state.buckets, extra_idx, mem_scale)
+        sspec = _vec_spec(ctx, be)
+    return _smap(ctx, body,
+                 (P(), _bspec(be), _mem_spec(ctx, be), bspec, _bspec(be),
+                  sspec),
+                 _bspec(be))(planes, q, mem, state.buckets, extra_idx,
+                             mem_scale)
 
 
 def ann_build_sharded(ctx: MemShardCtx, planes, memory, cfg, *,
@@ -894,8 +1021,9 @@ def ann_build_sharded(ctx: MemShardCtx, planes, memory, cfg, *,
                 state, jnp.arange(n_full * J, n_l, dtype=jnp.int32))
         return state.buckets, state.cursor
 
-    bspec, cspec = _ann_specs(ctx)
-    buckets, cursor = _smap(ctx, body, (P(), _mem_spec(ctx)),
+    be = _bentry(ctx, memory.shape[0])
+    bspec, cspec = _ann_specs(ctx, be)
+    buckets, cursor = _smap(ctx, body, (P(), _mem_spec(ctx, be)),
                             (bspec, cspec))(planes, memory)
     return ANNState(buckets=buckets, cursor=cursor)
 
@@ -906,12 +1034,18 @@ def update_last_access_sharded(ctx: MemShardCtx, la, idx, w, step,
     shard-local scatter-max at the owned indices; non-owned entries route to
     the pinned scratch entry, where max(LA_SCRATCH, step) is a no-op."""
 
-    def body(la_l, idx, w):
+    def body(la_l, idx, w, step):
         s = jax.lax.axis_index(ctx.axis)
         _, lidx = _own_local(ctx, idx, s)
         b = jnp.arange(la_l.shape[0])[:, None]
         upd = jnp.where(w > delta, step, la_l[b, lidx])
         return la_l.at[b, lidx].max(upd)
 
-    return _smap(ctx, body, (_vec_spec(ctx), P(), P()),
-                 _vec_spec(ctx))(la, idx, w)
+    # `step` enters as an explicit operand, not a closure: the per-lane
+    # (B, 1) serving form must shard with the batch in a 2D context.
+    be = _bentry(ctx, la.shape[0])
+    step = jnp.asarray(step)
+    return _smap(ctx, body,
+                 (_vec_spec(ctx, be), _bspec(be), _bspec(be),
+                  _step_spec(be, step, la.shape[0])),
+                 _vec_spec(ctx, be))(la, idx, w, step)

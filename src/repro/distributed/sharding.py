@@ -49,7 +49,10 @@ DEFAULT_RULES: tuple[tuple[str, object], ...] = (
     # context `_resolve` replicates with a warning: the (B, N+1, W)
     # scratch-row buffer does not divide the model axis, and the old
     # dynamically-indexed GSPMD sharding lowered to a full-buffer
-    # all-gather per step anyway (docs/sharding.md).
+    # all-gather per step anyway (docs/sharding.md). On a 2D (data × model)
+    # mesh this composes with the "batch" rule above into the full 2D
+    # layout of a memory leaf — (B over ("pod","data"), rows over "model")
+    # — the same placement mem_shard.leaf_spec derives for its state trees.
     ("mem_slots", "model"),
     ("mem_word", None),
     ("state", None),

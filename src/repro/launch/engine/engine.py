@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import contextlib
 import time
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -55,8 +56,17 @@ class ServeEngine:
     ``mesh=`` serves under a (data, model) mesh: logical-axis sharding
     rules activate for the transformer stack and, for SAM-augmented
     archs, the slot-sharded mesh-native memory path
-    (`mem_shard.memory_mesh`). Use as a context manager (or call
-    ``close()``) so the mesh contexts unwind.
+    (`mem_shard.memory_mesh` — on a 2D mesh the lane/batch dimension
+    additionally shards over the data axes). Use as a context manager (or
+    call ``close()``) so the mesh contexts unwind.
+
+    ``replicas`` makes the engine multi-replica: lanes split into equal
+    per-replica pools and the scheduler keeps session-to-replica affinity
+    (launch/engine/scheduler.py). It defaults to the mesh's data degree —
+    one serving replica per data shard, so a replica's lane pool is
+    exactly the batch block that data shard holds — or 1 without a mesh
+    (replicas are a host-side scheduling concept, so a single-device
+    engine can run many). `rescale()` is the live join/leave event.
 
     ``session_capacity``/``spill_dir`` bound the in-RAM session store
     with LRU disk spill (launch/engine/sessions.py).
@@ -64,6 +74,7 @@ class ServeEngine:
 
     def __init__(self, cfg, *, lanes: int = 4, max_len: int = 128,
                  param_seed: int = 0, mesh=None,
+                 replicas: Optional[int] = None,
                  session_capacity: Optional[int] = None,
                  spill_dir: Optional[str] = None,
                  session_store: Optional[SessionStore] = None):
@@ -73,15 +84,64 @@ class ServeEngine:
         self.cfg = cfg
         self.lanes = lanes
         self.max_len = max_len
+        self.mesh = mesh
         self._stack = contextlib.ExitStack()
-        if mesh is not None:
-            self._stack.enter_context(mesh_rules(mesh))
-            if cfg.memory is not None:
-                self._stack.enter_context(
-                    mem_shard.memory_mesh(mesh, cfg.memory.num_slots))
+        self._enter_mesh(mesh)
+        self.replicas = self._resolve_replicas(lanes, mesh, replicas)
 
         self.params = lm.init_params(jax.random.PRNGKey(param_seed), cfg)
-        self.cache = lm.init_cache(cfg, lanes, max_len, per_lane_pos=True)
+        self._build_batch(lanes)
+
+        self.scheduler = Scheduler(lanes, replicas=self.replicas)
+        self.sessions = session_store if session_store is not None else \
+            SessionStore(
+                num_slots=cfg.memory.num_slots if cfg.memory else None,
+                capacity=session_capacity, spill_dir=spill_dir)
+        self._out: dict[int, list] = {}             # request id -> tokens
+        self.steps = 0
+
+    def _enter_mesh(self, mesh) -> None:
+        if mesh is not None:
+            self._stack.enter_context(mesh_rules(mesh))
+            if self.cfg.memory is not None:
+                self._stack.enter_context(
+                    mem_shard.memory_mesh(mesh, self.cfg.memory.num_slots))
+
+    @staticmethod
+    def _mesh_data_degree(mesh) -> int:
+        d = 1
+        if mesh is not None:
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    d *= int(mesh.shape[a])
+        return d
+
+    def _resolve_replicas(self, lanes: int, mesh,
+                          replicas: Optional[int]) -> int:
+        if replicas is None:
+            d = self._mesh_data_degree(mesh)
+            if d > 1 and lanes % d:
+                warnings.warn(
+                    f"mesh data degree {d} does not divide lanes={lanes} — "
+                    f"serving single-replica (pass lanes divisible by the "
+                    f"data degree, or an explicit replicas=)",
+                    UserWarning, stacklevel=3)
+                return 1
+            return d
+        if replicas < 1 or lanes % replicas:
+            raise ValueError(
+                f"lanes={lanes} must split evenly over replicas={replicas}")
+        return replicas
+
+    def _build_batch(self, lanes: int) -> None:
+        """(Re)build everything whose shape carries the lane count: the
+        batched device state, the jitted step functions (fresh, so no jit
+        cache entry traced under a previous mesh context can leak into the
+        new one), and the host-side per-lane registers."""
+        cfg = self.cfg
+        self.lanes = lanes
+        self.cache = lm.init_cache(cfg, lanes, self.max_len,
+                                   per_lane_pos=True)
         self.mem = lm.init_memory_states(cfg, lanes, per_lane_step=True)
         self._step_fn = make_engine_step(cfg)
         self._prefill_fn = make_prefill_scan(cfg)
@@ -95,19 +155,11 @@ class ServeEngine:
         self._fresh_mem = None if self.mem is None else \
             lm.init_memory_states(cfg, 1, per_lane_step=True)
 
-        self.scheduler = Scheduler(lanes)
-        self.sessions = session_store if session_store is not None else \
-            SessionStore(
-                num_slots=cfg.memory.num_slots if cfg.memory else None,
-                capacity=session_capacity, spill_dir=spill_dir)
-
         # Host-side per-lane registers (what the next jitted step consumes).
         self._feed = np.zeros(lanes, np.int32)      # next input token
         self._greedy = np.ones(lanes, bool)
         self._seeds = np.zeros(lanes, np.int32)
         self._counters = np.zeros(lanes, np.int32)  # session token counters
-        self._out: dict[int, list] = {}             # request id -> tokens
-        self.steps = 0
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -190,6 +242,60 @@ class ServeEngine:
             results.extend(self.step())
         return results
 
+    # -- elastic scale events ----------------------------------------------
+
+    _KEEP = object()      # rescale sentinel: "keep the current mesh"
+
+    def rescale(self, *, replicas: Optional[int] = None, mesh=_KEEP,
+                lanes: Optional[int] = None) -> None:
+        """Live join/leave elastic event: change the replica count (and
+        optionally the mesh) **without restarting any episode**.
+
+        Every in-flight request is parked through the ordinary eviction
+        path — its lane snapshots into the `SessionStore` in the canonical
+        layout, exactly like a finished request — the device batch is
+        rebuilt at the new lane count under the new mesh contexts, and the
+        parked requests re-enter the queue (in submission order, ahead of
+        the waiting backlog) with their progress intact. Re-admission
+        restores each session with `elastic.relayout_memory_state` to the
+        new live shard count, so the determinism contract (module
+        docstring) makes the continuation bit-exact: the token streams and
+        final memory states are identical to an uninterrupted run.
+
+        ``lanes`` defaults to keeping the per-replica lane count fixed —
+        a replica joining/leaving adds/removes its lane pool. ``replicas``
+        defaults to the (new) mesh's data degree, like the constructor."""
+        per_replica = self.lanes // self.replicas
+        inflight = [self.scheduler.active[lane]
+                    for lane in sorted(self.scheduler.active)]
+        inflight.sort(key=lambda r: r.id)
+        for lane in sorted(self.scheduler.active):
+            self._evict_lane(lane)
+        queued = list(self.scheduler.queue)
+        old = self.scheduler
+
+        if mesh is not ServeEngine._KEEP:
+            self.mesh = mesh
+            self._stack.close()
+            self._stack = contextlib.ExitStack()
+            self._enter_mesh(mesh)
+        if replicas is None:
+            replicas = self._mesh_data_degree(self.mesh)
+        if lanes is None:
+            lanes = per_replica * replicas
+        self.replicas = self._resolve_replicas(lanes, self.mesh, replicas)
+        self._build_batch(lanes)
+
+        sched = Scheduler(lanes, replicas=self.replicas)
+        sched._ids = old._ids         # request ids stay globally unique
+        sched.affinity = {u: r for u, r in old.affinity.items()
+                          if r < self.replicas}
+        for req in inflight:
+            sched.queue.append(req)
+        for req in queued:
+            sched.queue.append(req)
+        self.scheduler = sched
+
     # -- lane <-> session movement ----------------------------------------
 
     def _admit_lane(self, lane: int, req: Request) -> None:
@@ -197,11 +303,14 @@ class ServeEngine:
         # rejected request must leave the session in the store and hand
         # the lane back to the scheduler — previously `take` had already
         # removed the session and the raise left the lane occupied with
-        # no way to free it.
+        # no way to free it. The budget counts only the *remaining* prompt
+        # and generation, so a request resuming after a rescale (progress
+        # already in `pos`) is not double-counted.
         sess = self.sessions.peek(req.user)
         pos = 0 if sess is None else int(np.asarray(sess["pos"])[0])
-        if pos + len(req.prompt) + req.max_new_tokens > self.max_len \
-                and self.cfg.window is None:
+        need = (len(req.prompt) - req.prefill_done
+                + req.max_new_tokens - req.generated)
+        if pos + need > self.max_len and self.cfg.window is None:
             self.scheduler.evict(lane)
             raise ValueError(
                 f"user {req.user!r}: session at position {pos} cannot fit "
@@ -212,10 +321,14 @@ class ServeEngine:
             self._reset_lane(lane)
         else:
             self._restore_lane(lane, sess)
-        self._feed[lane] = req.prompt[0]
+        # A fresh request feeds its first prompt token; one resuming after
+        # a rescale feeds wherever it stopped — the next prompt token, or
+        # mid-generation the last token it emitted.
+        self._out.setdefault(req.id, [])
+        self._feed[lane] = (req.prompt[req.prefill_done] if req.prefilling
+                            else self._out[req.id][-1])
         self._greedy[lane] = req.greedy
         self._seeds[lane] = req.sample_seed
-        self._out[req.id] = []
 
     def _reset_lane(self, lane: int) -> None:
         """Cold session: zero KV rows, position 0, fresh memory state —

@@ -59,16 +59,35 @@ class Scheduler:
       and returns the new ``(lane, request)`` assignments;
     * ``evict`` frees a lane (the engine calls it the step a request
       finishes), making it admittable on the very same step.
-    """
 
-    def __init__(self, lanes: int):
+    With ``replicas > 1`` the lanes split into equal per-replica pools —
+    replica r owns lanes [r·lpr, (r+1)·lpr) with lpr = lanes/replicas —
+    and the scheduler tracks **session-to-replica affinity**: eviction
+    records which replica's pool held the user, and a returning user's
+    request prefers a free lane in that replica (its data shard already
+    holds the user's memory placement), falling back to the lowest free
+    lane anywhere — the engine then restores the session from the
+    `SessionStore` with a relayout, so a miss costs a move, never
+    correctness. Admission stays strictly FIFO over *requests*; only the
+    lane choice consults affinity, so determinism is unchanged."""
+
+    def __init__(self, lanes: int, replicas: int = 1):
         if lanes < 1:
             raise ValueError(f"need at least one lane, got {lanes}")
+        if replicas < 1 or lanes % replicas:
+            raise ValueError(
+                f"lanes={lanes} must split evenly over replicas={replicas}")
         self.lanes = lanes
+        self.replicas = replicas
+        self.lanes_per_replica = lanes // replicas
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}      # lane -> request
+        self.affinity: dict[str, int] = {}        # user -> last replica
         self._free: list[int] = list(range(lanes - 1, -1, -1))
         self._ids = itertools.count()
+
+    def replica_of(self, lane: int) -> int:
+        return lane // self.lanes_per_replica
 
     def submit(self, req: Request) -> Request:
         if req.id < 0:
@@ -91,15 +110,27 @@ class Scheduler:
             if req.user in busy:
                 deferred.append(req)
                 continue
-            lane = self._free.pop()
+            lane = self._pick_lane(req.user)
             self.active[lane] = req
             busy.add(req.user)
             admitted.append((lane, req))
         self.queue.extendleft(reversed(deferred))
         return admitted
 
+    def _pick_lane(self, user: str) -> int:
+        """Pop the lowest free lane in the user's affinity replica, else
+        the lowest free lane anywhere (`_free` is sorted descending, so
+        the lowest lane sits at the end)."""
+        pref = self.affinity.get(user)
+        if pref is not None:
+            for i in range(len(self._free) - 1, -1, -1):
+                if self.replica_of(self._free[i]) == pref:
+                    return self._free.pop(i)
+        return self._free.pop()
+
     def evict(self, lane: int) -> Request:
         req = self.active.pop(lane)
+        self.affinity[req.user] = self.replica_of(lane)
         self._free.append(lane)
         self._free.sort(reverse=True)     # deterministic: lowest lane first
         return req

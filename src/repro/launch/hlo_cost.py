@@ -331,3 +331,35 @@ def _acc(total: CompCost, sub: CompCost, mult: float):
 
 def analyze(hlo_text: str) -> CompCost:
     return HloCostModel(hlo_text).cost()
+
+
+def collective_groups(hlo_text: str) -> List[dict]:
+    """Every collective in the module — all computations, while bodies and
+    fusion callees included — with its per-group participant count parsed
+    from ``replica_groups`` (explicit-list or iota form).
+
+    This is the mesh-axis fingerprint of a collective on an SPMD program:
+    on a (data=2, model=8) mesh, a model-axis collective has 8 participants
+    per group, a data-axis one 2, and a global one 16 — so asserting every
+    entry's ``group_size`` equals the model degree proves the program runs
+    **zero collectives on the data axis** (the 2D-mesh memory-path
+    contract; benchmarks/bench_shard.py and tests/test_mesh2d_parity.py).
+    ``group_size`` is None when no replica_groups attribute parses —
+    callers should treat that as "possibly global", not as clean."""
+    model = HloCostModel(hlo_text)
+    out: List[dict] = []
+    for cname, ops in model.comps.items():
+        for op in ops:
+            base = op.opcode.replace("-start", "")
+            if base not in _COLLECTIVES:
+                continue
+            dtype, n_elem = _first_shape(op.type_str)
+            g = _GROUPS.search(op.rest)
+            size = None
+            if g:
+                size = (len(g.group(1).split(",")) if g.group(1)
+                        else int(g.group(3)))
+            out.append({"kind": base, "group_size": size,
+                        "bytes": n_elem * _DTYPE_BYTES.get(dtype or "f32", 4),
+                        "computation": cname})
+    return out

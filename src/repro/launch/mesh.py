@@ -6,6 +6,8 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
 tests and benchmarks see the real single device."""
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 
@@ -17,10 +19,25 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_mesh_for(devices: int, model_parallel: int = 16):
     """Elastic-scaling helper: best-effort (data, model) mesh for an
-    arbitrary device count (used by distributed/elastic.py)."""
+    arbitrary device count (used by distributed/elastic.py). When the
+    requested model degree does not fit — it exceeds the device count, or
+    does not divide it — the degree is halved down until it does, and a
+    loud warning reports requested-vs-actual: the model degree is the
+    memory slot-sharding degree, so an elastic rescale that silently lands
+    on a different one re-layouts every memory buffer (or quietly disables
+    the sharding at model=1)."""
     model = min(model_parallel, devices)
     while devices % model:
         model //= 2
+    if model != model_parallel:
+        warnings.warn(
+            f"make_mesh_for: requested model_parallel={model_parallel} "
+            f"does not fit {devices} devices — building a "
+            f"(data={devices // model}, model={model}) mesh instead. The "
+            f"memory slot-sharding degree follows the model axis: an "
+            f"elastic rescale onto this mesh re-layouts memory state to "
+            f"{model} shard(s), not {model_parallel}.",
+            UserWarning, stacklevel=2)
     return jax.make_mesh((devices // model, model), ("data", "model"))
 
 

@@ -96,6 +96,32 @@ def test_scheduler_holds_back_active_user():
     assert [(l, r.prompt) for l, r in admitted] == [(0, [2])]  # a2 at last
 
 
+def test_scheduler_replica_pools_and_affinity():
+    """Multi-replica lane pools: eviction records the user's replica, a
+    returning user's request prefers a free lane in that replica's pool,
+    and falls back to the lowest free lane anywhere when the pool is
+    full. FIFO admission over requests is unchanged."""
+    with pytest.raises(ValueError, match="split evenly"):
+        Scheduler(lanes=5, replicas=2)
+    s = Scheduler(lanes=4, replicas=2)
+    assert s.lanes_per_replica == 2
+    for r in _reqs(4):
+        s.submit(r)
+    s.admit()
+    s.evict(2)                                # u2 lived in replica 1
+    assert s.affinity["u2"] == 1
+    s.evict(0)                                # u0 lived in replica 0
+    # u2 returns: lane 0 is the lowest free lane, but affinity steers the
+    # request into replica 1's pool (lane 2).
+    s.submit(Request(user="u2", prompt=[1], max_new_tokens=1))
+    assert [(l, r.user) for l, r in s.admit()] == [(2, "u2")]
+    # Replica-1 pool now full again; a second replica-1-affine user falls
+    # back to the lowest free lane anywhere (lane 0, replica 0).
+    s.affinity["u9"] = 1
+    s.submit(Request(user="u9", prompt=[1], max_new_tokens=1))
+    assert [(l, r.user) for l, r in s.admit()] == [(0, "u9")]
+
+
 # ----------------------------- engine e2e --------------------------------
 
 def test_engine_greedy_and_sampled_modes():
@@ -244,6 +270,52 @@ def test_rejected_request_keeps_session_and_lane():
         res = eng.run([Request(user="u", prompt=[2], max_new_tokens=2,
                                greedy=True)])
         assert len(res) == 1 and len(res[0]["tokens"]) == 2
+
+
+def test_engine_live_rescale_is_bit_exact():
+    """`rescale()` without a mesh: shrink a 2-replica engine to 1 replica
+    mid-decode (parking the in-flight sampled request through the session
+    store), then grow back to 2 replicas and serve a follow-up. Token
+    streams and the final stored session are bit-identical to an
+    uninterrupted run — the live scale event is invisible to every user.
+    Request ids keep counting across the rebuild (no reuse)."""
+    cfg = _cfg()
+    P1, P2 = [3, 7, 11, 2], [5]
+    u = dict(user="u", greedy=False, sample_seed=42)
+    noise = lambda: Request(user="noise", prompt=[9, 9], max_new_tokens=6,
+                            greedy=False, sample_seed=7)
+
+    with ServeEngine(cfg, lanes=4, max_len=64, replicas=2) as ref:
+        r1 = ref.run([Request(prompt=P1, max_new_tokens=8, **u), noise()])
+        tok_ref = [r for r in r1 if r["user"] == "u"][0]["tokens"]
+        tok_ref2 = ref.run([Request(prompt=P2, max_new_tokens=4, **u)]
+                           )[0]["tokens"]
+        sess_ref = ref.sessions.take("u")
+
+    with ServeEngine(cfg, lanes=4, max_len=64, replicas=2) as eng:
+        eng.submit(Request(prompt=P1, max_new_tokens=8, **u))
+        eng.submit(noise())
+        done = []
+        for _ in range(6):                    # prefill + a few decode steps
+            done.extend(eng.step())
+        assert any(r.user == "u" for r in eng.scheduler.active.values())
+        eng.rescale(replicas=1)               # leave
+        assert eng.replicas == 1 and eng.lanes == 2
+        while eng.scheduler.has_work:
+            done.extend(eng.step())
+        tok_live = [r for r in done if r["user"] == "u"][0]["tokens"]
+        eng.rescale(replicas=2, lanes=4)      # join
+        follow = eng.submit(Request(prompt=P2, max_new_tokens=4, **u))
+        assert follow.id > max(r["id"] for r in done)   # ids never reused
+        tok_live2 = eng.run()[0]["tokens"]
+        sess_live = eng.sessions.take("u")
+
+    assert tok_live == tok_ref
+    assert tok_live2 == tok_ref2
+    ok, leaf = _mem_equal(sess_ref["mem"], sess_live["mem"])
+    assert ok, f"memory leaf {leaf!r} diverged across the rescale"
+    assert int(sess_ref["pos"][0]) == int(sess_live["pos"][0])
+    assert sess_ref["counter"] == sess_live["counter"]
 
 
 @pytest.mark.skipif(jax.device_count() < 8,

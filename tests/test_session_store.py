@@ -27,17 +27,21 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+# Only the interleaving property needs hypothesis; the deterministic
+# lanes (spill counts, cold sessions, the mesh round trips) must keep
+# running in containers without it.
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("ci", max_examples=20, deadline=None)
+    settings.register_profile("nightly", max_examples=200, deadline=None)
+    settings.load_profile(os.environ.get("REPRO_HYPOTHESIS_PROFILE", "ci"))
+except ImportError:                                       # pragma: no cover
+    given = settings = st = None
 
 from repro.core import sam as sam_lib  # noqa: E402
 from repro.core.types import ControllerConfig, MemoryConfig  # noqa: E402
 from repro.distributed import elastic, mem_shard  # noqa: E402
 from repro.launch.engine import SessionStore  # noqa: E402
-
-settings.register_profile("ci", max_examples=20, deadline=None)
-settings.register_profile("nightly", max_examples=200, deadline=None)
-settings.load_profile(os.environ.get("REPRO_HYPOTHESIS_PROFILE", "ci"))
 
 pytestmark = pytest.mark.slow
 
@@ -76,7 +80,8 @@ def _assert_tree_bits(a, b, msg=""):
 
 # ------------------------- interleaving property -------------------------
 
-@given(data=st.data())
+@pytest.mark.skipif(st is None, reason="needs hypothesis")
+@(given(data=st.data()) if st is not None else (lambda f: f))
 def test_put_take_interleavings_round_trip_bit_exact(data):
     """The store == dict + canonical re-layout, under arbitrary op
     interleavings, per-user source shard layouts (1/2/4 — mesh-lane
@@ -197,6 +202,55 @@ def test_mesh_state_round_trip_bit_exact():
             jax.tree.map(np.asarray, elastic.relayout_memory_state(
                 state, N, 1)),
             "mesh state round trip")
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (forced host lane runs the "
+                           "driver below)")
+def test_mesh_state_data_degree_change_bit_exact():
+    """A session living on a 2D (2, 4) data×model mesh — batch genuinely
+    sharded over the data axis — evicts into the store and restores onto
+    a (4, 2) mesh (model degree 4 → 2 re-layouts the slot rows; the data
+    degree change is pure placement) and onto a single device, every
+    logical leaf bit-exact. `rescale_batch` covers the same event's batch
+    arithmetic: per-device batch stays fixed across the degree change."""
+    b2 = 2                                    # divisible by the data degree
+    mesh24 = jax.make_mesh((2, 4), ("data", "model"))
+    mesh42 = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = _cfg(ann="lsh")
+    params = sam_lib.init_params(jax.random.PRNGKey(0), cfg)
+    store = SessionStore(num_slots=N)
+    with mem_shard.memory_mesh(mesh24, N):
+        ctx = mem_shard.current()
+        assert ctx.shards == 4 and ctx.data_degree == 2
+        state = mem_shard.place_state(sam_lib.init_state(b2, cfg,
+                                                         params=params))
+        assert "data" in str(state.memory.sharding.spec[0])  # 2D for real
+        for i in range(3):
+            x = jax.random.normal(jax.random.PRNGKey(20 + i), (b2, D))
+            state = sam_lib.sam_step(params, cfg, state, x)[0]
+        canon = jax.tree.map(np.asarray,
+                             elastic.relayout_memory_state(state, N, 1))
+        store.put("u", state)
+    with mem_shard.memory_mesh(mesh42, N):
+        ctx = mem_shard.current()
+        assert ctx.shards == 2 and ctx.data_degree == 4
+        back = mem_shard.place_state(
+            elastic.relayout_memory_state(store.peek("u"), N, 2))
+        assert back.memory.shape[1] == N + 2          # 2-shard layout
+        _assert_tree_bits(elastic.relayout_memory_state(back, N, 1), canon,
+                          "(2,4) -> (4,2) restore")
+        # The restored session keeps stepping on the new mesh (batch 2
+        # does not divide data degree 4, so placement replicates the
+        # batch dim — a layout, never a correctness, decision).
+        x = jax.random.normal(jax.random.PRNGKey(99), (b2, D))
+        nxt = sam_lib.sam_step(params, cfg, back, x)[0]
+        assert bool(jnp.isfinite(nxt.read.words).all())
+    # Single-device restore: the stored canonical form, bit-exact.
+    _assert_tree_bits(store.take("u"), canon, "(2,4) -> single-device")
+    # Batch arithmetic of the same event: per-device batch stays fixed.
+    assert elastic.rescale_batch(2 * b2, 2, 4) == 4 * b2
+    assert elastic.rescale_batch(2 * b2, 2, 1) == b2
 
 
 @pytest.mark.skipif(jax.device_count() >= 8,
