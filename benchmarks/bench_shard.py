@@ -50,10 +50,12 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from benchmarks.common import row
+from repro.analysis import lints as analysis_lints
+from repro.analysis.envelope import check_growth
+from repro.analysis.measure import from_hlo
 from repro.core import sam as sam_lib
 from repro.core.types import ControllerConfig, MemoryConfig
 from repro.distributed import mem_shard
-from repro.launch.hlo_cost import HloCostModel, collective_groups
 
 OUT_DIR = "experiments/bench"
 OUT_PATH = os.path.join(OUT_DIR, "BENCH_shard.json")
@@ -77,13 +79,32 @@ def _lsh_cfg(num_slots: int) -> sam_lib.SAMConfig:
         CTL)
 
 
-def _collective_record(hlo_text: str) -> dict:
-    cost = HloCostModel(hlo_text).cost()
-    return {
-        "collectives": cost.coll,
-        "bytes_total": sum(v["bytes"] for v in cost.coll.values()),
-        "moved_total": cost.coll_moved,
+def _collective_record(hlo_text: str, *,
+                       buffer_bytes: float | None = None) -> dict:
+    """One compiled module -> its collective profile, via the shared
+    measurement layer (repro.analysis). ``buffer_bytes`` additionally runs
+    the ``full_buffer_collective`` lint against that buffer size and
+    records the offenses — the "no collective anywhere near the full
+    buffer/table" guard this bench and the mesh parity tests assert."""
+    m = from_hlo(hlo_text)
+    rec = {
+        "collectives": m.coll,
+        "bytes_total": m.coll_bytes,
+        "moved_total": m.coll_moved,
+        "collective_group_sizes": m.group_sizes,
     }
+    if buffer_bytes is not None:
+        rec["full_buffer_offenses"] = analysis_lints.full_buffer_collective(
+            m, {"buffer_bytes": buffer_bytes})
+    return rec
+
+
+def _flat_in(var: str, points, values):
+    """Fitted-growth verdict (envelope.GrowthCheck) for a bytes sweep:
+    flat (O(1)) within the checker's standard tolerance."""
+    sizes = [{var: p} for p in points]
+    return check_growth("collective_bytes", None, points, sizes,
+                        [float(v) for v in values], 0.1)
 
 
 def compile_mesh_step(mesh, num_slots: int) -> dict:
@@ -93,7 +114,7 @@ def compile_mesh_step(mesh, num_slots: int) -> dict:
         state = mem_shard.place_state(sam_lib.init_state(B, cfg))
         step = jax.jit(lambda p, s, x: sam_lib.sam_step(p, cfg, s, x))
         hlo = step.lower(params, state, jnp.zeros((B, D))).compile().as_text()
-    rec = _collective_record(hlo)
+    rec = _collective_record(hlo, buffer_bytes=B * num_slots * W * 4)
     rec.update(path="mesh", N=num_slots)
     return rec
 
@@ -118,7 +139,10 @@ def compile_mesh_step_lsh(mesh, num_slots: int, *,
         index_dev_bytes = bucket_dev_bytes + \
             state.ann.cursor.addressable_shards[0].data.nbytes
         index_total = state.ann.buckets.nbytes + state.ann.cursor.nbytes
-    rec = _collective_record(hlo)
+    # Guard against the tighter of the two dense payloads: the memory
+    # buffer and the full bucket table (partition-invariant total).
+    rec = _collective_record(
+        hlo, buffer_bytes=min(B * num_slots * W * 4, index_total))
     rec.update(path=("lsh_mesh" if index_partitions is None
                      else "lsh_replicated_index"),
                N=num_slots, bucket_table_bytes_per_device=bucket_dev_bytes,
@@ -139,7 +163,7 @@ def compile_lsh_build(mesh, num_slots: int) -> dict:
             B, _lsh_cfg(num_slots)))
         build = jax.jit(lambda p, m: ann_lib.ann_build(p, m, cfg))
         hlo = build.lower(planes, state.memory).compile().as_text()
-    rec = _collective_record(hlo)
+    rec = _collective_record(hlo, buffer_bytes=B * num_slots * W * 4)
     rec.update(path="lsh_build", N=num_slots)
     return rec
 
@@ -177,16 +201,13 @@ def compile_mesh_step_2d(mesh, num_slots: int, global_b: int, *,
                            NamedSharding(mesh, xspec))
         step = jax.jit(lambda p, s, x: sam_lib.sam_step(p, cfg, s, x))
         hlo = step.lower(params, state, x).compile().as_text()
-    rec = _collective_record(hlo)
-    groups = collective_groups(hlo)
+    rec = _collective_record(hlo,
+                             buffer_bytes=global_b * num_slots * W * 4)
     rec.update(
         path=("mesh2d" if data_parallel else "mesh2d_replicated"),
         N=num_slots, B=global_b,
         data=int(mesh.shape["data"]), model=int(mesh.shape["model"]),
-        data_degree=ctx.data_degree,
-        collective_group_sizes=sorted(
-            {g["group_size"] for g in groups},
-            key=lambda s: (s is None, s if s is not None else 0)))
+        data_degree=ctx.data_degree)
     return rec
 
 
@@ -233,34 +254,41 @@ def main(argv=None):
 
     by = {(r["path"], r["N"]): r["bytes_total"] for r in results}
     n_lo, n_hi = sizes[0], sizes[-1]
-    mesh_lo, mesh_hi = by[("mesh", n_lo)], by[("mesh", n_hi)]
-    ctrl_lo, ctrl_hi = by[("gspmd_control", n_lo)], by[("gspmd_control", n_hi)]
-    row("shard/mesh/N_scaling", 0.0, f"{mesh_hi / max(mesh_lo, 1):.2f}x "
+    mesh_hi = by[("mesh", n_hi)]
+    ctrl_hi = by[("gspmd_control", n_hi)]
+    # O(B·K·W): mesh-native traffic flat in N (fitted via the shared
+    # growth checker), far below the O(N) control, and no single
+    # collective anywhere near the full memory buffer (the
+    # full_buffer_collective lint, recorded per compile above).
+    mesh_fit = _flat_in("N", sizes, [by[("mesh", n)] for n in sizes])
+    ctrl_fit = _flat_in("N", sizes, [by[("gspmd_control", n)] for n in sizes])
+    row("shard/mesh/N_scaling", 0.0, f"~N^{mesh_fit.exponent:.2f} "
         f"over {n_hi // n_lo}x slots")
-    row("shard/control/N_scaling", 0.0, f"{ctrl_hi / max(ctrl_lo, 1):.2f}x "
+    row("shard/control/N_scaling", 0.0, f"~N^{ctrl_fit.exponent:.2f} "
         f"over {n_hi // n_lo}x slots")
-    # O(B·K·W): mesh-native traffic flat in N, far below the O(N) control,
-    # and no single collective anywhere near the full memory buffer.
-    assert mesh_hi <= mesh_lo * 1.25, \
-        f"mesh collective bytes grew with N: {mesh_lo} -> {mesh_hi}"
-    assert ctrl_hi >= ctrl_lo * 2, \
-        f"positive control did not scale with N: {ctrl_lo} -> {ctrl_hi}"
+    assert mesh_fit.ok, \
+        f"mesh collective bytes grew with N: {mesh_fit.values}"
+    assert not ctrl_fit.ok, \
+        f"positive control did not scale with N: {ctrl_fit.values}"
     assert mesh_hi < ctrl_hi / 4, (mesh_hi, ctrl_hi)
-    full_buffer = B * n_hi * W * 4
-    biggest = max((v["bytes"] / max(v["count"], 1)
-                   for r in results if r["path"] == "mesh"
-                   for v in r["collectives"].values()), default=0.0)
-    assert biggest < full_buffer / 8, \
-        f"a mesh-path collective moves {biggest}B (~full buffer {full_buffer}B)"
+    for r in results:
+        if r["path"] == "mesh":
+            assert not r["full_buffer_offenses"], \
+                f"mesh-path full-buffer collective: {r['full_buffer_offenses']}"
 
     # LSH mode: sharded-index traffic flat in N and strictly below the
     # replicated-index positive control (which psum-gathers the full
     # O(C·W) candidate rows each step)...
-    lsh_lo, lsh_hi = by[("lsh_mesh", n_lo)], by[("lsh_mesh", n_hi)]
+    lsh_fit = _flat_in("N", sizes, [by[("lsh_mesh", n)] for n in sizes])
     row("shard/lsh_mesh/N_scaling", 0.0,
-        f"{lsh_hi / max(lsh_lo, 1):.2f}x over {n_hi // n_lo}x slots")
-    assert lsh_hi <= lsh_lo * 1.25, \
-        f"sharded-LSH collective bytes grew with N: {lsh_lo} -> {lsh_hi}"
+        f"~N^{lsh_fit.exponent:.2f} over {n_hi // n_lo}x slots")
+    assert lsh_fit.ok, \
+        f"sharded-LSH collective bytes grew with N: {lsh_fit.values}"
+    for r in results:
+        if r["path"] == "lsh_mesh":
+            assert not r["full_buffer_offenses"], \
+                f"sharded-LSH full-table collective: " \
+                f"{r['full_buffer_offenses']}"
     for n in sizes:
         assert by[("lsh_mesh", n)] < by[("lsh_replicated_index", n)] / 2, \
             (n, by[("lsh_mesh", n)], by[("lsh_replicated_index", n)])
@@ -281,14 +309,10 @@ def main(argv=None):
     # collective anywhere near the O(N·W) memory buffer (the pre-shard
     # rebuild all-gathered the whole thing).
     for r in results:
-        if r["path"] != "lsh_build":
-            continue
-        buf = B * r["N"] * W * 4
-        big = max((v["bytes"] / max(v["count"], 1)
-                   for v in r["collectives"].values()), default=0.0)
-        assert big < buf / 8, \
-            f"ann_build on a sharded buffer moves a {big}B collective " \
-            f"(buffer {buf}B)"
+        if r["path"] == "lsh_build":
+            assert not r["full_buffer_offenses"], \
+                f"ann_build on a sharded buffer moves a near-full-buffer " \
+                f"collective: {r['full_buffer_offenses']}"
 
     # --- 2D (data × model) composition ------------------------------------
     # Same model degree (4) on both meshes so the per-device comparison is
@@ -308,24 +332,25 @@ def main(argv=None):
     by2 = {(r["path"], r["N"], r["B"]): r
            for r in results if r["path"].startswith("mesh2d")}
     d1_hi = by2[("mesh2d", n_hi, B)]
-    d2_lo, d2_hi = by2[("mesh2d", n_lo, 2 * B)], by2[("mesh2d", n_hi, 2 * B)]
+    d2_hi = by2[("mesh2d", n_hi, 2 * B)]
     repl_hi = by2[("mesh2d_replicated", n_hi, 2 * B)]
-    row("shard/mesh2d/N_scaling", 0.0,
-        f"{d2_hi['bytes_total'] / max(d2_lo['bytes_total'], 1):.2f}x over "
-        f"{n_hi // n_lo}x slots")
-    row("shard/mesh2d/B_scaling", 0.0,
-        f"{d2_hi['bytes_total'] / max(d1_hi['bytes_total'], 1):.2f}x "
-        f"per-device over 2x global batch (replicated control "
-        f"{repl_hi['bytes_total'] / max(d2_hi['bytes_total'], 1):.2f}x)")
     # Per-device collective bytes flat in N...
-    assert d2_hi["bytes_total"] <= d2_lo["bytes_total"] * 1.25, \
-        f"2D collective bytes grew with N: " \
-        f"{d2_lo['bytes_total']} -> {d2_hi['bytes_total']}"
+    n_fit = _flat_in("N", sizes,
+                     [by2[("mesh2d", n, 2 * B)]["bytes_total"]
+                      for n in sizes])
     # ...and flat in global B: doubling B along the data axis must not
     # change what each device moves...
-    assert d2_hi["bytes_total"] <= d1_hi["bytes_total"] * 1.25, \
-        f"2D per-device collective bytes grew with global B: " \
-        f"{d1_hi['bytes_total']} -> {d2_hi['bytes_total']}"
+    b_fit = _flat_in("B", [B, 2 * B],
+                     [d1_hi["bytes_total"], d2_hi["bytes_total"]])
+    row("shard/mesh2d/N_scaling", 0.0,
+        f"~N^{n_fit.exponent:.2f} over {n_hi // n_lo}x slots")
+    row("shard/mesh2d/B_scaling", 0.0,
+        f"~B^{b_fit.exponent:.2f} per-device over 2x global batch "
+        f"(replicated control "
+        f"{repl_hi['bytes_total'] / max(d2_hi['bytes_total'], 1):.2f}x)")
+    assert n_fit.ok, f"2D collective bytes grew with N: {n_fit.values}"
+    assert b_fit.ok, \
+        f"2D per-device collective bytes grew with global B: {b_fit.values}"
     # ...while the replicated-batch control on the same mesh pays ~data×
     # per device (or the comparison is measuring nothing)...
     assert repl_hi["bytes_total"] >= d2_hi["bytes_total"] * 1.7, \

@@ -1,0 +1,52 @@
+"""Declarative complexity-contract checking for the repo's hot paths.
+
+A contract (`contracts.Contract`) names a traceable entry point and
+declares its asymptotic envelope plus structural facts (dispatch counts,
+kernel names, collective fingerprints, lints, donation). The checker
+lowers the entry point at 2–3 geometric sweep sizes, measures each point
+with the HLO cost model and the jaxpr dispatch counter, fits growth
+exponents, and fails when reality outgrows the declaration. Positive
+controls (legacy layout, GSPMD sharding) invert the verdict: they pass
+only by tripping a detector.
+
+Use it three ways:
+
+* pytest — ``tests/test_analysis.py`` auto-collects every tier-1
+  contract (``-m analysis`` selects just these);
+* CLI — ``python -m repro.analysis --sweep`` writes
+  ``experiments/analysis/ANALYSIS.json`` (``--force-devices 8`` for the
+  sharded contracts on a forced host platform);
+* library — ``from repro.analysis import run_contract, get``.
+
+This module is import-light on purpose: the CLI must set ``XLA_FLAGS``
+before anything imports jax, so the real imports happen lazily.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "Contract": ("repro.analysis.contracts", "Contract"),
+    "register": ("repro.analysis.contracts", "register"),
+    "get": ("repro.analysis.contracts", "get"),
+    "all_contracts": ("repro.analysis.contracts", "all_contracts"),
+    "run_contract": ("repro.analysis.checker", "run_contract"),
+    "run_all": ("repro.analysis.checker", "run_all"),
+    # NOTE: the `measure` *function* is deliberately not re-exported — the
+    # name would collide with the `repro.analysis.measure` submodule (once
+    # the submodule is imported anywhere, normal attribute lookup wins over
+    # __getattr__ and `from repro.analysis import measure` silently returns
+    # the module). Import it as `from repro.analysis.measure import measure`.
+    "from_hlo": ("repro.analysis.measure", "from_hlo"),
+    "Target": ("repro.analysis.measure", "Target"),
+    "run_lints": ("repro.analysis.lints", "run_lints"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)

@@ -1,0 +1,132 @@
+"""CLI: run the contract sweep and write experiments/analysis/ANALYSIS.json.
+
+    PYTHONPATH=src python -m repro.analysis --sweep [--quick]
+        [--force-devices 8] [--only NAME ...] [--out PATH]
+    PYTHONPATH=src python -m repro.analysis --list
+    PYTHONPATH=src python -m repro.analysis --dead-modules
+
+``--force-devices N`` sets ``--xla_force_host_platform_device_count``
+BEFORE jax is imported (jax locks the device count on first init), which
+is how the 8-device sharded contracts run on a CPU host. Exit status is
+non-zero when any contract fails (skipped contracts — not enough
+devices — don't fail the run; they are recorded as skipped).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="complexity-contract sweep / static analysis reports")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run every contract and write the report")
+    ap.add_argument("--quick", action="store_true",
+                    help="2-point sweeps (CI smoke)")
+    ap.add_argument("--tier1-only", action="store_true",
+                    help="only contracts marked tier1")
+    ap.add_argument("--only", nargs="+", metavar="NAME", default=None,
+                    help="run only these contracts")
+    ap.add_argument("--force-devices", type=int, default=0, metavar="N",
+                    help="force N host-platform devices (set before jax "
+                         "imports; required for the sharded contracts on "
+                         "a CPU host)")
+    ap.add_argument("--min-devices", type=int, default=None, metavar="N",
+                    help="only contracts needing at least N devices (the "
+                         "forced-device CI lane selects just the sharded "
+                         "contracts with this)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered contracts and exit")
+    ap.add_argument("--dead-modules", action="store_true",
+                    help="print the static import-graph report")
+    ap.add_argument("--src-root", default="src",
+                    help="source root for --dead-modules (default: src)")
+    ap.add_argument("--out", default="experiments/analysis/ANALYSIS.json",
+                    help="report path for --sweep")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse(argv)
+    if not (args.sweep or args.list or args.dead_modules):
+        print("nothing to do: pass --sweep, --list, or --dead-modules",
+              file=sys.stderr)
+        return 2
+
+    # Dead-module analysis is pure AST — never touches jax.
+    dead_report = None
+    if args.dead_modules:
+        from repro.analysis import deadmods
+        dead_report = deadmods.report(args.src_root)
+        print(deadmods.format_report(dead_report))
+        if not (args.sweep or args.list):
+            return 0
+
+    if args.force_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.force_devices}")
+
+    from repro.analysis import checker, contracts
+
+    if args.list:
+        for name, c in sorted(contracts.all_contracts().items()):
+            flags = []
+            if c.expect_trip:
+                flags.append("expect_trip")
+            if c.devices > 1:
+                flags.append(f"devices={c.devices}")
+            if not c.tier1:
+                flags.append("nightly")
+            tag = f" [{', '.join(flags)}]" if flags else ""
+            print(f"{name:28s} sweep={c.sweep} points={c.points} "
+                  f"backends={','.join(c.backends)}{tag}")
+        if not args.sweep:
+            return 0
+
+    import jax
+    reports = checker.run_all(quick=args.quick, tier1_only=args.tier1_only,
+                              names=args.only,
+                              min_devices=args.min_devices)
+    for rep in reports:
+        if rep["ok"] is None:
+            verdict = f"SKIP ({rep['skipped']})"
+        elif rep["ok"]:
+            verdict = "ok (tripped as expected)" if rep["expect_trip"] \
+                else "ok"
+        else:
+            verdict = "FAIL"
+        print(f"{rep['name']:28s} {verdict}")
+        if rep["ok"] is False:
+            for backend, brec in rep.get("backends", {}).items():
+                for f in brec.get("failures", []):
+                    print(f"    [{backend}] {f}")
+            if "error" in rep:
+                print(f"    {rep['error']}")
+
+    record = {
+        "jax": jax.__version__,
+        "devices": jax.device_count(),
+        "platform": jax.devices()[0].platform,
+        "quick": bool(args.quick),
+        "contracts": reports,
+    }
+    if dead_report is not None:
+        record["dead_modules"] = dead_report
+    record["ok"] = all(r["ok"] is not False for r in reports)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    ran = sum(1 for r in reports if r["ok"] is not None)
+    skipped = sum(1 for r in reports if r["ok"] is None)
+    print(f"wrote {args.out} ({ran} contracts, {skipped} skipped)")
+    return 0 if record["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

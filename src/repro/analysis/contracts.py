@@ -1,0 +1,110 @@
+"""The contract declaration and registry.
+
+A `Contract` names a traceable entry point and declares its asymptotic
+envelope. The checker (`checker.run_contract`) sweeps the contract's
+``sweep`` variable over ``points`` (geometric), measures each point
+(`measure.measure`), fits growth exponents, and fails when measured
+growth exceeds the declared envelope — or when a declared dispatch
+count, kernel name, replica-group fingerprint, donation, or lint is
+violated. ``expect_trip=True`` inverts the verdict: the contract is a
+positive control (legacy layout, GSPMD sharding) that MUST fail at
+least one check, proving the detectors can fire.
+
+Declaring a contract::
+
+    @register
+    def my_path():
+        return Contract(
+            name="my_path",
+            build=_build_my_path,          # sizes dict -> measure.Target
+            sweep="N", points=(256, 1024, 4096), quick_points=(256, 1024),
+            sizes={"B": 2, "K": 8, "W": 128},
+            flops="O(B*K*W)", hbm="O(B*K*W)",
+            dispatches={"top_k": 0},
+            backends=("ref", "pallas-interpret"),
+            lints=("scratch_copy",),
+        )
+
+Envelope semantics per backend: ``flops``/``hbm`` envelopes are fitted
+on the **ref** backend only — the Pallas interpreter emulates kernels
+with full-buffer copies, so its HLO byte counts are interpreter
+artifacts, not the kernel's traffic. On the pallas backends a contract
+is held to its *structural* resources instead: dispatch counts flat
+across the sweep, declared kernel names, lints, collectives. (Real-TPU
+runs remain the roofline check — ROADMAP's carried remainder.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.analysis.measure import Target
+
+# Backends whose HLO byte/flop counts are physically meaningful (see
+# module docstring): the envelope fit runs only on these.
+COST_MODEL_BACKENDS = ("ref",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    name: str
+    build: Callable[[Dict[str, int], str], Target]  # (sizes, backend) ->
+    sweep: str = "N"
+    points: Tuple[int, ...] = (256, 1024, 4096)
+    quick_points: Optional[Tuple[int, ...]] = (256, 1024)
+    sizes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # -- asymptotic envelopes (None = flat, i.e. O(1) in the sweep var) --
+    flops: Optional[str] = None
+    hbm: Optional[str] = None
+    collective_bytes: Optional[str] = None
+    # -- structural expectations ----------------------------------------
+    dispatches: Dict[str, int] = dataclasses.field(default_factory=dict)
+    kernels: Dict[str, int] = dataclasses.field(default_factory=dict)
+    group_sizes: Optional[Tuple[int, ...]] = None
+    donate: bool = False
+    lints: Tuple[str, ...] = ()
+    # -- execution ------------------------------------------------------
+    backends: Tuple[str, ...] = ("ref",)
+    devices: int = 1            # jax.device_count() the contract needs
+    expect_trip: bool = False   # positive control: MUST fail a check
+    tier1: bool = True          # part of the fast auto-collected suite
+    tol: float = 0.1
+    notes: str = ""
+
+    def sweep_points(self, quick: bool) -> Tuple[int, ...]:
+        if quick and self.quick_points:
+            return self.quick_points
+        return self.points
+
+    def point_sizes(self, value: int) -> Dict[str, int]:
+        sizes = dict(self.sizes)
+        sizes[self.sweep] = value
+        return sizes
+
+
+_REGISTRY: Dict[str, Contract] = {}
+
+
+def register(factory: Callable[[], Contract]) -> Callable[[], Contract]:
+    """Decorator: call the factory once, keep the contract by name."""
+    contract = factory()
+    if contract.name in _REGISTRY:
+        raise ValueError(f"duplicate contract {contract.name!r}")
+    _REGISTRY[contract.name] = contract
+    return factory
+
+
+def get(name: str) -> Contract:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def all_contracts() -> Dict[str, Contract]:
+    _ensure_loaded()
+    return dict(_REGISTRY)
+
+
+def _ensure_loaded() -> None:
+    # The zoo registers on import; keep it lazy so `import repro.analysis`
+    # stays cheap (the CLI sets XLA_FLAGS before any jax import).
+    from repro.analysis import paths  # noqa: F401

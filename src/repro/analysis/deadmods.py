@@ -1,0 +1,136 @@
+"""Static import-graph report: which ``src/repro`` modules are
+unreachable from the launch entry points.
+
+Pure-AST (no imports are executed): every module under ``src/repro`` is
+parsed, its ``import``/``from ... import`` edges resolved against the
+set of known repro modules, and the graph walked from the CLI roots
+(``launch/dryrun.py``, ``launch/serve.py``, ``launch/train.py``, and
+this package's own CLI). Unreached modules split into
+
+* ``dynamic`` — modules loaded by name at runtime (the ``configs/``
+  architecture zoo goes through ``importlib`` in ``repro.configs``), a
+  warning-level note, not dead code;
+* ``dead`` — nothing imports them and no dynamic loader covers them.
+
+The report is advisory (the CLI prints it and folds it into
+ANALYSIS.json as warnings); it never fails a run on its own — tests and
+benchmarks legitimately import modules the serving/training CLIs don't.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Set
+
+ROOTS = (
+    "repro.launch.dryrun",
+    "repro.launch.serve",
+    "repro.launch.train",
+    "repro.analysis.__main__",
+)
+
+# Module-name prefixes that a dynamic loader covers: unreached modules
+# here are flagged as dynamic-only, not dead. repro.configs resolves
+# architecture modules with importlib.import_module at get_config time.
+DYNAMIC_PREFIXES = ("repro.configs.",)
+
+
+def discover(src_root: str) -> Dict[str, str]:
+    """Map every repro module name to its file under ``src_root``."""
+    mods: Dict[str, str] = {}
+    pkg_root = os.path.join(src_root, "repro")
+    for dirpath, _, files in os.walk(pkg_root):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, src_root)
+            name = rel[:-len(".py")].replace(os.sep, ".")
+            if name.endswith(".__init__"):
+                name = name[:-len(".__init__")]
+            mods[name] = path
+    return mods
+
+
+def _edges(path: str, modname: str, known: Set[str]) -> Set[str]:
+    """The repro modules ``modname`` imports, resolved statically.
+
+    ``from repro.core import sam`` yields both ``repro.core`` and
+    ``repro.core.sam`` (the name could be a submodule or an attribute —
+    keeping whichever is a known module is always sound). Relative
+    imports resolve against the module's package.
+    """
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    is_pkg = path.endswith("__init__.py")
+    parts = modname.split(".")
+    pkg_parts = parts if is_pkg else parts[:-1]
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = pkg_parts[:len(pkg_parts) - (node.level - 1)]
+                prefix = ".".join(base)
+                if node.module:
+                    prefix = f"{prefix}.{node.module}" if prefix \
+                        else node.module
+            else:
+                prefix = node.module or ""
+            if prefix:
+                out.add(prefix)
+            for alias in node.names:
+                out.add(f"{prefix}.{alias.name}" if prefix else alias.name)
+    return {m for m in out if m in known}
+
+
+def report(src_root: str = "src") -> dict:
+    """Walk the graph from ROOTS; classify unreached modules."""
+    mods = discover(src_root)
+    known = set(mods)
+    graph = {name: _edges(path, name, known) for name, path in mods.items()}
+    # Importing a submodule imports its ancestor packages too.
+    for name in list(known):
+        parts = name.split(".")
+        for i in range(1, len(parts)):
+            anc = ".".join(parts[:i])
+            if anc in known:
+                graph[name] = graph[name] | {anc}
+
+    reached: Set[str] = set()
+    frontier: List[str] = [r for r in ROOTS if r in known]
+    while frontier:
+        cur = frontier.pop()
+        if cur in reached:
+            continue
+        reached.add(cur)
+        frontier.extend(graph.get(cur, ()))
+
+    unreached = sorted(known - reached)
+    dynamic = [m for m in unreached
+               if any(m.startswith(p) for p in DYNAMIC_PREFIXES)]
+    dead = [m for m in unreached if m not in dynamic]
+    return {
+        "roots": [r for r in ROOTS if r in known],
+        "modules": len(known),
+        "reachable": len(reached),
+        "dynamic": dynamic,
+        "dead": dead,
+    }
+
+
+def format_report(rep: dict) -> str:
+    lines = [f"import graph: {rep['reachable']}/{rep['modules']} modules "
+             f"reachable from {len(rep['roots'])} roots"]
+    if rep["dynamic"]:
+        lines.append(f"  dynamic-only (registered via importlib, "
+                     f"{len(rep['dynamic'])}):")
+        lines.extend(f"    ~ {m}" for m in rep["dynamic"])
+    if rep["dead"]:
+        lines.append(f"  WARNING unreachable ({len(rep['dead'])}):")
+        lines.extend(f"    ! {m}" for m in rep["dead"])
+    if not rep["dynamic"] and not rep["dead"]:
+        lines.append("  no unreachable modules")
+    return "\n".join(lines)

@@ -1,0 +1,130 @@
+"""Asymptotic-envelope grammar and growth-exponent fitting.
+
+An envelope is a string like ``"O(B*K*W)"`` or ``"O(N*W + B*K)"``: a sum
+of products of size variables, each optionally raised to an integer power
+(``"O(N^2)"``). ``"O(1)"`` (or any term with no variables) is the flat
+envelope. The checker evaluates the envelope at each swept point and fits
+the growth exponent of the *normalized* measurement ``measured /
+predicted`` against the swept variable — a contract passes when that
+residual exponent is ≤ its tolerance, i.e. the measurement grows no
+faster than declared (sub-envelope growth passes: the envelope is an
+upper bound, not an equality).
+
+The exponent fit is an ordinary least-squares slope in log-log space —
+exact for pure power laws, and for mixtures it reports the average local
+order over the sweep, which is what a 2–3-point geometric sweep can
+resolve. Measurements of 0 are clamped to 1 unit so an all-zero resource
+(e.g. collective bytes on a single device) fits exponent 0, not -inf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_FACTOR = re.compile(r"^([A-Za-z_][A-Za-z0-9_]*)(?:\^(\d+))?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Envelope:
+    """Parsed form: ``terms`` is a tuple of tuples of (var, power)."""
+    source: str
+    terms: Tuple[Tuple[Tuple[str, int], ...], ...]
+
+    def predict(self, sizes: Dict[str, int]) -> float:
+        """Evaluate at concrete sizes. Unknown variables are an error —
+        a contract must declare every size its envelope names."""
+        total = 0.0
+        for term in self.terms:
+            prod = 1.0
+            for var, power in term:
+                if var not in sizes:
+                    raise KeyError(
+                        f"envelope {self.source!r} names size {var!r} but "
+                        f"the contract's sizes are {sorted(sizes)}")
+                prod *= float(sizes[var]) ** power
+            total += prod
+        return total
+
+    def depends_on(self, var: str) -> bool:
+        return any(v == var for term in self.terms for v, _ in term)
+
+
+def parse_envelope(spec: str) -> Envelope:
+    """``"O(B*K*W + N)"`` -> Envelope. Whitespace-insensitive; the
+    ``O(...)`` wrapper is optional; bare integers are constant factors
+    (``"O(1)"`` is the flat envelope)."""
+    text = spec.strip()
+    m = re.match(r"^O\((.*)\)$", text)
+    if m:
+        text = m.group(1)
+    terms: List[Tuple[Tuple[str, int], ...]] = []
+    for raw_term in text.split("+"):
+        factors: List[Tuple[str, int]] = []
+        for raw in raw_term.split("*"):
+            tok = raw.strip()
+            if not tok:
+                raise ValueError(f"empty factor in envelope {spec!r}")
+            if tok.isdigit():
+                continue                      # constant factor: growth-free
+            fm = _FACTOR.match(tok)
+            if not fm:
+                raise ValueError(
+                    f"bad factor {tok!r} in envelope {spec!r} (grammar: "
+                    f"sums of products of VAR or VAR^int)")
+            factors.append((fm.group(1), int(fm.group(2) or 1)))
+        terms.append(tuple(factors))
+    if not terms:
+        raise ValueError(f"empty envelope {spec!r}")
+    return Envelope(source=spec, terms=tuple(terms))
+
+
+def fit_exponent(xs: Sequence[float], ys: Sequence[float]) -> float:
+    """Least-squares slope of log(y) against log(x): the fitted power-law
+    order of y(x). ys of 0 clamp to 1 (one byte / one flop) so absent
+    resources fit 0.0. Needs ≥ 2 distinct x values."""
+    if len(xs) != len(ys) or len(xs) < 2:
+        raise ValueError("need >= 2 (x, y) points to fit an exponent")
+    lx = [math.log(float(x)) for x in xs]
+    ly = [math.log(max(float(y), 1.0)) for y in ys]
+    mx = sum(lx) / len(lx)
+    my = sum(ly) / len(ly)
+    denom = sum((x - mx) ** 2 for x in lx)
+    if denom == 0.0:
+        raise ValueError("swept points must be distinct to fit an exponent")
+    return sum((x - mx) * (y - my) for x, y in zip(lx, ly)) / denom
+
+
+@dataclasses.dataclass(frozen=True)
+class GrowthCheck:
+    resource: str
+    envelope: Optional[str]
+    exponent: float            # raw fitted exponent of the measurement
+    residual_exponent: float   # exponent of measured / predicted
+    tol: float
+    ok: bool
+    values: Tuple[float, ...]
+
+
+def check_growth(resource: str, envelope_spec: Optional[str],
+                 sweep_values: Sequence[float],
+                 per_point_sizes: Sequence[Dict[str, int]],
+                 measured: Sequence[float], tol: float) -> GrowthCheck:
+    """Fit the measurement's growth over the sweep and bound the residual
+    exponent of measured/predicted against the declared envelope,
+    evaluated at each point's full size dict. ``envelope_spec=None``
+    means flat (``O(1)``): the raw exponent itself must be ≤ tol."""
+    raw = fit_exponent(sweep_values, measured)
+    if envelope_spec is None:
+        resid = raw
+    else:
+        env = parse_envelope(envelope_spec)
+        predicted = [env.predict(s) for s in per_point_sizes]
+        resid = fit_exponent(sweep_values,
+                             [m / max(p, 1e-30)
+                              for m, p in zip(measured, predicted)])
+    ok = resid <= tol
+    return GrowthCheck(resource=resource, envelope=envelope_spec,
+                       exponent=raw, residual_exponent=resid, tol=tol,
+                       ok=ok, values=tuple(float(v) for v in measured))

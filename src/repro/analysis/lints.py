@@ -1,0 +1,175 @@
+"""Structural lint passes over a measured target.
+
+Each lint takes a `measure.Measurement` (plus the target's ``meminfo``)
+and returns a list of offense strings — empty means clean. The contract
+checker runs the lints a contract names; the legacy/GSPMD positive
+controls assert the offense lists are NON-empty, which keeps every
+detector honest (a pattern that can never fire guards nothing).
+
+* ``scratch_copy`` — no O(N·W) pad/slice/gather of the memory buffer on
+  the step path (the PR-2 scratch-row contract, generalized from
+  tests/test_scratch_row.py's f32-only regex: dtype-agnostic, and row
+  counts cover the mesh layout's N+S scratch rows).
+* ``dtype_widening`` — no f32 materialization of the full int8/bf16
+  memory buffer (reads must dequantize rows *after* gathering K rows, or
+  in-kernel — the PR-8 contract; a full-buffer ``convert`` to f32 erases
+  the storage-dtype bandwidth win).
+* ``full_buffer_collective`` — no single collective moves anything near
+  the full memory buffer (the slot-sharding contract from
+  benchmarks/bench_shard.py / tests/test_mesh_parity.py).
+* ``donation`` — the bytes of entry parameters that alias an output
+  buffer must cover the bytes the contract donates (donated carries
+  compile to in-place updates; a dropped donation silently doubles
+  resident state). The checker computes the donated-leaf bytes from the
+  target's ``donate_argnums`` and injects them as
+  ``meminfo["donated_bytes"]``.
+
+The pad/slice/gather patterns match the *lowered StableHLO* (MLIR tensor
+types like ``4097x32xf32``), where op structure still mirrors the traced
+program; the collective/donation lints read the compiled HLO metadata
+already extracted into the Measurement.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional
+
+from repro.analysis.measure import Measurement
+
+# MLIR tensor-type suffix "<rows>x<cols>x<dtype>" — the last two dims and
+# element type of a ≥2-D tensor (for (B, rows, W) buffers: rows x W x dt).
+_SHAPE3 = re.compile(r"(\d+)x(\d+)x([a-z][a-z0-9]*)")
+
+_NARROW = {"bf16", "f16", "i8", "si8", "ui8"}
+
+
+def _shapes(line: str):
+    return [(int(r), int(w), dt) for r, w, dt in _SHAPE3.findall(line)]
+
+
+def _meminfo(meminfo: Optional[Dict]) -> Optional[tuple]:
+    if not meminfo:
+        return None
+    return (int(meminfo["num_slots"]), int(meminfo["buf_rows"]),
+            int(meminfo["word_size"]))
+
+
+def scratch_copy(m: Measurement, meminfo: Optional[Dict]) -> List[str]:
+    """Lines that pad the memory to extra rows, slice it back, or gather a
+    full-buffer-sized result — the O(N·W) copies the persistent
+    scratch-row layout exists to remove. ``pad`` flags any full-row-count
+    shape; ``slice`` needs both the padded and the logical row count on
+    one line (the slice-back copy — a K-row dynamic_slice stays legal);
+    ``gather`` flags full-buffer *results* only (gathering K rows FROM
+    the buffer is the hot path itself)."""
+    info = _meminfo(meminfo)
+    if info is None:
+        return []
+    n, buf_rows, w = info
+    # Any row count from the logical N through one past the buffer's own
+    # row count is "the full buffer" (legacy n -> n+1 pads, mesh n + S).
+    big = range(n, buf_rows + 2)
+    offenses: List[str] = []
+    for raw in m.stablehlo_text.splitlines():
+        line = raw.strip()
+        shapes = None
+        if "pad" in line and "dynamic_update" not in line:
+            shapes = _shapes(line)
+            if any(r in big and wd == w for r, wd, _ in shapes):
+                offenses.append(line)
+                continue
+        if "slice" in line and "dynamic" not in line:
+            shapes = _shapes(line) if shapes is None else shapes
+            rows_seen = {r for r, wd, _ in shapes if wd == w and r in big}
+            # Two distinct full-buffer row counts on one slice = the
+            # padded-to-logical slice-back copy. A K-row slice sees at
+            # most one full-buffer shape (its operand) and stays legal.
+            if len(rows_seen) > 1:
+                offenses.append(line)
+                continue
+        if "gather" in line:
+            result = line.rsplit("->", 1)
+            if len(result) == 2 and any(
+                    r in big and wd == w for r, wd, _ in _shapes(result[1])):
+                offenses.append(line)
+    return offenses
+
+
+def dtype_widening(m: Measurement, meminfo: Optional[Dict]) -> List[str]:
+    """``convert`` lines that materialize the full memory buffer in f32
+    from a narrow storage dtype. The sanctioned dequant points (PR 8)
+    convert K gathered rows or run inside the Pallas kernel — both leave
+    no full-buffer f32 convert in the lowered module."""
+    info = _meminfo(meminfo)
+    if info is None:
+        return []
+    n, buf_rows, w = info
+    big = range(n, buf_rows + 2)
+    offenses: List[str] = []
+    for raw in m.stablehlo_text.splitlines():
+        line = raw.strip()
+        if "convert" not in line:
+            continue
+        shapes = _shapes(line)
+        wide = any(r in big and wd == w and dt == "f32"
+                   for r, wd, dt in shapes)
+        narrow = any(r in big and wd == w and dt in _NARROW
+                     for r, wd, dt in shapes)
+        if wide and narrow:
+            offenses.append(line)
+    return offenses
+
+
+def full_buffer_collective(m: Measurement, meminfo: Optional[Dict],
+                           factor: float = 8.0) -> List[str]:
+    """Collectives whose average per-op payload is within ``1/factor`` of
+    the full memory buffer — dense traffic the slot-sharded path must
+    never emit (the bench_shard / mesh-parity guard)."""
+    if not meminfo or "buffer_bytes" not in meminfo:
+        return []
+    buf = float(meminfo["buffer_bytes"])
+    offenses = []
+    for kind, v in m.coll.items():
+        avg = v["bytes"] / max(v["count"], 1)
+        if avg >= buf / factor:
+            offenses.append(f"{kind}: {avg:.0f}B/op vs buffer {buf:.0f}B")
+    return offenses
+
+
+def donation(m: Measurement, meminfo: Optional[Dict]) -> List[str]:
+    """Aliasing coverage of the donated carries: the total bytes of entry
+    parameters that alias an output must cover ``donated_bytes`` (the
+    substantial — ≥ 1 KiB — leaves of the target's donated arguments, as
+    computed by the checker). On a donated step function the big carries
+    (memory buffer, KV cache) must all compile to in-place updates; a
+    dropped donation shows up here as alias entries disappearing from the
+    HLO header while the donated bytes stay put."""
+    if not meminfo or "donated_bytes" not in meminfo:
+        return []
+    donated = float(meminfo["donated_bytes"])
+    aliased = sum(m.entry_param_bytes.get(p, 0) for p in m.aliased_params)
+    if aliased < donated:
+        return [f"entry params alias only {aliased:.0f}B of outputs; the "
+                f"donated carries hold {donated:.0f}B — some donation was "
+                f"dropped (aliased params: {sorted(m.aliased_params)})"]
+    return []
+
+
+# Registry: the names contracts use in their ``lints=(...)`` tuple.
+LINTS = {
+    "scratch_copy": scratch_copy,
+    "dtype_widening": dtype_widening,
+    "full_buffer_collective": full_buffer_collective,
+    "donation": donation,
+}
+
+
+def run_lints(names, m: Measurement, meminfo: Optional[Dict]) -> Dict[str, List[str]]:
+    out: Dict[str, List[str]] = {}
+    for name in names:
+        try:
+            fn = LINTS[name]
+        except KeyError:
+            raise KeyError(f"unknown lint {name!r}; have {sorted(LINTS)}")
+        out[name] = fn(m, meminfo)
+    return out

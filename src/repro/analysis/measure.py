@@ -1,0 +1,133 @@
+"""Lower a contract's entry point and extract its static resource profile.
+
+One `Target` (a traceable function + example args, optionally a context
+manager for mesh-scoped paths and donated argnums) becomes one
+`Measurement`:
+
+  * ``flops`` / ``bytes`` / ``param_bytes`` / ``hbm`` from the
+    while-loop-aware HLO cost model (`launch/hlo_cost.analyze`) on the
+    compiled module — ``hbm = bytes - param_bytes`` is the traffic the
+    computation generates beyond re-reading its (resident, usually
+    donated) carried state;
+  * collective bytes/moved/count and the replica-group fingerprint
+    (`hlo_cost.collective_groups`);
+  * the structural dispatch profile from `kernels/introspect
+    .count_primitives` on the *traced* function (pallas_call opaque,
+    per-kernel names included);
+  * entry-parameter byte sizes and which parameters alias an output
+    buffer (the donation fingerprint).
+
+Measurements are pure descriptions — all pass/fail logic lives in
+`checker`/`lints` so a failing contract can print exactly what was seen.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.kernels.introspect import count_primitives, kernel_names
+from repro.launch import hlo_cost
+
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """A traceable entry point, as a contract's ``build(sizes)`` returns.
+
+    ``context`` (optional) is a zero-arg callable returning a context
+    manager that must be active while tracing/lowering — the slot-sharded
+    paths route through `mem_shard.memory_mesh`, whose thread-local the
+    layout detection consults at trace time. ``meminfo`` carries the
+    memory-buffer geometry the lint passes key on (``num_slots``,
+    ``buf_rows``, ``word_size``, and optionally ``mem_dtype``,
+    ``buffer_bytes``); contracts without a memory buffer leave it None.
+    """
+    fn: Callable
+    args: tuple
+    donate_argnums: Tuple[int, ...] = ()
+    context: Optional[Callable] = None
+    meminfo: Optional[Dict[str, object]] = None
+
+
+@dataclasses.dataclass
+class Measurement:
+    flops: float
+    bytes: float
+    param_bytes: float
+    hbm: float
+    coll: Dict[str, Dict[str, float]]
+    coll_bytes: float
+    coll_moved: float
+    coll_count: float
+    group_sizes: List[Optional[int]]
+    dispatches: Dict[str, int]
+    kernels: Dict[str, int]
+    aliased_params: List[int]
+    entry_param_bytes: Dict[int, int]
+    hlo_text: str = dataclasses.field(repr=False, default="")
+    # Lowered (pre-optimization) StableHLO: the scratch-copy and
+    # dtype-widening lints pattern-match MLIR tensor types here, where op
+    # structure still mirrors the traced program one-to-one.
+    stablehlo_text: str = dataclasses.field(repr=False, default="")
+
+    def resource(self, name: str) -> float:
+        """The scalar the growth checker sweeps, by resource name."""
+        if name == "flops":
+            return self.flops
+        if name == "hbm":
+            return self.hbm
+        if name == "collective_bytes":
+            return self.coll_bytes
+        raise KeyError(f"unknown resource {name!r}")
+
+
+def from_hlo(hlo_text: str, stablehlo_text: str = "") -> Measurement:
+    """Profile an already-compiled HLO module.
+
+    The cost/collective/alias half of `measure` without tracing or
+    compiling anything — for guard sites that lower their own modules
+    (benchmarks/bench_shard.py, the mesh parity tests) and want the same
+    Measurement the lint passes and growth fits consume. The dispatch /
+    kernel profile needs the traced function and stays empty here.
+    """
+    cost = hlo_cost.analyze(hlo_text)
+    groups = hlo_cost.collective_groups(hlo_text)
+    return Measurement(
+        flops=cost.flops,
+        bytes=cost.bytes,
+        param_bytes=cost.param_bytes,
+        hbm=cost.bytes - cost.param_bytes,
+        coll=cost.coll,
+        coll_bytes=sum(v["bytes"] for v in cost.coll.values()),
+        coll_moved=cost.coll_moved,
+        coll_count=sum(v["count"] for v in cost.coll.values()),
+        group_sizes=sorted(
+            {g["group_size"] for g in groups},
+            key=lambda s: (s is None, s if s is not None else 0)),
+        dispatches={},
+        kernels={},
+        aliased_params=hlo_cost.input_output_aliases(hlo_text),
+        entry_param_bytes=hlo_cost.entry_parameter_bytes(hlo_text),
+        hlo_text=hlo_text,
+        stablehlo_text=stablehlo_text,
+    )
+
+
+def measure(target: Target) -> Measurement:
+    """Trace, lower, compile, and profile one target."""
+    cm = target.context() if target.context is not None \
+        else contextlib.nullcontext()
+    with cm:
+        counts = count_primitives(target.fn, *target.args)
+        lowered = jax.jit(
+            target.fn, donate_argnums=target.donate_argnums or ()
+        ).lower(*target.args)
+        stablehlo = lowered.as_text()
+        hlo = lowered.compile().as_text()
+    m = from_hlo(hlo, stablehlo)
+    return dataclasses.replace(
+        m,
+        dispatches={k: int(v) for k, v in counts.items() if ":" not in k},
+        kernels={k: int(v) for k, v in kernel_names(counts).items()})

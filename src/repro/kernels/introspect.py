@@ -6,8 +6,11 @@ kernel dispatch") is asserted *structurally*: trace the function with
 ``backend="pallas"`` — and count primitives. `pallas_call` is opaque (its
 inner jaxpr is the kernel body, not extra dispatches), every other
 primitive's sub-jaxprs (scan/while/cond/pjit bodies) are walked
-recursively. Used by `tests/test_fused_read.py` (fused = 1 pallas_call +
-0 sort/top_k, with the composed path as positive control) and by
+recursively. Each `pallas_call` is additionally counted under a
+``"pallas_call:<kernel name>"`` key so contracts can assert *which*
+kernel dispatched, not just how many (see `repro.analysis`). Used by
+`tests/test_fused_read.py` (fused = 1 pallas_call + 0 sort/top_k, with
+the composed path as positive control), `repro.analysis.measure`, and
 `benchmarks/bench_kernels.py`'s decode-step rows.
 """
 from __future__ import annotations
@@ -20,18 +23,54 @@ import jax
 def count_primitives(fn, *args, **kwargs) -> collections.Counter:
     """Trace ``fn(*args, **kwargs)`` and count every primitive equation,
     recursing into sub-jaxprs (except inside `pallas_call`: one kernel is
-    one dispatch, whatever its body stages)."""
-    jaxpr = jax.make_jaxpr(fn, **{})(*args, **kwargs) \
-        if not kwargs else jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    one dispatch, whatever its body stages).
+
+    Keyword arguments are passed straight through to the traced call —
+    they are *call* kwargs, not `make_jaxpr` options. Each pallas_call
+    also increments a ``"pallas_call:<name>"`` entry naming the kernel.
+    """
+    if kwargs:
+        jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    else:
+        jaxpr = jax.make_jaxpr(fn)(*args)
     counts: collections.Counter = collections.Counter()
     _walk(jaxpr.jaxpr, counts)
     return counts
+
+
+def kernel_names(counts: collections.Counter) -> collections.Counter:
+    """The per-kernel slice of a `count_primitives` result: a Counter
+    mapping kernel name -> dispatch count, dropping the ``pallas_call:``
+    prefix."""
+    out: collections.Counter = collections.Counter()
+    for key, n in counts.items():
+        if key.startswith("pallas_call:"):
+            out[key.split(":", 1)[1]] += n
+    return out
+
+
+def _pallas_kernel_name(params) -> str:
+    """Best-effort kernel name from a pallas_call eqn's params.
+
+    jax 0.4.x carries a ``name_and_src_info`` object with a ``.name``
+    attribute; older/newer layouts may expose a plain ``name`` param.
+    Returns ``"<unknown>"`` when neither is present rather than failing
+    the count.
+    """
+    info = params.get("name_and_src_info")
+    if info is not None and getattr(info, "name", None):
+        return str(info.name)
+    name = params.get("name")
+    if isinstance(name, str) and name:
+        return name
+    return "<unknown>"
 
 
 def _walk(jaxpr, counts) -> None:
     for eqn in jaxpr.eqns:
         counts[eqn.primitive.name] += 1
         if eqn.primitive.name == "pallas_call":
+            counts["pallas_call:" + _pallas_kernel_name(eqn.params)] += 1
             continue
         for sub in _sub_jaxprs(eqn.params):
             _walk(sub, counts)

@@ -16,16 +16,28 @@ the optimized HLO text with loop multipliers:
   * ``fusion``/``call``/``conditional`` recurse with multiplier 1
     (conditional takes the max branch);
   * FLOPs: 2 · |result| · |contracted dims| for every ``dot``/``convolution``;
-  * HBM bytes: Σ result sizes + parameter reads of non-fused computations
-    (fusion internals stay in registers) — a read+write traffic proxy;
+  * HBM bytes: Σ result sizes + ENTRY parameter reads (fusion internals
+    stay in registers; ``while``/``conditional`` call-site results are
+    skipped — their bodies are already counted ×trips, so the call site
+    would double-count the carried state) — a read+write traffic proxy.
+    ``CompCost.param_bytes`` breaks out the ENTRY-parameter share so
+    callers can separate resident carried state from generated traffic;
   * collectives: per-type data-moved model (see ``_coll_moved``) with
     participants parsed from ``replica_groups``.
+
+Module-level helpers beyond `analyze`: `parse_backend_config` /
+`trip_count_from_config` (structural backend_config JSON, both inline and
+quoted-string forms), `input_output_aliases` / `entry_parameter_bytes`
+(the donation contract's raw material), and `collective_groups` (the mesh
+replica-group fingerprint). `repro.analysis` builds its contract checker
+on these.
 
 Validated against unrolled-vs-scanned references in tests/test_hlo_cost.py.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import re
 from typing import Dict, List, Optional, Tuple
 
@@ -44,12 +56,80 @@ _CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _GROUPS = re.compile(r"replica_groups=\{\{([0-9,]+)\}|"
                      r"replica_groups=\[(\d+),(\d+)\]<=")
 _CONSTANT = re.compile(r"constant\((\d+)\)")
-_TRIP_CFG = re.compile(r"known_trip_count....n...(\d+)")
+_BACKEND_CFG = re.compile(r"backend_config=")
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
+# Ops whose "result" is not fresh traffic: parameters/constants are counted
+# at the entry (argument loads), tuple plumbing moves nothing, and `while` /
+# `conditional` results are materialized by their body/branch ops — which the
+# recursion already accounts (×trip count / max branch) — so counting the
+# call site's result tuple would double-count the whole carry (for a scan
+# carrying a (B, N, W) memory buffer, an O(N·W)-per-module phantom).
 _NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
-               "bitcast", "after-all", "iota"}
+               "bitcast", "after-all", "iota", "while", "conditional"}
+
+
+def _balanced_braces(text: str, start: int) -> Optional[str]:
+    """The substring from ``text[start]`` (which must be ``{``) through its
+    matching close brace, or None when unbalanced."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[start:i + 1]
+    return None
+
+
+def parse_backend_config(rest: str) -> Optional[dict]:
+    """Structurally parse an op's ``backend_config=`` attribute.
+
+    XLA prints the config either as inline JSON
+    (``backend_config={"known_trip_count":{"n":"10"}}``) or as a quoted,
+    escaped JSON string (``backend_config="{\\"known_trip_count\\"..."``).
+    Returns the decoded dict, or None when absent/unparseable — callers
+    fall back to their own heuristics."""
+    m = _BACKEND_CFG.search(rest)
+    if not m:
+        return None
+    at = m.end()
+    if at >= len(rest):
+        return None
+    if rest[at] == "{":
+        blob = _balanced_braces(rest, at)
+    elif rest[at] == '"':
+        # Quoted form: decode the string literal first.
+        try:
+            blob, _ = json.JSONDecoder().raw_decode(rest, at)
+        except ValueError:
+            return None
+    else:
+        return None
+    if blob is None:
+        return None
+    try:
+        cfg = json.loads(blob)
+    except ValueError:
+        return None
+    return cfg if isinstance(cfg, dict) else None
+
+
+def trip_count_from_config(rest: str) -> Optional[int]:
+    """known_trip_count.n from a ``while`` op's backend_config, structurally
+    (the predecessor was a bare-dots regex that matched any punctuation)."""
+    cfg = parse_backend_config(rest)
+    if not isinstance(cfg, dict):
+        return None
+    ktc = cfg.get("known_trip_count")
+    if not isinstance(ktc, dict):
+        return None
+    try:
+        return int(ktc.get("n"))
+    except (TypeError, ValueError):
+        return None
 
 
 def _first_shape(type_str: str) -> Tuple[Optional[str], int]:
@@ -94,6 +174,12 @@ class OpInfo:
 class CompCost:
     flops: float = 0.0
     bytes: float = 0.0
+    # Of `bytes`, the share that is ENTRY-parameter loads. A jitted step
+    # function's carried state (memory, caches) arrives as parameters, so
+    # `bytes - param_bytes` is the traffic the computation itself generates
+    # — the quantity whose growth the analysis contracts bound (a donated
+    # carry is resident, not re-streamed per step).
+    param_bytes: float = 0.0
     coll: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
     coll_moved: float = 0.0
 
@@ -110,7 +196,10 @@ def _coll_moved(kind: str, nbytes: float, n: int) -> float:
     return float(nbytes)      # collective-permute
 
 
-_FIRST_OPERAND = re.compile(r"^\s*%?([\w\.\-]+)")
+# First operand NAME in an op's operand list. Operands print with their
+# type in front ("dot(f32[128,128]{1,0} %Arg_0.1, ...)"), so anchor on the
+# % sigil — a bare ^\s* match would capture the dtype token instead.
+_FIRST_OPERAND = re.compile(r"%([\w\.\-]+)")
 
 
 class HloCostModel:
@@ -152,9 +241,9 @@ class HloCostModel:
     def _trip_count(self, while_rest: str, cond_name: Optional[str]) -> int:
         """Trip count from backend_config known_trip_count, falling back to
         the max integer constant in the loop condition (scan pattern)."""
-        m = _TRIP_CFG.search(while_rest)
-        if m:
-            return int(m.group(1))
+        n = trip_count_from_config(while_rest)
+        if n is not None:
+            return n
         best = 1
         for op in self.comps.get(cond_name or "", ()):
             if op.opcode == "constant":
@@ -232,6 +321,7 @@ class HloCostModel:
                 total.bytes += _all_shape_bytes(op.type_str)
             if is_entry and oc == "parameter":
                 total.bytes += _all_shape_bytes(op.type_str)
+                total.param_bytes += _all_shape_bytes(op.type_str)
 
             if oc == "dot":
                 dims = _shape_dims(op.type_str)
@@ -242,7 +332,7 @@ class HloCostModel:
                 contracted = 1
                 if cm and cm.group(1):
                     # resolve the lhs operand's shape via the symbol table
-                    fo = _FIRST_OPERAND.match(op.rest)
+                    fo = _FIRST_OPERAND.search(op.rest.split(")", 1)[0])
                     lhs_type = self.symbols.get(comp, {}).get(
                         fo.group(1), "") if fo else ""
                     ldims = _shape_dims(lhs_type)
@@ -267,7 +357,7 @@ class HloCostModel:
                 # roofline target — reduces bf16 natively, so count the
                 # pre-promotion width when the operand is such a convert.
                 if base == "all-reduce" and dtype == "f32":
-                    fo = _FIRST_OPERAND.match(op.rest)
+                    fo = _FIRST_OPERAND.search(op.rest.split(")", 1)[0])
                     prod = fo and self._producer(comp, fo.group(1))
                     if prod is not None and "convert" in prod.name:
                         nbytes //= 2
@@ -321,6 +411,7 @@ class HloCostModel:
 def _acc(total: CompCost, sub: CompCost, mult: float):
     total.flops += sub.flops * mult
     total.bytes += sub.bytes * mult
+    total.param_bytes += sub.param_bytes * mult
     total.coll_moved += sub.coll_moved * mult
     for k, v in sub.coll.items():
         s = total.coll.setdefault(k, {"count": 0, "bytes": 0.0, "moved": 0.0})
@@ -331,6 +422,40 @@ def _acc(total: CompCost, sub: CompCost, mult: float):
 
 def analyze(hlo_text: str) -> CompCost:
     return HloCostModel(hlo_text).cost()
+
+
+_ALIAS_ATTR = re.compile(r"input_output_alias=")
+_ALIAS_ENTRY = re.compile(r"\{[0-9,\s]*\}:\s*\((\d+)")
+_PARAM_NUM = re.compile(r"^\s*(\d+)\)")
+
+
+def input_output_aliases(hlo_text: str) -> List[int]:
+    """Entry-parameter numbers that alias an output buffer, parsed from the
+    module header's ``input_output_alias={ {out}: (param, {}, kind), ... }``
+    attribute. Empty when nothing is donated/aliased — the signal the
+    donation contract checks (a dropped donation compiles to a copy and the
+    alias entry disappears)."""
+    header = hlo_text.split("\n", 1)[0]
+    m = _ALIAS_ATTR.search(header)
+    if not m:
+        return []
+    block = _balanced_braces(header, header.find("{", m.end()))
+    if block is None:
+        return []
+    return [int(p) for p in _ALIAS_ENTRY.findall(block)]
+
+
+def entry_parameter_bytes(hlo_text: str) -> Dict[int, int]:
+    """Byte size of every ENTRY parameter, keyed by parameter number."""
+    model = HloCostModel(hlo_text)
+    out: Dict[int, int] = {}
+    for op in model.comps.get(model.entry or "", ()):
+        if op.opcode != "parameter":
+            continue
+        pm = _PARAM_NUM.match(op.rest)
+        if pm:
+            out[int(pm.group(1))] = _all_shape_bytes(op.type_str)
+    return out
 
 
 def collective_groups(hlo_text: str) -> List[dict]:

@@ -14,8 +14,7 @@ import numpy as np
 import pytest
 
 from repro.core import addressing as addr
-from repro.kernels import ops, ref
-from repro.kernels.introspect import count_primitives
+from repro.kernels import ops
 
 BACKENDS = ["ref", "pallas-interpret"]
 
@@ -184,22 +183,27 @@ def test_bf16_memory_reads_close_to_f32(backend):
 
 
 # ------------------------- structural dispatch guard ----------------------
+# The dispatch fingerprints (one pallas_call, zero top_k/sort, the
+# `_sweep_kernel` name) are declared on contracts in repro.analysis.paths;
+# these tests run them through the shared checker so the guard and the
+# sweep share one source of truth. Each pairs with a ref/composed positive
+# control that passes only by tripping.
+
+def _run(name):
+    from repro.analysis import all_contracts, run_contract
+    report = run_contract(all_contracts()[name], quick=True)
+    detail = {b: r.get("failures", []) for b, r in report["backends"].items()}
+    return report, detail
+
 
 def test_exact_read_is_one_kernel_dispatch():
     """The acceptance guard: on the Pallas backend the exact read traces to
-    exactly one pallas_call and NO top_k/sort; the composed/ref path (the
-    positive control) contains a top_k and no pallas_call."""
-    q, mem, beta, k = *_case(jax.random.PRNGKey(10)), 4
-
-    fused = count_primitives(
-        lambda *a: ops.fused_read(*a, k, backend="pallas-interpret"),
-        q, mem, beta)
-    assert fused["pallas_call"] == 1, dict(fused)
-    assert fused["top_k"] == 0 and fused["sort"] == 0, dict(fused)
-
-    composed = count_primitives(lambda *a: _composed(*a, k), q, mem, beta)
-    assert composed["pallas_call"] == 0
-    assert composed["top_k"] >= 1, dict(composed)
+    exactly one pallas_call (the `_sweep_kernel`) and NO top_k/sort; the
+    composed/ref path (the positive control) contains a top_k."""
+    report, detail = _run("sam_read_exact_kernel")
+    assert report["ok"], detail
+    ctrl, cdetail = _run("composed_read_control")
+    assert ctrl["ok"], ("composed-read control never tripped", cdetail)
 
 
 def test_decode_step_read_has_no_topk_on_pallas():
@@ -207,27 +211,10 @@ def test_decode_step_read_has_no_topk_on_pallas():
     contains no top_k at all — the read is the fused kernel. (`sort` still
     appears: the LRA top-n's host-side tile merge, write path, is a
     lexsort.) The ref backend is the positive control."""
-    import dataclasses
-    from repro.configs import get_config, reduced
-    from repro.models import lm
-
-    def counts(backend):
-        cfg = reduced(get_config("h2o_danube_3_4b_sam"))
-        cfg = dataclasses.replace(cfg, memory=dataclasses.replace(
-            cfg.memory, backend=backend))
-        params = lm.init_params(jax.random.PRNGKey(0), cfg)
-        cache = lm.init_cache(cfg, 2, 16, per_lane_pos=True)
-        mem = lm.init_memory_states(cfg, 2, per_lane_step=True)
-        tok = jnp.ones((2, 1), jnp.int32)
-        return count_primitives(
-            lambda p, c, m, t: lm.decode_step(p, cfg, c, t, mem_states=m),
-            params, cache, mem, tok)
-
-    pal = counts("pallas-interpret")
-    assert pal["top_k"] == 0, dict(pal)
-    assert pal["pallas_call"] >= 1
-    ctrl = counts("ref")
-    assert ctrl["top_k"] >= 1, dict(ctrl)
+    report, detail = _run("lm_decode_no_topk")
+    assert report["ok"], detail
+    ctrl, cdetail = _run("lm_decode_ref_control")
+    assert ctrl["ok"], ("ref decode control never tripped", cdetail)
 
 
 # ------------------------------- mesh lane --------------------------------

@@ -8,9 +8,9 @@
 * the scratch row is a fixed point of every mutating op;
 * micro-regression guard: the compiled `sparse_write_update` on the
   scratch-row layout contains no O(N·W) pad or slice of the memory — the
-  exact copy the layout was introduced to remove (asserted on the lowered
-  HLO text, with the legacy layout as the positive control that the
-  pattern detector works).
+  exact copy the layout was introduced to remove (the
+  `repro.analysis.lints.scratch_copy` pass over the lowered module, with
+  the legacy layout as the positive control that the detector works).
 """
 import jax
 import jax.numpy as jnp
@@ -147,8 +147,15 @@ def test_ops_scratch_fixed_point_under_duplicates(backend):
 
 
 # ----------------------- HLO micro-regression guard ------------------------
+# The pattern detector itself lives in repro.analysis.lints.scratch_copy
+# (the generalized, dtype-agnostic successor of the regex that used to sit
+# here); this file keeps the guard wired to the exact write entry point.
+# The same claim is swept at multiple N by the `fused_write` /
+# `fused_write_legacy` contracts in repro.analysis.paths.
 
-def _lowered_write_hlo(scratch: bool, backend: str, n: int = 4096):
+def _write_offenses(scratch: bool, backend: str, n: int = 4096):
+    from repro.analysis import run_lints
+    from repro.analysis.measure import Target, measure
     B, W, H, K = 1, 32, 2, 2
     J = H * (K + 1)
     rows = n + 1 if scratch else n
@@ -165,32 +172,22 @@ def _lowered_write_hlo(scratch: bool, backend: str, n: int = 4096):
                                        backend=backend,
                                        scratch_row=n if scratch else None)
 
-    return jax.jit(f).lower(mem, last, ww, a).as_text(), n
-
-
-def _memory_copy_lines(text: str, n: int, w: int = 32):
-    """Lines that pad the (B, N, W) memory to N+1 rows or slice it back —
-    the O(N·W) copies the scratch-row layout removes."""
-    big, small = f"{n + 1}x{w}xf32", f"{n}x{w}xf32"
-    bad = []
-    for line in text.splitlines():
-        if "pad" in line and big in line:
-            bad.append(line.strip())
-        elif "slice" in line and big in line and small in line:
-            bad.append(line.strip())
-    return bad
+    m = measure(Target(fn=f, args=(mem, last, ww, a),
+                       donate_argnums=(0, 1)))
+    meminfo = {"num_slots": n, "buf_rows": rows, "word_size": W}
+    return run_lints(("scratch_copy",), m, meminfo)["scratch_copy"]
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_compiled_write_has_no_full_memory_copy(backend):
     """Acceptance guard: the compiled `sparse_write_update` on the
-    scratch-row layout contains no O(N·W) pad/slice of the memory."""
-    text, n = _lowered_write_hlo(scratch=True, backend=backend)
-    assert _memory_copy_lines(text, n) == []
+    scratch-row layout contains no O(N·W) pad/slice/gather of the
+    memory."""
+    assert _write_offenses(scratch=True, backend=backend) == []
 
 
 def test_legacy_write_pad_is_detected():
     """Positive control: the legacy pallas path *does* pad/slice the memory,
-    so the pattern detector above is actually capable of failing."""
-    text, n = _lowered_write_hlo(scratch=False, backend="pallas-interpret")
-    assert _memory_copy_lines(text, n) != []
+    so the lint is actually capable of failing."""
+    assert _write_offenses(scratch=False,
+                           backend="pallas-interpret") != []
